@@ -1,0 +1,70 @@
+"""Shared benchmark plumbing: CSV emit + STREAM calibration.
+
+Every fig*.py module exposes ``run(full: bool) -> list[str]`` returning CSV
+rows ``figure,name,value[,extra...]``; ``run.py`` drives them all.
+
+The paper calibrates its model against measured STREAM Triad bandwidth per
+system (Sec. 3).  ``calibrate()`` does the same for this host so that
+measured-vs-predicted comparisons use the *measured* memory bandwidth, not a
+nominal one.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.utils.hw import ChipSpec, TPU_V5E
+
+_CAL: dict = {}
+
+
+def stream_triad_bandwidth(n: int = 1 << 24, repeats: int = 5) -> float:
+    """Measured a = b + s*c bandwidth in bytes/s (4 streams incl. write)."""
+    b = jnp.arange(n, dtype=jnp.float32)
+    c = jnp.ones((n,), jnp.float32)
+
+    @jax.jit
+    def triad(b, c):
+        return b + 1.5 * c
+
+    jax.block_until_ready(triad(b, c))
+    best = np.inf
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(triad(b, c))
+        best = min(best, time.perf_counter() - t0)
+    return 3 * n * 4 / best  # read b, read c, write a
+
+
+def host_chip() -> ChipSpec:
+    """A ChipSpec for THIS host, with measured STREAM bandwidth (cached)."""
+    if "chip" not in _CAL:
+        bw = stream_triad_bandwidth()
+        _CAL["chip"] = ChipSpec(
+            name="host_cpu", peak_flops_bf16=1e12, peak_flops_fp32=5e11,
+            hbm_bytes_per_s=bw, hbm_bytes=8 << 30,
+            ici_bytes_per_s_per_link=0.0, ici_links=0, vmem_bytes=32 << 20)
+    return _CAL["chip"]
+
+
+def timeit(fn, *args, repeats: int = 5, inner: int = 2) -> float:
+    jfn = jax.jit(fn) if not hasattr(fn, "lower") else fn
+    jax.block_until_ready(jfn(*args))
+    best = np.inf
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for _ in range(inner):
+            out = jfn(*args)
+        jax.block_until_ready(out)
+        best = min(best, (time.perf_counter() - t0) / inner)
+    return best
+
+
+def row(fig: str, name: str, value, *extra) -> str:
+    parts = [fig, name, f"{value:.6g}" if isinstance(value, float) else str(value)]
+    parts += [f"{e:.6g}" if isinstance(e, float) else str(e) for e in extra]
+    return ",".join(parts)

@@ -1,0 +1,38 @@
+"""Fig 2 / Table 1: basic sparse ADD/SCP ops at the paper's three strides
+(dense k=1, one-entry-per-line k=8, one-entry-per-page k=530).
+
+Output: measured host cycles/element (at measured STREAM BW) + the v5e model
+prediction (cycles @1 GHz) for each op, reproducing the paper's y-axis.
+"""
+from __future__ import annotations
+
+from repro.core.microbench import run_table1
+from repro.core.perfmodel import TPU_FP32, waste_from_stride
+from repro.utils.hw import TPU_V5E
+
+from .common import host_chip, row
+
+
+def run(full: bool = False):
+    rows = []
+    n = 1 << 22 if full else 1 << 19
+    chip = host_chip()
+    for k in (1, 8, 530):
+        if k == 530 and not full:
+            k_eff = 64  # page-stride needs huge buffers; scale down for smoke
+        else:
+            k_eff = k
+        results = run_table1(n=max(1 << 16, n // max(1, k_eff)), k=k_eff,
+                             repeats=3)
+        for r in results:
+            # v5e model: bytes/elem including granule waste on the gathered side
+            vb = 4
+            if r.name.startswith(("IS", "IR", "CS")):
+                waste = waste_from_stride(k_eff, TPU_FP32.line_elems)
+                model_bytes = vb + 4 + vb * waste if r.name[0] == "I" else vb + vb * waste
+            else:
+                model_bytes = 2 * vb if "SCP" in r.name else vb
+            t_model = model_bytes / TPU_V5E.hbm_bytes_per_s
+            rows.append(row("fig2", r.name, r.ns_per_element,
+                            r.gbytes_per_s, t_model * 1e9))
+    return rows

@@ -1,0 +1,16 @@
+"""Fig 3a: ISSCP (constant stride) vs IRSCP (random stride) over a stride sweep."""
+from __future__ import annotations
+
+from repro.core.microbench import run_stride_sweep
+
+from .common import row
+
+
+def run(full: bool = False):
+    strides = [1, 2, 4, 8, 16, 32, 64, 128] if full else [1, 4, 16, 64]
+    n = 1 << 20 if full else 1 << 16
+    rows = []
+    for kind in ("is", "ir"):
+        for r in run_stride_sweep(strides, n=n, kind=kind):
+            rows.append(row("fig3a", r.name, r.ns_per_element, r.gbytes_per_s))
+    return rows

@@ -1,0 +1,42 @@
+"""Fig 3b adaptation: the streamed-vs-gathered cost split.
+
+No prefetch knob exists on TPU; the transferable question is "how much of
+the SpMV inner loop is the irregular gather vs. the streamed operands".  We
+time the two Pallas-shaped kernels (via their XLA reference forms — wall
+time in interpret mode measures the Python interpreter, not the machine)
+and report per-element costs + the model's traffic split.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref as R
+from repro.kernels.gather_bench import traffic_model
+
+from .common import row, timeit
+
+
+def run(full: bool = False):
+    n = 1 << 22 if full else 1 << 18
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    b = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    c = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    rows = []
+    t_stream = timeit(R.stream_triad_ref, a, b, c, repeats=3)
+    rows.append(row("fig3b", "stream_triad_ns_elem", t_stream / n * 1e9))
+    for pattern, mk in [
+        ("unit", lambda: np.arange(n, dtype=np.int32)),
+        ("stride8", lambda: (np.arange(n, dtype=np.int64) * 8 % n).astype(np.int32)),
+        ("random", lambda: rng.integers(0, n, n).astype(np.int32)),
+    ]:
+        idx = jnp.asarray(mk())
+        t = timeit(R.gather_scp_ref, a, b, idx, repeats=3)
+        rows.append(row("fig3b", f"gather_{pattern}_ns_elem", t / n * 1e9,
+                        t / max(t_stream, 1e-12)))
+    tm = traffic_model(n, 4)
+    rows.append(row("fig3b", "model_stream_bytes", float(tm["stream_triad"])))
+    rows.append(row("fig3b", "model_gather_bytes", float(tm["gather_scp"])))
+    return rows

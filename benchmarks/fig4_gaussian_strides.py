@@ -1,0 +1,23 @@
+"""Fig 4: IRSCP with Gaussian-distributed strides over a (mean, variance) grid.
+
+The paper's point: the Fig-3a "bulge" is an artifact of the Bernoulli stride
+distribution's variance growing as k(k-1); fixing variance independently
+shows smooth degradation with mean stride and near-insensitivity to jitter.
+"""
+from __future__ import annotations
+
+from repro.core.microbench import ind_gaussian, run_gaussian_grid, stride_stats
+
+from .common import row
+
+
+def run(full: bool = False):
+    means = [2, 8, 32, 128] if full else [2, 16]
+    variances = [0.0, 4.0, 100.0, 2500.0] if full else [0.0, 100.0]
+    n = 1 << 18 if full else 1 << 14
+    rows = []
+    for m, v, r in run_gaussian_grid(means, variances, n=n):
+        st = stride_stats(ind_gaussian(n, m, v, int(n * max(1, m)), 0))
+        rows.append(row("fig4", f"mean{m}_var{v}", r.ns_per_element,
+                        r.gbytes_per_s, st["frac_backward"]))
+    return rows

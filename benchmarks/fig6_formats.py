@@ -1,0 +1,80 @@
+"""Fig 6a/6b: per-format stride distributions + serial SpMV performance.
+
+6a: the distribution of strides in the *storage-order* access to invec per
+format (CRS reflects the diagonal structure; JDS piles weight on small
+strides but triples backward jumps; SOJDS sorting barely moves it — the
+paper's findings, checked quantitatively).
+
+6b: serial SpMV wall time per format on the HH surrogate (host measurement
+at measured STREAM BW + v5e roofline prediction per format).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import formats as F
+from repro.core import perfmodel as PM
+from repro.core import spmv as S
+from repro.core.matrices import holstein_hubbard_surrogate
+from repro.utils.hw import TPU_V5E
+
+from .common import host_chip, row, timeit
+import jax.numpy as jnp
+
+
+def storage_order_strides(obj) -> np.ndarray:
+    """Column-index sequence in the order the kernel touches invec."""
+    if isinstance(obj, F.CSR):
+        ci = np.asarray(obj.col_idx)
+    elif isinstance(obj, F.JDS):
+        ci = np.asarray(obj.col_idx)
+    elif isinstance(obj, F.SELL):
+        ci = np.asarray(obj.col_idx)
+    elif isinstance(obj, F.ELL):
+        ci = np.asarray(obj.col_idx).T.ravel()  # column-major jagged order
+    else:
+        raise TypeError(type(obj))
+    return np.diff(ci.astype(np.int64))
+
+
+def run(full: bool = False):
+    n = 200_000 if full else 20_000
+    m = holstein_hubbard_surrogate(n, seed=0)
+    rows = []
+    value_bytes = 4
+    for name, obj in [
+        ("csr", m),
+        ("jds", F.JDS.from_csr(m)),
+        ("sell_C8_s64", F.SELL.from_csr(m, C=8, sigma=64)),
+        ("sell_sorted", F.SELL.from_csr(m, C=8, sigma=64, sort_cols=True)),
+    ]:
+        d = storage_order_strides(obj)
+        frac_small = float((np.abs(d) * value_bytes <= 64).mean())
+        frac_back = float((d < 0).mean())
+        rows.append(row("fig6a", name, frac_small, frac_back))
+
+    # 6b: serial SpMV performance per format
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(n).astype(np.float32))
+    st = F.matrix_stats(m)
+    lens = m.row_lengths()
+    chip = host_chip()
+    for name, obj, balance in [
+        ("csr", m, PM.balance_csr(PM.TPU_FP32, st["nnz_per_row_mean"])),
+        ("ell", F.ELL.from_csr(m), PM.balance_ell(PM.TPU_FP32, PM.ell_pad_ratio(lens), st["nnz_per_row_mean"])),
+        ("jds", F.JDS.from_csr(m), PM.balance_jds(PM.TPU_FP32)),
+        ("sell", F.SELL.from_csr(m, C=8, sigma=1024),
+         PM.balance_sell(PM.TPU_FP32, PM.sell_pad_ratio(lens, 8, 1024), st["nnz_per_row_mean"])),
+        ("hybrid", F.split_dia(m), None),
+    ]:
+        f = S.make_spmv(obj)
+        t = timeit(f, x, repeats=3)
+        gflops = 2 * m.nnz / t / 1e9
+        if balance is not None:
+            pred = PM.predict(name, balance, m.nnz, chip=TPU_V5E)
+            rows.append(row("fig6b", name, gflops, t * 1e3, pred.gflops))
+        else:
+            am = PM.TPU_FP32
+            bytes_h = PM.spmv_streamed_bytes(obj, am)
+            pred_t = bytes_h / TPU_V5E.hbm_bytes_per_s
+            rows.append(row("fig6b", name, gflops, t * 1e3, 2 * m.nnz / pred_t / 1e9))
+    return rows

@@ -1,0 +1,40 @@
+"""Fig 7: block-size dependence of blocked-format SpMV.
+
+The paper sweeps NBJDS/RBJDS/SOJDS block sizes and finds a broad optimum;
+the SELL analogue sweeps the sorting window sigma (and chunk height C):
+larger sigma reduces padding (JDS-like), smaller sigma preserves locality
+(RBJDS-like).  We report the padding ratio (the model's streamed-bytes
+driver) and measured host GFLOP/s.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import formats as F
+from repro.core import perfmodel as PM
+from repro.core import spmv as S
+from repro.core.matrices import holstein_hubbard_surrogate
+
+from .common import row, timeit
+
+
+def run(full: bool = False):
+    n = 100_000 if full else 10_000
+    m = holstein_hubbard_surrogate(n, seed=0)
+    lens = m.row_lengths()
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(n).astype(np.float32))
+    rows = []
+    sigmas = [8, 32, 128, 1024, 8192, n] if full else [8, 128, n]
+    for C in ([4, 8, 16, 32] if full else [8, 16]):
+        for sigma in sigmas:
+            pad = PM.sell_pad_ratio(lens, C, sigma)
+            obj = F.SELL.from_csr(m, C=C, sigma=sigma)
+            t = timeit(S.make_spmv(obj), x, repeats=3)
+            rows.append(row("fig7", f"sell_C{C}_sigma{sigma}", 2 * m.nnz / t / 1e9,
+                            pad, t * 1e3))
+    # unblocked baselines, as in the paper's figure
+    for name, obj in [("csr", m), ("jds", F.JDS.from_csr(m))]:
+        t = timeit(S.make_spmv(obj), x, repeats=3)
+        rows.append(row("fig7", name, 2 * m.nnz / t / 1e9, 1.0, t * 1e3))
+    return rows

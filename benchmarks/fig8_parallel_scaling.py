@@ -1,0 +1,73 @@
+"""Fig 8: parallel SpMV scaling vs device count (shard_map row-block SpMV).
+
+The paper scales OpenMP threads across sockets; the TPU analogue scales
+chips.  We run the allgather and ring variants on 1..8 forced host devices
+(subprocess — device count must be fixed before jax init) and report wall
+time + the model's collective-traffic estimate per variant.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import tempfile
+
+from .common import row
+
+_WORKER = r"""
+import os, sys, time, json
+os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={sys.argv[1]}"
+import jax, jax.numpy as jnp, numpy as np
+from repro.core.matrices import holstein_hubbard_surrogate
+from repro.core import distributed as D
+n = int(sys.argv[2])
+m = holstein_hubbard_surrogate(n, seed=0)
+parts = len(jax.devices())
+mesh = D.make_mesh_1d()
+x = jax.random.normal(jax.random.PRNGKey(0), (n,), jnp.float32)
+out = {}
+for name, build, make in (("allgather", D.build_row_blocks, D.make_allgather_spmv),
+                          ("ring", D.build_ring_blocks, D.make_ring_spmv)):
+    blocks = build(m, parts)
+    run = jax.jit(make(blocks, mesh))
+    jax.block_until_ready(run(x))
+    best = 1e9
+    for _ in range(5):
+        t0 = time.perf_counter(); jax.block_until_ready(run(x))
+        best = min(best, time.perf_counter() - t0)
+    tr = (D.allgather_traffic_bytes(blocks) if name == "allgather"
+          else D.ring_traffic_bytes(blocks))
+    out[name] = {"t": best, "collective": tr["collective"], "x_copy": tr["per_chip_x"]}
+print(json.dumps(out))
+"""
+
+
+def run(full: bool = False):
+    import json
+    n = 100_000 if full else 20_000
+    devs = [1, 2, 4, 8] if full else [1, 4]
+    rows = []
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    with tempfile.NamedTemporaryFile("w", suffix=".py", delete=False) as f:
+        f.write(_WORKER)
+        worker = f.name
+    try:
+        base = {}
+        for d in devs:
+            env = dict(os.environ, PYTHONPATH=os.path.join(repo, "src"))
+            env.pop("XLA_FLAGS", None)
+            out = subprocess.run([sys.executable, worker, str(d), str(n)],
+                                 capture_output=True, text=True, env=env, timeout=600)
+            if out.returncode != 0:
+                rows.append(row("fig8", f"devices{d}", "ERROR", out.stderr[-120:]))
+                continue
+            res = json.loads(out.stdout.strip().splitlines()[-1])
+            for name, r in res.items():
+                if d == 1:
+                    base[name] = r["t"]
+                speedup = base.get(name, r["t"]) / r["t"]
+                rows.append(row("fig8", f"{name}_d{d}", r["t"] * 1e3, speedup,
+                                r["collective"] / 1e6))
+    finally:
+        os.unlink(worker)
+    return rows

@@ -1,0 +1,29 @@
+"""Fig 9: scheduling policy x chunk size -> partition balance x locality.
+
+The paper's OpenMP static/dynamic/guided x chunk-size grid becomes, on a
+static SPMD machine, the partitioner design space: row-balanced vs
+nnz-balanced cuts (static schedules preserving locality) evaluated by work
+imbalance = the straggler factor of the slowest chip.  Dynamic scheduling
+(which destroyed NUMA locality in the paper) has no SPMD analogue — the
+paper's own conclusion ("static + local wins") is the design baked in here.
+"""
+from __future__ import annotations
+
+from repro.core import distributed as D
+from repro.core.matrices import holstein_hubbard_surrogate, power_law_rows
+
+from .common import row
+
+
+def run(full: bool = False):
+    n = 100_000 if full else 20_000
+    rows = []
+    mats = [("holstein", holstein_hubbard_surrogate(n, seed=0)),
+            ("powerlaw", power_law_rows(n, n, mean_nnz=8, alpha=2.0, seed=0))]
+    for parts in ([4, 16, 64, 256] if full else [4, 16]):
+        for mname, m in mats:
+            imb_rows = D.partition_imbalance(m, D.row_balanced_partition(m.n_rows, parts))
+            imb_nnz = D.partition_imbalance(m, D.nnz_balanced_partition(m, parts))
+            rows.append(row("fig9", f"{mname}_p{parts}_rows", imb_rows))
+            rows.append(row("fig9", f"{mname}_p{parts}_nnz", imb_nnz))
+    return rows

@@ -1,0 +1,49 @@
+"""The paper's core claim: the balance model is *predictive*.
+
+For every format we compare measured SpMV time on THIS host against the
+model's prediction using the host's measured STREAM bandwidth (the same
+calibration the paper does per test system).  The figure of merit is the
+prediction ratio (measured/predicted) — within ~2x across formats while
+format *ranking* is preserved validates the model the way Figs 2/6 do.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import formats as F
+from repro.core import perfmodel as PM
+from repro.core import spmv as S
+from repro.core.matrices import holstein_hubbard_surrogate
+
+from .common import host_chip, row, timeit
+
+
+def run(full: bool = False):
+    n = 200_000 if full else 20_000
+    m = holstein_hubbard_surrogate(n, seed=0)
+    st = F.matrix_stats(m)
+    lens = m.row_lengths()
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(n).astype(np.float32))
+    chip = host_chip()
+    am = PM.TPU_FP32
+    rows = []
+    preds, meas = {}, {}
+    cases = [
+        ("csr", m, PM.balance_csr(am, st["nnz_per_row_mean"])),
+        ("jds", F.JDS.from_csr(m), PM.balance_jds(am)),
+        ("sell", F.SELL.from_csr(m, C=8, sigma=1024),
+         PM.balance_sell(am, PM.sell_pad_ratio(lens, 8, 1024), st["nnz_per_row_mean"])),
+    ]
+    for name, obj, bal in cases:
+        t_meas = timeit(S.make_spmv(obj), x, repeats=3)
+        t_pred = PM.predict(name, bal, m.nnz, chip=chip).time_s
+        preds[name], meas[name] = t_pred, t_meas
+        rows.append(row("perfmodel", name, t_meas / t_pred, t_meas * 1e3, t_pred * 1e3))
+    # ranking preservation (the paper's qualitative claim: CRS beats JDS)
+    rank_ok = (meas["csr"] < meas["jds"]) == (preds["csr"] < preds["jds"])
+    rows.append(row("perfmodel", "ranking_csr_lt_jds_preserved", int(rank_ok)))
+    # advisor choice
+    adv = PM.advise(st, lens, am=am)
+    rows.append(row("perfmodel", "advisor_best", adv["_best"]))
+    return rows

@@ -1,0 +1,54 @@
+"""Benchmark driver: one module per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--full] [--only figX]``
+
+Prints ``figure,name,value[,extra...]`` CSV rows.  Default sizes finish in
+minutes on CPU; ``--full`` uses out-of-cache sizes matching the paper's
+methodology ("array lengths ... such that the problem does not fit in any
+cache level").
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+MODULES = [
+    "fig2_basic_ops",
+    "fig3_stride_sweep",
+    "fig3b_gather_split",
+    "fig4_gaussian_strides",
+    "fig5_matrix_stats",
+    "fig6_formats",
+    "fig7_blocksize",
+    "fig8_parallel_scaling",
+    "fig9_partition_balance",
+    "perfmodel_validation",
+]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args(argv)
+
+    failures = 0
+    print("figure,name,value,extra1,extra2")
+    for name in MODULES:
+        if args.only and args.only not in name:
+            continue
+        mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+        t0 = time.time()
+        try:
+            for r in mod.run(full=args.full):
+                print(r)
+            print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"# {name} FAILED: {type(e).__name__}: {e}", file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,86 @@
+"""End-to-end driver #1: the paper's application — sparse eigensolver.
+
+1. Build the *exact* Holstein-Hubbard Hamiltonian (small, validated against
+   dense diagonalization), then the pattern-faithful surrogate at scale.
+2. Benchmark every storage format on the surrogate.
+3. Run Lanczos to convergence through the best format — SpMVM is >99 % of
+   the runtime, as the paper states.
+4. Optionally distribute the SpMV over all local devices (shard_map).
+
+    PYTHONPATH=src python examples/eigensolver_holstein.py [--n 50000]
+"""
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import distributed as D
+from repro.core import formats as F
+from repro.core import spmv as S
+from repro.core.eigensolver import lanczos
+from repro.core.matrices import (HolsteinHubbardParams, holstein_hubbard_exact,
+                                 holstein_hubbard_surrogate)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=30_000)
+    ap.add_argument("--lanczos-steps", type=int, default=64)
+    args = ap.parse_args()
+
+    # --- 1a. exact model, validated against dense eigh -------------------
+    p = HolsteinHubbardParams(L=3, n_up=1, n_dn=1, max_phonon=2, g=0.5, U=4.0)
+    hh = holstein_hubbard_exact(p)
+    e_dense = float(np.linalg.eigvalsh(hh.to_dense())[0])
+    res = lanczos(S.make_spmv(hh), hh.shape[0], m=60, dtype=jnp.float32)
+    print(f"[exact] dim={hh.shape[0]} E0(lanczos)={res.eigenvalues[0]:.8f} "
+          f"E0(dense)={e_dense:.8f} |diff|={abs(res.eigenvalues[0]-e_dense):.2e}")
+
+    # --- 1b. surrogate at scale -------------------------------------------
+    m = holstein_hubbard_surrogate(args.n, seed=0)
+    print(f"[surrogate] N={args.n} nnz={m.nnz}")
+
+    # --- 2. format shoot-out ----------------------------------------------
+    x = jax.random.normal(jax.random.PRNGKey(0), (args.n,), jnp.float32)
+    best_name, best_t, best_fn = None, np.inf, None
+    for name, obj in [("csr", m), ("ell", F.ELL.from_csr(m)),
+                      ("jds", F.JDS.from_csr(m)),
+                      ("sell", F.SELL.from_csr(m, C=8, sigma=1024)),
+                      ("hybrid", F.split_dia(m))]:
+        f = S.make_spmv(obj)
+        jax.block_until_ready(f(x))
+        t0 = time.perf_counter()
+        for _ in range(3):
+            y = f(x)
+        jax.block_until_ready(y)
+        t = (time.perf_counter() - t0) / 3
+        print(f"  {name:7s} {2*m.nnz/t/1e9:7.2f} GFLOP/s ({t*1e3:.2f} ms)")
+        if t < best_t:
+            best_name, best_t, best_fn = name, t, f
+
+    # --- 3. Lanczos through the winner --------------------------------------
+    print(f"[lanczos] using {best_name}")
+    t0 = time.perf_counter()
+    res = lanczos(best_fn, args.n, m=args.lanczos_steps, dtype=jnp.float32)
+    dt = time.perf_counter() - t0
+    spmv_t = res.n_spmv * best_t
+    print(f"  E0={res.eigenvalues[0]:.6f} ({res.n_spmv} SpMVs, {dt:.2f}s total, "
+          f"~{100*spmv_t/dt:.0f}% in SpMV)")
+
+    # --- 4. distributed SpMV over local devices -----------------------------
+    parts = len(jax.devices())
+    mesh = D.make_mesh_1d()
+    blocks = D.build_row_blocks(m, parts, balance="nnz")
+    dist = jax.jit(D.make_allgather_spmv(blocks, mesh))
+    err = float(jnp.abs(dist(x) - best_fn(x)).max())
+    print(f"[distributed] {parts} device(s), allgather variant, "
+          f"max |diff| vs serial = {err:.2e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""End-to-end driver #3: serve an LM whose FFN weights are sparse —
+the paper's formats applied to the modern decode-MVM regime.
+
+1. Initialize a small LM; magnitude-prune its FFN weights block-wise.
+2. Wrap them in SparseLinear (the format advisor picks BSR vs SELL).
+3. Compare dense vs sparse-kernel FFN outputs + the modelled bytes/token.
+4. Generate tokens through the engine.
+
+    PYTHONPATH=src python examples/serve_sparse.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import reduced
+from repro.core.perfmodel import TPU_FP32
+from repro.models.registry import Model, get_config
+from repro.models.sparse import SparseLinear, magnitude_prune, sparsity_report
+from repro.serve.engine import Engine, GenerationConfig
+
+cfg = reduced(get_config("qwen3-0.6b"), d_model=128, d_ff=512, n_layers=2)
+model = Model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+
+# --- sparsify one FFN weight and compare dense vs kernel path ------------
+w = np.asarray(params["units"]["mlp"]["wi_gate"][0]).T  # (d_ff, d_model)
+w_sparse = magnitude_prune(w, density=0.25, structured=(8, 128))
+rep = sparsity_report(w_sparse)
+print(f"[sparse] FFN weight {w.shape}: density=25% block(8,128) "
+      f"-> advisor: {rep['advised_format']}")
+lin = SparseLinear.from_dense(w_sparse, fmt="auto", backend="ref")
+x = jax.random.normal(jax.random.PRNGKey(1), (4, cfg.d_model), jnp.float32)
+y_sparse = lin(x)
+y_dense = x @ jnp.asarray(w_sparse).T
+err = float(jnp.abs(y_sparse - y_dense).max())
+print(f"[sparse] kernel-vs-dense max err = {err:.2e}; "
+      f"streamed ~{lin.streamed_bytes(TPU_FP32)/1e3:.1f} KB/SpMV "
+      f"vs dense {w.size*4/1e3:.1f} KB")
+
+# --- generate through the engine -------------------------------------------
+eng = Engine(model, params, batch_size=2, max_len=64)
+prompts = np.random.default_rng(0).integers(0, cfg.vocab, (2, 8)).astype(np.int32)
+outs = eng.generate(prompts, GenerationConfig(max_new_tokens=12))
+for i, o in enumerate(outs):
+    print(f"[serve] request {i}: {o}")
+print(f"[serve] ~{eng.decode_bytes_per_token()/1e6:.2f} MB streamed per token "
+      f"(weights + cache/slot) — the decode-MVM bandwidth regime")

@@ -1,0 +1,231 @@
+"""The paper's Table-1 microbenchmarks (PD/CS/IS/IR × ADD/SCP) in JAX.
+
+These isolate the three penalties of the SpMV inner loop (Sec. 4.1):
+  1. index-array traffic (IS vs CS),
+  2. access-granule waste at stride k (CS k=8 vs k=1),
+  3. irregularity (IR vs IS; plus Gaussian-stride variants, Fig. 4).
+
+Kernels (Table 1):
+  PDADD   s += B[i]             dense packed add (reduction)
+  PDSCP   s += A[i] * B[i]      dense packed scalar product
+  CSSCP   s += A[i] * B[k*i]    constant-stride direct access
+  ISADD   s += B[ind[i]]        indirect, ind(i) = k*i
+  ISSCP   s += A[i] * B[ind[i]]
+  IRADD / IRSCP                 indirect, random strides (mean k)
+
+Index-vector generators reproduce the paper's distributions:
+  * constant stride k,
+  * geometric/Bernoulli ("IR"): keep each position with p = 1/k (the paper:
+    "generating a non-zero element for each entry of invec for which a drawn
+    random number is smaller than the threshold given by the inverse mean
+    stride p = 1/k") -> variance grows as k(k-1),
+  * Gaussian strides with independent (mean, variance), allowing negative
+    strides (backward jumps) as in Fig. 4.
+
+Measurement: wall-clock on the current backend (CPU here) via the harness in
+``timing``; model predictions for the TPU target via ``core.perfmodel``.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# index-vector generators (the paper's stride distributions)
+# ---------------------------------------------------------------------------
+
+
+def ind_constant_stride(n_access: int, k: int, n_b: int) -> np.ndarray:
+    """IS: ind(i) = k*i, clipped to the B length (monotonic, regular)."""
+    idx = (np.arange(n_access, dtype=np.int64) * k) % max(1, n_b)
+    return idx.astype(np.int32)
+
+
+def ind_random_bernoulli(n_b: int, k: float, seed: int = 0) -> np.ndarray:
+    """IR: positions of Bernoulli(p=1/k) hits over [0, n_b) — mean stride k,
+    variance k(k-1) (geometric gaps)."""
+    rng = np.random.default_rng(seed)
+    keep = rng.random(n_b) < (1.0 / max(1.0, k))
+    idx = np.nonzero(keep)[0]
+    if idx.size == 0:
+        idx = np.asarray([0])
+    return idx.astype(np.int32)
+
+
+def ind_gaussian(n_access: int, mean: float, var: float, n_b: int, seed: int = 0) -> np.ndarray:
+    """Fig. 4: strides ~ N(mean, var), rounded; cumulative positions wrapped
+    into [0, n_b).  Negative strides (backward jumps) occur when var is large
+    enough relative to mean."""
+    rng = np.random.default_rng(seed)
+    strides = np.rint(rng.normal(mean, np.sqrt(max(0.0, var)), size=n_access)).astype(np.int64)
+    pos = np.cumsum(strides)
+    pos = np.mod(pos, n_b)
+    return pos.astype(np.int32)
+
+
+def stride_stats(ind: np.ndarray) -> dict:
+    d = np.diff(ind.astype(np.int64))
+    return {
+        "mean_stride": float(np.abs(d).mean()) if d.size else 0.0,
+        "var_stride": float(d.var()) if d.size else 0.0,
+        "frac_backward": float((d < 0).mean()) if d.size else 0.0,
+        "n_access": int(ind.size),
+    }
+
+
+# ---------------------------------------------------------------------------
+# the Table-1 kernels
+# ---------------------------------------------------------------------------
+
+
+def pdadd(B):
+    return jnp.sum(B)
+
+
+def pdscp(A, B):
+    return jnp.dot(A, B)
+
+
+def csscp(A, Bs):
+    """constant-stride: caller pre-strides B (B[::k]) so XLA sees the layout."""
+    return jnp.dot(A, Bs)
+
+
+def isadd(B, ind):
+    return jnp.sum(jnp.take(B, ind, axis=0))
+
+
+def isscp(A, B, ind):
+    return jnp.dot(A, jnp.take(B, ind, axis=0))
+
+
+# IR kernels are the same code as IS; only the index distribution differs.
+iradd = isadd
+irscp = isscp
+
+
+# ---------------------------------------------------------------------------
+# timing harness
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class BenchResult:
+    name: str
+    n_elements: int
+    best_s: float
+    mean_s: float
+    bytes_moved: float           # model-side traffic (for BW derivation)
+    gbytes_per_s: float
+    ns_per_element: float
+    cycles_per_element_1ghz: float
+
+    def row(self) -> str:
+        return (f"{self.name},{self.n_elements},{self.best_s:.3e},"
+                f"{self.gbytes_per_s:.2f},{self.ns_per_element:.2f}")
+
+
+def time_fn(fn, *args, repeats: int = 7, inner: int = 3) -> tuple[float, float]:
+    """Best/mean wall seconds of jitted ``fn(*args)`` with warmup."""
+    jfn = jax.jit(fn)
+    out = jfn(*args)
+    jax.block_until_ready(out)
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for _ in range(inner):
+            out = jfn(*args)
+        jax.block_until_ready(out)
+        times.append((time.perf_counter() - t0) / inner)
+    return min(times), float(np.mean(times))
+
+
+def bench(name: str, fn, args, n_elements: int, bytes_moved: float,
+          repeats: int = 7) -> BenchResult:
+    best, mean = time_fn(fn, *args, repeats=repeats)
+    return BenchResult(
+        name=name,
+        n_elements=n_elements,
+        best_s=best,
+        mean_s=mean,
+        bytes_moved=bytes_moved,
+        gbytes_per_s=bytes_moved / best / 1e9,
+        ns_per_element=best / max(1, n_elements) * 1e9,
+        cycles_per_element_1ghz=best / max(1, n_elements) * 1e9,
+    )
+
+
+def run_table1(n: int = 1 << 22, k: int = 8, dtype=jnp.float32, seed: int = 0,
+               repeats: int = 5) -> list[BenchResult]:
+    """All Table-1 kernels at one stride k.  ``n`` = accesses per kernel;
+    B is sized n*k so strided variants don't wrap."""
+    vb = jnp.dtype(dtype).itemsize
+    key = jax.random.PRNGKey(seed)
+    kA, kB = jax.random.split(key)
+    A = jax.random.normal(kA, (n,), dtype)
+    n_b = n * k
+    B = jax.random.normal(kB, (n_b,), dtype)
+    ind_is = jnp.asarray(ind_constant_stride(n, k, n_b))
+    ind_ir_np = ind_random_bernoulli(n_b, k, seed)[:n]  # Bernoulli count ~ n±sqrt(n)
+    A_ir = A[: ind_ir_np.size]
+    ind_ir = jnp.asarray(ind_ir_np)
+    Bs = B[:: k][:n]
+
+    results = [
+        bench("PDADD", pdadd, (B[:n],), n, n * vb, repeats),
+        bench("PDSCP", pdscp, (A, B[:n]), n, 2 * n * vb, repeats),
+        bench(f"CSSCP_k{k}", csscp, (A, Bs), n, n * vb + n * k * vb, repeats),
+        bench(f"ISADD_k{k}", isadd, (B, ind_is), n, n * (vb + 4), repeats),
+        bench(f"ISSCP_k{k}", isscp, (A, B, ind_is), n, n * (2 * vb + 4), repeats),
+        bench(f"IRADD_k{k}", iradd, (B, ind_ir), ind_ir_np.size,
+              ind_ir_np.size * (vb + 4), repeats),
+        bench(f"IRSCP_k{k}", irscp, (A_ir, B, ind_ir), ind_ir_np.size,
+              ind_ir_np.size * (2 * vb + 4), repeats),
+    ]
+    return results
+
+
+def run_stride_sweep(strides, n: int = 1 << 20, dtype=jnp.float32, seed: int = 0,
+                     kind: str = "is") -> list[BenchResult]:
+    """Fig. 3a: ISSCP/IRSCP performance vs stride."""
+    out = []
+    vb = jnp.dtype(dtype).itemsize
+    for k in strides:
+        key = jax.random.PRNGKey(seed)
+        kA, kB = jax.random.split(key)
+        n_b = int(n * max(1, k))
+        B = jax.random.normal(kB, (n_b,), dtype)
+        if kind == "is":
+            ind = jnp.asarray(ind_constant_stride(n, int(k), n_b))
+            A = jax.random.normal(kA, (n,), dtype)
+        else:
+            ind_np = ind_random_bernoulli(n_b, k, seed)
+            ind = jnp.asarray(ind_np)
+            A = jax.random.normal(kA, (ind_np.size,), dtype)
+        na = int(ind.shape[0])
+        out.append(bench(f"{kind.upper()}SCP_k{k}", isscp, (A, B, ind), na,
+                         na * (2 * vb + 4), repeats=3))
+    return out
+
+
+def run_gaussian_grid(means, variances, n: int = 1 << 18, dtype=jnp.float32,
+                      seed: int = 0) -> list[tuple[float, float, BenchResult]]:
+    """Fig. 4: IRSCP over a (mean, variance) grid of Gaussian strides."""
+    out = []
+    vb = jnp.dtype(dtype).itemsize
+    for m in means:
+        for v in variances:
+            key = jax.random.PRNGKey(seed)
+            kA, kB = jax.random.split(key)
+            n_b = int(n * max(1.0, m))
+            B = jax.random.normal(kB, (n_b,), dtype)
+            ind = jnp.asarray(ind_gaussian(n, m, v, n_b, seed))
+            A = jax.random.normal(kA, (n,), dtype)
+            r = bench(f"GAUSS_m{m}_v{v}", isscp, (A, B, ind), n, n * (2 * vb + 4),
+                      repeats=3)
+            out.append((m, v, r))
+    return out

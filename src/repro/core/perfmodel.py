@@ -1,0 +1,276 @@
+"""The paper's predictive performance model, generalized and TPU-calibrated.
+
+The paper's central claim (Sec. 1): a useful model must be *predictive* for
+SpMVM performance "for a given matrix on the basis of its sparsity pattern,
+and give a hint to the respective optimal storage scheme".  Its ingredients:
+
+* **algorithmic balance** B = bytes moved per Flop for a (format, pattern)
+  pair — CRS = 10 B/F and JDS = 18 B/F at fp64/int32 (Sec. 2), blocked JDS
+  approaching CRS balance;
+* **line-granularity waste** — at stride k, a whole cache line is moved per
+  touched element and only 1/k of it is used (Sec. 4.1, penalty #2);
+* **index traffic** — +4 B/element for the indexing array (penalty #1,
+  "overhead of around 50 % for ISADD");
+* the bandwidth roofline  perf = min(peak, BW / B).
+
+TPU adaptation: the "cache line" becomes the HBM/VMEM access granularity of
+a gather (one (8,128) or (1,128) tile row per distinct element in the worst
+case — parameterized as ``line_elems``); the result-vector write-allocate of
+JDS becomes the repeated HBM round-trip of the accumulator when a jagged
+diagonal does not fit VMEM.  Everything is parameterized by byte widths so
+the paper's exact fp64 numbers are reproduced in the tests.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+
+import numpy as np
+
+from ..utils.hw import ChipSpec, TPU_V5E
+
+
+@dataclass(frozen=True)
+class AccessModel:
+    """Byte-accounting parameters for one SpMV execution."""
+
+    value_bytes: int = 8      # fp64 in the paper; 4 (fp32) / 2 (bf16) on TPU
+    index_bytes: int = 4
+    line_elems: int = 8       # elements per memory-access granule (64B line / fp64)
+    invec_waste: float = 1.0  # mean granule fraction wasted multiplier (>=1)
+    invec_reuse: float = 1.0  # <1 if invec elements are re-served from cache/VMEM
+
+    def invec_bytes_per_access(self) -> float:
+        return self.value_bytes * self.invec_waste * self.invec_reuse
+
+
+def waste_from_stride(mean_stride: float, line_elems: int) -> float:
+    """Paper penalty #2: at stride k only 1/k of each granule is useful.
+
+    waste = min(k, line_elems): stride 1 -> 1.0 (dense), stride >= line
+    -> line_elems (whole granule per element).
+    """
+    return float(np.clip(mean_stride, 1.0, line_elems))
+
+
+# ---------------------------------------------------------------------------
+# per-format balance (bytes per Flop); 2 Flops per stored element
+# ---------------------------------------------------------------------------
+
+
+def balance_csr(am: AccessModel, nnz_per_row: float = np.inf) -> float:
+    """CRS: val + col_idx + invec per element; result kept in register,
+    written once per row (amortized over nnz_per_row)."""
+    per_elem = am.value_bytes + am.index_bytes + am.invec_bytes_per_access()
+    per_elem += 2 * am.value_bytes / max(1.0, nnz_per_row)  # resvec ld+st per row
+    return per_elem / 2.0
+
+
+def balance_jds(am: AccessModel) -> float:
+    """JDS: like CRS plus a resvec load+store per element (paper: 18 B/F)."""
+    per_elem = (
+        am.value_bytes + am.index_bytes + am.invec_bytes_per_access()
+        + 2 * am.value_bytes
+    )
+    return per_elem / 2.0
+
+
+def balance_blocked_jds(am: AccessModel, rows_per_block: int, nnz_per_row: float) -> float:
+    """NBJDS/RBJDS/SELL: resvec tile cached across the block's diagonals.
+
+    The resvec round-trip happens once per block instead of once per
+    element: amortization factor = block nnz / block rows = nnz_per_row.
+    With full amortization this recovers CRS balance (paper Sec. 2: "it
+    eventually becomes equal to CRS balance").
+    """
+    per_elem = am.value_bytes + am.index_bytes + am.invec_bytes_per_access()
+    per_elem += 2 * am.value_bytes / max(1.0, nnz_per_row)
+    return per_elem / 2.0
+
+
+def balance_ell(am: AccessModel, pad_ratio: float, nnz_per_row: float = np.inf) -> float:
+    """ELL streams padding too: all streamed terms scale by pad_ratio
+    (= padded elements / nnz >= 1)."""
+    return balance_csr(am, nnz_per_row) * pad_ratio
+
+
+def balance_sell(am: AccessModel, pad_ratio: float, nnz_per_row: float) -> float:
+    return balance_blocked_jds(am, 0, nnz_per_row) * pad_ratio
+
+
+def balance_bsr(am: AccessModel, block_shape: tuple[int, int], fill_ratio: float) -> float:
+    """BSR: index traffic amortized over bm*bn, invec reuse factor bm inside a
+    block (each x element feeds bm rows).  ``fill_ratio`` = stored elements /
+    true nnz (explicit zeros streamed and multiplied).  Balance is per
+    *useful* Flop, so streamed terms scale by fill_ratio."""
+    bm, bn = block_shape
+    per_stored = (
+        am.value_bytes
+        + am.index_bytes / (bm * bn)
+        + am.value_bytes * am.invec_reuse / bm  # stride-1 inside the block: no waste
+    )
+    per_stored += 2 * am.value_bytes / bn  # resvec tile ld+st per block row
+    return per_stored * fill_ratio / 2.0
+
+
+def balance_dia(am: AccessModel, n_diags: int, occupancy: float = 1.0,
+                invec_cached: bool = True) -> float:
+    """DIA: zero index traffic, stride-1 shifted invec reads.  Streams one
+    val + one invec element per *stored* slot; unoccupied slots (zeros) are
+    streamed too -> divide by occupancy.  If the invec working set stays in
+    cache/VMEM across diagonals, its traffic amortizes over n_diags."""
+    invec = am.value_bytes * (1.0 / n_diags if invec_cached and n_diags > 0 else 1.0)
+    per_stored = am.value_bytes + invec + 2 * am.value_bytes / max(1, n_diags)
+    return per_stored / (occupancy * 2.0)
+
+
+# paper-calibrated presets -------------------------------------------------
+
+PAPER_FP64 = AccessModel(value_bytes=8, index_bytes=4, line_elems=8,
+                         invec_waste=1.0, invec_reuse=1.0)
+TPU_FP32 = AccessModel(value_bytes=4, index_bytes=4, line_elems=32,
+                       invec_waste=1.0, invec_reuse=1.0)
+TPU_BF16 = AccessModel(value_bytes=2, index_bytes=4, line_elems=64,
+                       invec_waste=1.0, invec_reuse=1.0)
+
+
+# ---------------------------------------------------------------------------
+# roofline predictor
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Prediction:
+    format: str
+    balance_bytes_per_flop: float
+    flops: float                 # useful Flops of one SpMV
+    bytes_streamed: float
+    time_s: float
+    gflops: float
+    cycles_per_element: float    # paper Fig 2/6 y-axis (at chip clock)
+    bound: str                   # "memory" | "compute"
+
+
+def predict(
+    fmt: str,
+    balance: float,
+    nnz: int,
+    chip: ChipSpec = TPU_V5E,
+    clock_hz: float | None = None,
+) -> Prediction:
+    """perf = min(peak, BW / balance); times for one SpMV of 2*nnz Flops."""
+    flops = 2.0 * nnz
+    bytes_streamed = balance * flops
+    t_mem = bytes_streamed / chip.hbm_bytes_per_s
+    t_cmp = flops / chip.peak_flops_fp32
+    time_s = max(t_mem, t_cmp)
+    clock = clock_hz if clock_hz is not None else 1e9  # report per-GHz cycles
+    return Prediction(
+        format=fmt,
+        balance_bytes_per_flop=balance,
+        flops=flops,
+        bytes_streamed=bytes_streamed,
+        time_s=time_s,
+        gflops=flops / time_s / 1e9,
+        cycles_per_element=time_s / max(1, nnz) * clock,
+        bound="memory" if t_mem >= t_cmp else "compute",
+    )
+
+
+# ---------------------------------------------------------------------------
+# format advisor (the paper's "hint to the respective optimal storage scheme")
+# ---------------------------------------------------------------------------
+
+
+def ell_pad_ratio(row_lengths: np.ndarray) -> float:
+    ml = row_lengths.max() if row_lengths.size else 0
+    mean = row_lengths.mean() if row_lengths.size else 1
+    return float(ml / max(1e-9, mean))
+
+
+def sell_pad_ratio(row_lengths: np.ndarray, C: int, sigma: int) -> float:
+    """Exact padding ratio of SELL-C-sigma for the given row lengths."""
+    n = len(row_lengths)
+    if n == 0:
+        return 1.0
+    lens = row_lengths.astype(np.int64).copy()
+    out = np.empty_like(lens)
+    for s in range(0, n, max(1, sigma)):
+        e = min(s + sigma, n)
+        out[s:e] = np.sort(lens[s:e])[::-1]
+    n_pad = -(-n // C) * C
+    padded = np.zeros(n_pad, dtype=np.int64)
+    padded[:n] = out
+    widths = padded.reshape(-1, C).max(axis=1)
+    stored = int((widths * C).sum())
+    return stored / max(1, int(lens.sum()))
+
+
+def advise(
+    stats: dict,
+    row_lengths: np.ndarray,
+    am: AccessModel = TPU_FP32,
+    C: int = 8,
+    sigma: int | None = None,
+    chip: ChipSpec = TPU_V5E,
+) -> dict:
+    """Rank formats by predicted SpMV time from pattern statistics alone.
+
+    ``stats`` comes from ``formats.matrix_stats``; no conversion is done.
+    Returns {format: Prediction}, plus '_best'.
+    """
+    nnz = int(stats["nnz"])
+    npr = float(stats["nnz_per_row_mean"])
+    mean_stride = max(1.0, float(stats["mean_inner_stride"]))
+    am_eff = replace(am, invec_waste=waste_from_stride(mean_stride, am.line_elems))
+    sig = sigma if sigma is not None else len(row_lengths)
+    preds = {
+        "csr": predict("csr", balance_csr(am_eff, npr), nnz, chip),
+        "jds": predict("jds", balance_jds(am_eff), nnz, chip),
+        "ell": predict("ell", balance_ell(am_eff, ell_pad_ratio(row_lengths), npr), nnz, chip),
+        "sell": predict("sell", balance_sell(am_eff, sell_pad_ratio(row_lengths, C, sig), npr), nnz, chip),
+    }
+    # hybrid DIA+SELL if the diagonal fraction is substantial
+    frac_diag = float(stats.get("frac_nnz_top12_diags", 0.0))
+    if frac_diag > 0.3:
+        n_d = 12
+        b_dia = balance_dia(am_eff, n_d, occupancy=0.9)
+        rest_pad = sell_pad_ratio(row_lengths, C, sig)  # approx: same distribution
+        b_rest = balance_sell(am_eff, rest_pad, npr * (1 - frac_diag))
+        b_mix = frac_diag * b_dia + (1 - frac_diag) * b_rest
+        preds["hybrid"] = predict("hybrid", b_mix, nnz, chip)
+    best = min(preds, key=lambda k: preds[k].time_s)
+    out = dict(preds)
+    out["_best"] = best
+    return out
+
+
+def spmv_streamed_bytes(fmt_obj, am: AccessModel) -> float:
+    """Model-side byte count for a *concrete* converted matrix (used to
+    validate predictions against measured/compiled traffic)."""
+    from . import formats as F
+
+    if isinstance(fmt_obj, F.CSR):
+        return (am.value_bytes + am.index_bytes + am.invec_bytes_per_access()) * fmt_obj.nnz \
+            + 2 * am.value_bytes * fmt_obj.shape[0]
+    if isinstance(fmt_obj, F.ELL):
+        stored = int(np.prod(np.asarray(fmt_obj.val).shape))
+        return (am.value_bytes + am.index_bytes + am.invec_bytes_per_access()) * stored \
+            + 2 * am.value_bytes * fmt_obj.shape[0]
+    if isinstance(fmt_obj, F.JDS):
+        return (am.value_bytes + am.index_bytes + am.invec_bytes_per_access()
+                + 2 * am.value_bytes) * fmt_obj.nnz
+    if isinstance(fmt_obj, F.SELL):
+        stored = int(np.asarray(fmt_obj.val).shape[0])
+        return (am.value_bytes + am.index_bytes + am.invec_bytes_per_access()) * stored \
+            + 2 * am.value_bytes * fmt_obj.shape[0]
+    if isinstance(fmt_obj, F.BSR):
+        bm, bn = fmt_obj.block_shape
+        nb = fmt_obj.n_blocks
+        return (am.value_bytes * bm * bn + am.index_bytes + am.value_bytes * bn
+                + 2 * am.value_bytes * bm) * nb
+    if isinstance(fmt_obj, F.DIA):
+        nd, n = np.asarray(fmt_obj.data).shape
+        return am.value_bytes * nd * n + am.value_bytes * n + 2 * am.value_bytes * n
+    if isinstance(fmt_obj, F.HybridDIA):
+        return spmv_streamed_bytes(fmt_obj.dia, am) + spmv_streamed_bytes(fmt_obj.rest, am)
+    raise TypeError(type(fmt_obj))

@@ -1,0 +1,246 @@
+"""Pure-jnp reference SpMV kernels, one per storage format.
+
+These are the *oracles*: readable, obviously-correct implementations used to
+validate the Pallas kernels and to run everywhere (CPU included).  Each
+function takes the concrete format container (host metadata such as
+``jd_ptr`` / ``chunk_ptr`` is read eagerly with numpy, so the per-matrix
+loop structure is static) and returns a jit-able closure or computes
+directly.
+
+Conventions
+-----------
+* ``x`` is the input vector (paper: ``invec``), ``y`` the result
+  (``resvec``).
+* All formats compute ``y = A @ x`` for ``A`` of shape ``(M, N)``.
+* Multi-vector variants (``spmm``) take ``X`` of shape ``(N, K)``.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .formats import BSR, COO, CSR, DIA, ELL, JDS, SELL, HybridDIA
+
+# ---------------------------------------------------------------------------
+# CSR  (paper's CRS: inner loop = sparse scalar product, 10 B/F)
+# ---------------------------------------------------------------------------
+
+
+def csr_row_ids(m: CSR) -> jnp.ndarray:
+    """Expand row_ptr to one row id per nnz (jittable)."""
+    nnz = int(np.asarray(m.col_idx).shape[0])
+    return (
+        jnp.searchsorted(
+            jnp.asarray(m.row_ptr), jnp.arange(nnz, dtype=jnp.int32), side="right"
+        ).astype(jnp.int32)
+        - 1
+    )
+
+
+def csr_spmv(m: CSR, x: jnp.ndarray) -> jnp.ndarray:
+    """Gather + segment-sum formulation of the CRS kernel."""
+    row_ids = csr_row_ids(m)
+    prod = jnp.asarray(m.val) * jnp.take(x, jnp.asarray(m.col_idx), axis=0)
+    return jax.ops.segment_sum(prod, row_ids, num_segments=m.shape[0])
+
+
+def coo_spmv(m: COO, x: jnp.ndarray) -> jnp.ndarray:
+    prod = jnp.asarray(m.vals) * jnp.take(x, jnp.asarray(m.cols), axis=0)
+    return jax.ops.segment_sum(prod, jnp.asarray(m.rows), num_segments=m.shape[0])
+
+
+# ---------------------------------------------------------------------------
+# ELL  (padded jagged; the vectorizable building block)
+# ---------------------------------------------------------------------------
+
+
+def ell_spmv(m: ELL, x: jnp.ndarray) -> jnp.ndarray:
+    """Row-major ELL: one gather of shape (M, W), one reduction over W."""
+    gathered = jnp.take(x, jnp.asarray(m.col_idx), axis=0)  # (M, W)
+    return jnp.sum(jnp.asarray(m.val) * gathered, axis=1)
+
+
+def ell_spmm(m: ELL, X: jnp.ndarray) -> jnp.ndarray:
+    gathered = jnp.take(X, jnp.asarray(m.col_idx), axis=0)  # (M, W, K)
+    return jnp.einsum("mw,mwk->mk", jnp.asarray(m.val), gathered)
+
+
+# ---------------------------------------------------------------------------
+# JDS  (paper's jagged diagonals: inner loop = sparse vector triad, 18 B/F)
+# ---------------------------------------------------------------------------
+
+
+def jds_spmv(m: JDS, x: jnp.ndarray) -> jnp.ndarray:
+    """Faithful JDS traversal: one pass per jagged diagonal.
+
+    The python loop is over the (host-static) diagonal count; inside jit it
+    unrolls to N_j fused segments, mirroring the paper's outer loop.  The
+    result is accumulated in the *permuted* basis and scattered back at the
+    end (resvec_permuted[i] -> resvec[perm[i]]).
+    """
+    jp = np.asarray(m.jd_ptr)
+    n_rows = m.shape[0]
+    n_pad = int(np.asarray(m.perm).shape[0])
+    y_perm = jnp.zeros(n_pad, dtype=jnp.result_type(jnp.asarray(m.val).dtype, x.dtype))
+    val = jnp.asarray(m.val)
+    ci = jnp.asarray(m.col_idx)
+    for d in range(m.n_diags):
+        lo, hi = int(jp[d]), int(jp[d + 1])
+        seg_val = val[lo:hi]
+        seg_x = jnp.take(x, ci[lo:hi], axis=0)
+        y_perm = y_perm.at[: hi - lo].add(seg_val * seg_x)
+    y = jnp.zeros(n_rows, dtype=y_perm.dtype)
+    return y.at[jnp.asarray(m.perm)[:n_rows]].set(y_perm[:n_rows])
+
+
+# ---------------------------------------------------------------------------
+# SELL-C-sigma  (blocked JDS: NBJDS/RBJDS/SOJDS unified)
+# ---------------------------------------------------------------------------
+
+
+def sell_spmv(m: SELL, x: jnp.ndarray) -> jnp.ndarray:
+    """Chunk-local jagged-diagonal traversal (host loop over chunks).
+
+    Each chunk is a (width_c, C) column-major slab; the C-row result tile
+    stays "in cache" (a register tile on TPU) for the whole chunk — exactly
+    the paper's NBJDS blocking argument.
+    """
+    cp = np.asarray(m.chunk_ptr)
+    cw = np.asarray(m.chunk_width)
+    C = m.C
+    n_rows = m.shape[0]
+    val = jnp.asarray(m.val)
+    ci = jnp.asarray(m.col_idx)
+    perm = jnp.asarray(m.perm)
+    y = jnp.zeros(n_rows + 1, dtype=jnp.result_type(val.dtype, x.dtype))
+    for c in range(m.n_chunks):
+        w = int(cw[c])
+        lo, hi = int(cp[c]), int(cp[c + 1])
+        slab_v = val[lo:hi].reshape(w, C)
+        slab_x = jnp.take(x, ci[lo:hi], axis=0).reshape(w, C)
+        tile = jnp.sum(slab_v * slab_x, axis=0)  # (C,)
+        rows = perm[c * C : (c + 1) * C]  # original row ids; pad rows -> n_rows
+        y = y.at[rows].add(tile)
+    return y[:n_rows]
+
+
+def sell_spmv_padded(col3: jnp.ndarray, val3: jnp.ndarray, perm: jnp.ndarray,
+                     x: jnp.ndarray, n_rows: int) -> jnp.ndarray:
+    """Vectorised SELL on the fully padded (n_chunks, W, C) views.
+
+    This is the shape the Pallas kernel consumes; also a fast XLA fallback.
+    """
+    gathered = jnp.take(x, col3, axis=0)  # (nc, W, C)
+    tiles = jnp.sum(val3 * gathered, axis=1)  # (nc, C)
+    y = jnp.zeros(n_rows + 1, dtype=tiles.dtype)
+    y = y.at[perm.reshape(-1)].add(tiles.reshape(-1))
+    return y[:n_rows]
+
+
+# ---------------------------------------------------------------------------
+# BSR  (MXU-native dense blocks)
+# ---------------------------------------------------------------------------
+
+
+def bsr_block_row_ids(m: BSR) -> jnp.ndarray:
+    nb = m.n_blocks
+    return (
+        jnp.searchsorted(
+            jnp.asarray(m.block_row_ptr), jnp.arange(nb, dtype=jnp.int32), side="right"
+        ).astype(jnp.int32)
+        - 1
+    )
+
+
+def bsr_spmv(m: BSR, x: jnp.ndarray) -> jnp.ndarray:
+    bm, bn = m.block_shape
+    blocks = jnp.asarray(m.blocks)  # (nb, bm, bn)
+    bci = jnp.asarray(m.block_col_idx)
+    xb = jnp.take(x.reshape(-1, bn), bci, axis=0)  # (nb, bn)
+    partial = jnp.einsum("kmn,kn->km", blocks, xb)  # (nb, bm)
+    rows = bsr_block_row_ids(m)
+    ybl = jax.ops.segment_sum(partial, rows, num_segments=m.shape[0] // bm)
+    return ybl.reshape(-1)
+
+
+def bsr_spmm(m: BSR, X: jnp.ndarray) -> jnp.ndarray:
+    """Block-sparse matrix times dense matrix: each block feeds the MXU."""
+    bm, bn = m.block_shape
+    blocks = jnp.asarray(m.blocks)
+    bci = jnp.asarray(m.block_col_idx)
+    Xb = jnp.take(X.reshape(-1, bn, X.shape[1]), bci, axis=0)  # (nb, bn, K)
+    partial = jnp.einsum("kmn,knj->kmj", blocks, Xb)  # (nb, bm, K)
+    rows = bsr_block_row_ids(m)
+    ybl = jax.ops.segment_sum(partial, rows, num_segments=m.shape[0] // bm)
+    return ybl.reshape(m.shape[0], X.shape[1])
+
+
+# ---------------------------------------------------------------------------
+# DIA  (dense secondary diagonals: stride-1, zero index traffic)
+# ---------------------------------------------------------------------------
+
+
+def dia_spmv(m: DIA, x: jnp.ndarray) -> jnp.ndarray:
+    """One shifted stride-1 read per stored diagonal (static offsets)."""
+    n, ncols = m.shape
+    offsets = np.asarray(m.offsets)
+    data = jnp.asarray(m.data)
+    y = jnp.zeros(n, dtype=jnp.result_type(data.dtype, x.dtype))
+    for k, off in enumerate(offsets.tolist()):
+        lo = max(0, -off)
+        hi = min(n, ncols - off)
+        if hi <= lo:
+            continue
+        y = y.at[lo:hi].add(data[k, lo:hi] * jax.lax.dynamic_slice(x, (lo + off,), (hi - lo,)))
+    return y
+
+
+def hybrid_spmv(m: HybridDIA, x: jnp.ndarray) -> jnp.ndarray:
+    return dia_spmv(m.dia, x) + sell_spmv(m.rest, x)
+
+
+# ---------------------------------------------------------------------------
+# dispatch
+# ---------------------------------------------------------------------------
+
+_DISPATCH = {
+    COO: coo_spmv,
+    CSR: csr_spmv,
+    ELL: ell_spmv,
+    JDS: jds_spmv,
+    SELL: sell_spmv,
+    BSR: bsr_spmv,
+    DIA: dia_spmv,
+    HybridDIA: hybrid_spmv,
+}
+
+
+def spmv(matrix, x: jnp.ndarray) -> jnp.ndarray:
+    """Format-dispatching SpMV (reference path)."""
+    fn = _DISPATCH.get(type(matrix))
+    if fn is None:
+        raise TypeError(f"no spmv for {type(matrix).__name__}")
+    return fn(matrix, x)
+
+
+def make_spmv(matrix, jit: bool = True):
+    """Close over the concrete matrix and return ``f(x) -> y``.
+
+    Host metadata (chunk/diag pointers) becomes static structure; the arrays
+    become constants embedded in the jaxpr — the right trade for a matrix
+    reused across many SpMVs (the paper's eigensolver setting).
+    """
+    fn = partial(spmv, matrix)
+    return jax.jit(fn) if jit else fn
+
+
+def flops_of(matrix) -> int:
+    """Useful FLOPs of one SpMV: 2 per stored non-zero (mul+add).
+
+    For BSR this counts the *dense block* entries (the format trades useless
+    flops for MXU regularity — the model accounts for it the same way).
+    """
+    return 2 * matrix.nnz

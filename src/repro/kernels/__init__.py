@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the SpMV hot-spots (+ grouped MoE GEMM).
+
+Each kernel module pairs with an oracle in ``ref.py``; ``ops.py`` is the
+public dispatch layer.  Kernels are written for TPU (pl.pallas_call +
+BlockSpec VMEM tiling) and validated in interpret mode on CPU.
+"""
+from . import bsr_spmm, dia_spmv, gather_bench, moe_gemm, ops, ref, sell_spmv  # noqa: F401

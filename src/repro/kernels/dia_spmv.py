@@ -1,0 +1,86 @@
+"""DIA (dense diagonal) SpMV Pallas kernel — the zero-index-traffic format.
+
+For the Holstein-Hubbard matrix ~60 % of non-zeros sit in 12 dense secondary
+diagonals (paper Fig. 5).  Stored as DIA, each of those elements costs one
+val stream + one *stride-1 shifted* x read — no column indices at all.  The
+balance drops from CRS's 10 B/F to ~6 B/F (fp64), and on TPU the shifted
+reads are plain vector loads, no gather unit involved.
+
+Kernel: grid over output tiles of T rows; x is VMEM-resident, zero-padded by
+``pad0`` on the left and ``pad1`` on the right so every shifted window
+``[base + pad0 + off, +T)`` is in range for all static ``offsets``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from ..core.formats import DIA
+
+
+def _dia_kernel(data_ref, x_ref, o_ref, *, offsets, tile, pad0):
+    i = pl.program_id(0)
+    base = i * tile
+    x = x_ref[...]
+    acc = jnp.zeros((tile,), dtype=o_ref.dtype)
+    for k, off in enumerate(offsets):  # static unroll over stored diagonals
+        xs = jax.lax.dynamic_slice(x, (base + pad0 + off,), (tile,))
+        acc = acc + data_ref[k, :].astype(o_ref.dtype) * xs.astype(o_ref.dtype)
+    o_ref[...] = acc
+
+
+@functools.partial(
+    jax.jit, static_argnames=("offsets", "tile", "pad0", "interpret", "out_dtype")
+)
+def dia_spmv_arrays(
+    data: jnp.ndarray,   # (nd, n_pad) — columns padded to tile multiple
+    x_pad: jnp.ndarray,  # (pad0 + n_pad + pad1,)
+    *,
+    offsets: tuple[int, ...],
+    tile: int = 512,
+    pad0: int,
+    interpret: bool = True,
+    out_dtype=None,
+) -> jnp.ndarray:
+    nd, n_pad = data.shape
+    assert n_pad % tile == 0
+    odt = out_dtype or jnp.result_type(data.dtype, x_pad.dtype)
+    kernel = functools.partial(_dia_kernel, offsets=offsets, tile=tile, pad0=pad0)
+    return pl.pallas_call(
+        kernel,
+        grid=(n_pad // tile,),
+        in_specs=[
+            pl.BlockSpec((nd, tile), lambda i: (0, i)),
+            pl.BlockSpec((x_pad.shape[0],), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n_pad,), odt),
+        interpret=interpret,
+    )(data, x_pad)
+
+
+def dia_prepare(m: DIA, tile: int = 512):
+    """Host-side padding: returns (data_padded, pad0, pad1, offsets, n)."""
+    offsets = tuple(int(o) for o in np.asarray(m.offsets))
+    n = m.shape[0]
+    n_pad = -(-n // tile) * tile
+    data = np.zeros((max(1, len(offsets)), n_pad), dtype=np.asarray(m.data).dtype)
+    if len(offsets):
+        data[:, :n] = np.asarray(m.data)
+    pad0 = max(0, -min(offsets)) if offsets else 0
+    pad1 = max(0, (n_pad - 1) + (max(offsets) if offsets else 0) + 1 - n)
+    return data, pad0, pad1, offsets, n
+
+
+def dia_spmv(m: DIA, x: jnp.ndarray, *, tile: int = 512, interpret: bool = True) -> jnp.ndarray:
+    data, pad0, pad1, offsets, n = dia_prepare(m, tile)
+    if not offsets:
+        return jnp.zeros(n, dtype=x.dtype)
+    x_pad = jnp.pad(x, (pad0, pad1 + (data.shape[1] - n)))
+    y = dia_spmv_arrays(jnp.asarray(data), x_pad, offsets=offsets, tile=tile,
+                        pad0=pad0, interpret=interpret)
+    return y[:n]

@@ -1,0 +1,78 @@
+"""Microbenchmark Pallas kernels: the streamed-vs-gathered split (Fig 2/3b).
+
+The paper toggles the x86 hardware prefetchers to separate latency from
+bandwidth in the irregular invec access.  TPU has no SW-visible prefetcher;
+the analogue is the *explicit* split between
+
+  * operands streamed through the grid pipeline at full HBM bandwidth
+    (val/col_idx — the paper's "prefetcher works" regime), and
+  * the in-VMEM gather for x[idx] (the irregular term the paper isolates).
+
+Two kernels with identical streamed traffic, differing only in the gather:
+
+  stream_triad : o = b + a * c                (dense triad; STREAM calibration)
+  gather_scp   : partial += a * x[idx]        (ISSCP/IRSCP inner body)
+
+Comparing their per-element costs on real hardware reproduces Fig 2's
+dense-vs-indirect gap; in this repo the comparison is run in interpret mode
+for correctness and fed through the perfmodel for the v5e numbers.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _triad_kernel(a_ref, b_ref, c_ref, o_ref):
+    o_ref[...] = b_ref[...] + a_ref[...] * c_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def stream_triad(a, b, c, *, tile: int = 1024, interpret: bool = True):
+    n = a.shape[0]
+    assert n % tile == 0
+    return pl.pallas_call(
+        _triad_kernel,
+        grid=(n // tile,),
+        in_specs=[pl.BlockSpec((tile,), lambda i: (i,))] * 3,
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), a.dtype),
+        interpret=interpret,
+    )(a, b, c)
+
+
+def _gather_kernel(a_ref, idx_ref, x_ref, o_ref):
+    x = x_ref[...]
+    g = jnp.take(x, idx_ref[...], axis=0)
+    o_ref[...] = a_ref[...] * g
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def gather_scp(a, idx, x, *, tile: int = 1024, interpret: bool = True):
+    """a/idx streamed in tiles; x VMEM-resident; o = a * x[idx] per element
+    (the reduction to a scalar happens outside, keeping traffic comparable)."""
+    n = a.shape[0]
+    assert n % tile == 0
+    return pl.pallas_call(
+        _gather_kernel,
+        grid=(n // tile,),
+        in_specs=[
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((x.shape[0],), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), a.dtype),
+        interpret=interpret,
+    )(a, idx, x)
+
+
+def traffic_model(n: int, value_bytes: int, idx_bytes: int = 4) -> dict:
+    """Streamed bytes for each kernel (the model input for fig3b)."""
+    return {
+        "stream_triad": 4 * n * value_bytes,          # a,b,c in + o out
+        "gather_scp": n * (2 * value_bytes + idx_bytes),  # a,idx in + o out (x in VMEM)
+    }

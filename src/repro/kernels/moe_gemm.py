@@ -1,0 +1,116 @@
+"""Grouped (MoE expert) GEMM Pallas kernel.
+
+MoE expert weights are *block-sparse by routing*: per step, each token tile
+multiplies exactly one expert's weights — a BSR matmul whose block pattern is
+decided at dispatch time.  This kernel is the dynamic-pattern sibling of
+``bsr_spmm``: the tile->expert map arrives via scalar prefetch, so the
+expert-weight HBM->VMEM fetch for step (i, j) is known ahead of the step and
+pipelines like any dense GEMM (no gather in the inner loop).
+
+Contract: tokens are pre-sorted by expert and each expert's group is padded
+to a multiple of ``bt`` rows (padding rows multiply expert 0 and are masked
+by the caller — their outputs are discarded on unsort).
+
+Grid: (T/bt, F/bf); X tile (bt, D); W tile (D, bf) selected by expert id.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gg_kernel(te_ref, x_ref, w_ref, o_ref):
+    o_ref[...] = jnp.dot(
+        x_ref[...], w_ref[0], preferred_element_type=o_ref.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "bf", "interpret", "out_dtype"))
+def grouped_gemm_arrays(
+    tile_expert: jnp.ndarray,  # (T//bt,) int32
+    X: jnp.ndarray,            # (T, D) sorted by expert, group-padded
+    W: jnp.ndarray,            # (E, D, F)
+    *,
+    bt: int = 128,
+    bf: int | None = None,
+    interpret: bool = True,
+    out_dtype=None,
+) -> jnp.ndarray:
+    T, D = X.shape
+    E, D2, F = W.shape
+    assert D == D2 and T % bt == 0
+    bf = bf or F
+    assert F % bf == 0
+    odt = out_dtype or jnp.result_type(X.dtype, W.dtype)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(T // bt, F // bf),
+        in_specs=[
+            pl.BlockSpec((bt, D), lambda i, j, te: (i, 0)),
+            pl.BlockSpec((1, D, bf), lambda i, j, te: (te[i], 0, j)),
+        ],
+        out_specs=pl.BlockSpec((bt, bf), lambda i, j, te: (i, j)),
+    )
+    return pl.pallas_call(
+        _gg_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((T, F), odt),
+        interpret=interpret,
+    )(tile_expert, X, W)
+
+
+# ---------------------------------------------------------------------------
+# host-side dispatch helpers (sort/pad/unsort)
+# ---------------------------------------------------------------------------
+
+
+def plan_groups(expert_of_token: np.ndarray, n_experts: int, bt: int):
+    """Sort tokens by expert; pad each group to a multiple of bt.
+
+    Returns (order, inverse_scatter, tile_expert, padded_T).
+    ``inverse_scatter[t]`` is the padded-row index of original token t.
+    """
+    order = np.argsort(expert_of_token, kind="stable").astype(np.int32)
+    counts = np.bincount(expert_of_token, minlength=n_experts)
+    padded = -(-counts // bt) * bt
+    padded = np.maximum(padded, 0)
+    starts = np.concatenate([[0], np.cumsum(padded)])
+    T_pad = int(starts[-1]) if starts[-1] else bt
+    tile_expert = np.zeros(max(1, T_pad // bt), dtype=np.int32)
+    for e in range(n_experts):
+        t0 = starts[e] // bt
+        t1 = starts[e + 1] // bt
+        tile_expert[t0:t1] = e
+    # destination row for each sorted token
+    dest = np.zeros(len(order), dtype=np.int32)
+    src_starts = np.concatenate([[0], np.cumsum(counts)])
+    for e in range(n_experts):
+        k = counts[e]
+        dest[src_starts[e] : src_starts[e] + k] = starts[e] + np.arange(k)
+    inverse_scatter = np.zeros(len(order), dtype=np.int32)
+    inverse_scatter[order] = dest
+    return order, inverse_scatter, tile_expert, T_pad
+
+
+def grouped_gemm(
+    X: jnp.ndarray,                # (T, D) in original token order
+    expert_of_token: np.ndarray,   # (T,) host-side routing decision
+    W: jnp.ndarray,                # (E, D, F)
+    *,
+    bt: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Full dispatch: sort -> kernel -> unsort.  Host routing = static shapes
+    (the serving path); the training path uses the dense-dispatch einsum in
+    ``models/moe.py`` where routing is traced."""
+    T, D = X.shape
+    E = W.shape[0]
+    _, inv, tile_expert, T_pad = plan_groups(expert_of_token, E, bt)
+    Xp = jnp.zeros((T_pad, D), X.dtype).at[jnp.asarray(inv)].set(X)
+    Yp = grouped_gemm_arrays(jnp.asarray(tile_expert), Xp, W, bt=bt, interpret=interpret)
+    return jnp.take(Yp, jnp.asarray(inv), axis=0)

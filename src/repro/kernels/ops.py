@@ -1,0 +1,159 @@
+"""Public kernel entry points with backend dispatch.
+
+backend:
+  "pallas"  — the Pallas kernels (interpret=True off-TPU, compiled on TPU);
+  "ref"     — the pure-jnp oracles (XLA-fused; the fast path on CPU);
+  "auto"    — pallas on TPU, ref elsewhere.
+
+Everything downstream (models/sparse.py, benchmarks, the eigensolver) calls
+through here, so a single flag flips the whole framework between paths.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.formats import BSR, DIA, SELL, HybridDIA
+from . import bsr_spmm as _bsr
+from . import dia_spmv as _dia
+from . import moe_gemm as _moe
+from . import ref as _ref
+from . import sell_spmv as _sell
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(backend: str) -> str:
+    if backend == "auto":
+        return "pallas" if on_tpu() else "ref"
+    return backend
+
+
+def _interpret() -> bool:
+    return not on_tpu()
+
+
+# ---------------------------------------------------------------------------
+# SELL
+# ---------------------------------------------------------------------------
+
+
+def make_sell_spmv(m: SELL, *, backend: str = "auto", chunk_block: int = 8,
+                   width_pad: int = 8):
+    """Returns jitted ``f(x) -> y`` for a concrete SELL matrix."""
+    be = _resolve(backend)
+    col3, val3, _ = m.padded_views(pad_width_to=width_pad)
+    nc = col3.shape[0]
+    cb = min(chunk_block, nc)
+    while nc % cb:
+        cb -= 1
+    col3j, val3j = jnp.asarray(col3), jnp.asarray(val3)
+    perm = jnp.asarray(np.asarray(m.perm))
+    n = m.shape[0]
+
+    if be == "pallas":
+        def f(x):
+            tiles = _sell.sell_spmv_arrays(col3j, val3j, x, chunk_block=cb,
+                                           interpret=_interpret())
+            return _sell.sell_spmv_scatter(tiles, perm, n)
+    else:
+        def f(x):
+            tiles = _ref.sell_spmv_ref(col3j, val3j, x)
+            return _sell.sell_spmv_scatter(tiles, perm, n)
+
+    return jax.jit(f)
+
+
+# ---------------------------------------------------------------------------
+# BSR
+# ---------------------------------------------------------------------------
+
+
+def make_bsr_spmm(m: BSR, *, backend: str = "auto"):
+    be = _resolve(backend)
+    bcols, slab = _bsr.bsr_to_bell(m)
+    bc, bl = jnp.asarray(bcols), jnp.asarray(slab)
+    M = m.shape[0]
+
+    if be == "pallas":
+        def f(X):
+            return _bsr.bell_spmm_arrays(bc, bl, X, interpret=_interpret())[:M]
+    else:
+        def f(X):
+            return _ref.bell_spmm_ref(bc, bl, X)[:M]
+
+    return jax.jit(f)
+
+
+# ---------------------------------------------------------------------------
+# DIA / Hybrid
+# ---------------------------------------------------------------------------
+
+
+def make_dia_spmv(m: DIA, *, backend: str = "auto", tile: int = 512):
+    be = _resolve(backend)
+    data, pad0, pad1, offsets, n = _dia.dia_prepare(m, tile)
+    dataj = jnp.asarray(data)
+    n_pad = data.shape[1]
+
+    if not offsets:
+        return jax.jit(lambda x: jnp.zeros(n, dtype=x.dtype))
+
+    if be == "pallas":
+        def f(x):
+            x_pad = jnp.pad(x, (pad0, pad1 + (n_pad - n)))
+            y = _dia.dia_spmv_arrays(dataj, x_pad, offsets=offsets, tile=tile,
+                                     pad0=pad0, interpret=_interpret())
+            return y[:n]
+    else:
+        def f(x):
+            x_pad = jnp.pad(x, (pad0, pad1 + (n_pad - n)))
+            return _ref.dia_spmv_ref(offsets, dataj[:, :n], x_pad, pad0, n)
+
+    return jax.jit(f)
+
+
+def make_hybrid_spmv(m: HybridDIA, *, backend: str = "auto", **kw):
+    f_dia = make_dia_spmv(m.dia, backend=backend)
+    f_sell = make_sell_spmv(m.rest, backend=backend, **kw)
+    return jax.jit(lambda x: f_dia(x) + f_sell(x))
+
+
+# ---------------------------------------------------------------------------
+# grouped GEMM
+# ---------------------------------------------------------------------------
+
+
+def grouped_gemm(X, expert_of_token, W, *, backend: str = "auto", bt: int = 128):
+    be = _resolve(backend)
+    if be == "pallas":
+        return _moe.grouped_gemm(X, expert_of_token, W, bt=bt, interpret=_interpret())
+    order, inv, tile_expert, T_pad = _moe.plan_groups(
+        np.asarray(expert_of_token), W.shape[0], bt)
+    Xp = jnp.zeros((T_pad, X.shape[1]), X.dtype).at[jnp.asarray(inv)].set(X)
+    Yp = _ref.grouped_gemm_ref(jnp.asarray(tile_expert), Xp, W, bt)
+    return jnp.take(Yp, jnp.asarray(inv), axis=0)
+
+
+# ---------------------------------------------------------------------------
+# format-level dispatch (mirrors core.spmv.make_spmv but kernel-backed)
+# ---------------------------------------------------------------------------
+
+
+def make_kernel_spmv(matrix, *, backend: str = "auto", **kw):
+    if isinstance(matrix, SELL):
+        return make_sell_spmv(matrix, backend=backend, **kw)
+    if isinstance(matrix, BSR):
+        f = make_bsr_spmm(matrix, backend=backend)
+        lane = 8
+        return jax.jit(lambda x: f(jnp.tile(x[:, None], (1, lane)))[:, 0])
+    if isinstance(matrix, DIA):
+        return make_dia_spmv(matrix, backend=backend, **kw)
+    if isinstance(matrix, HybridDIA):
+        return make_hybrid_spmv(matrix, backend=backend)
+    raise TypeError(f"no kernel path for {type(matrix).__name__}")

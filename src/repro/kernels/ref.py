@@ -1,0 +1,75 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function mirrors its kernel's *array-level* contract exactly (same
+operand layouts, same padding conventions), so tests can sweep shapes and
+dtypes and ``assert_allclose`` kernel vs oracle with no adapter code.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# --- SELL-C-sigma SpMV ------------------------------------------------------
+
+def sell_spmv_ref(col3: jnp.ndarray, val3: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """col3/val3: (nc, W, C); x: (N,) -> (nc, C) chunk-tile results.
+
+    Padding entries carry val=0 so their gathered contribution vanishes.
+    The perm-scatter back to original row order happens outside the kernel.
+    """
+    g = jnp.take(x, col3, axis=0)
+    return jnp.sum(val3 * g, axis=1)
+
+
+# --- BELL (block-ELL) SpMM --------------------------------------------------
+
+def bell_spmm_ref(bcols: jnp.ndarray, blocks: jnp.ndarray, X: jnp.ndarray) -> jnp.ndarray:
+    """bcols: (nbr, nbpp) int32; blocks: (nbr, nbpp, bm, bk); X: (K, N).
+
+    Returns Y (nbr*bm, N).  Padded slots have zero blocks (bcol 0 is safe).
+    """
+    nbr, nbpp, bm, bk = blocks.shape
+    K, N = X.shape
+    Xb = X.reshape(K // bk, bk, N)
+    gathered = jnp.take(Xb, bcols, axis=0)  # (nbr, nbpp, bk, N)
+    y = jnp.einsum("rjmk,rjkn->rmn", blocks, gathered)
+    return y.reshape(nbr * bm, N)
+
+
+# --- DIA SpMV ----------------------------------------------------------------
+
+def dia_spmv_ref(offsets: tuple[int, ...], data: jnp.ndarray, x_pad: jnp.ndarray,
+                 pad0: int, n: int) -> jnp.ndarray:
+    """offsets: static; data: (nd, n); x_pad: zero-padded by pad0 on the left
+    (and enough on the right).  y[i] = sum_k data[k,i] * x[i + off_k]."""
+    i = jnp.arange(n)
+    y = jnp.zeros(n, dtype=jnp.result_type(data.dtype, x_pad.dtype))
+    for k, off in enumerate(offsets):
+        y = y + data[k] * jax.lax.dynamic_slice(x_pad, (pad0 + off,), (n,))
+    return y
+
+
+# --- grouped (MoE) GEMM -------------------------------------------------------
+
+def grouped_gemm_ref(tile_expert: jnp.ndarray, X: jnp.ndarray, W: jnp.ndarray,
+                     bt: int) -> jnp.ndarray:
+    """tile_expert: (T//bt,) expert id per token tile; X: (T, D) rows sorted
+    by expert (groups padded to bt); W: (E, D, F).  Y tile = X_tile @ W[e]."""
+    T, D = X.shape
+    Xt = X.reshape(T // bt, bt, D)
+    Wt = jnp.take(W, tile_expert, axis=0)  # (T//bt, D, F)
+    return jnp.einsum("tbd,tdf->tbf", Xt, Wt).reshape(T, W.shape[2])
+
+
+# --- microbenchmark kernels ----------------------------------------------------
+
+def stream_triad_ref(a: jnp.ndarray, b: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+    """STREAM triad a = b + s*c (s folded into c) — the calibration kernel."""
+    return b + a * c
+
+
+def gather_scp_ref(a: jnp.ndarray, x: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """Per-tile partial sums of a[i] * x[idx[i]] (ISSCP/IRSCP inner body).
+    a/idx: (T,) tiled; x: (N,). Returns scalar sum per call."""
+    return jnp.sum(a * jnp.take(x, idx, axis=0))

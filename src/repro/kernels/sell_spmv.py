@@ -1,0 +1,97 @@
+"""SELL-C-sigma SpMV Pallas kernel — the TPU-native blocked-JDS kernel.
+
+Paper mapping: NBJDS's "only the elements of the current block are processed
+for all jagged diagonals that have entries in this block, to the effect that
+the corresponding part of the result vector remains in cache" becomes: the
+(CB, C) result tile lives in VMEM/VREGs for the whole sweep over the chunk's
+jagged diagonals (the W axis).  RBJDS's contiguous block storage is the
+(nc, W, C) slab layout itself; SOJDS's stride sorting happened at format-
+construction time (``SELL.from_csr(sort_cols=True)``).
+
+TPU tiling:
+  * C (chunk height) should be a multiple of the 128-lane dimension for VPU
+    efficiency (C=128 default; C=8 supported for small problems).
+  * The x vector is held fully VMEM-resident (one (N,) block): SpMV input
+    vectors up to ~30M fp32 fit v5e's 128 MiB VMEM — this *is* the paper's
+    "input vector in cache" regime, achieved by construction instead of by
+    hoping the cache keeps it.
+  * val/col slabs stream through VMEM tiles of (CB, WB, C) via the grid
+    pipeline (the analogue of the paper's hardware prefetcher, but explicit
+    and guaranteed — see DESIGN.md on prefetch adaptation).
+
+Grid: (nc/CB, W/WB); the W axis accumulates into the same output block
+(revisited output => sequential W iterations, init at w==0).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sell_kernel(col_ref, val_ref, x_ref, o_ref):
+    w = pl.program_id(1)
+
+    @pl.when(w == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    idx = col_ref[...]  # (CB, WB, C) int32
+    vals = val_ref[...]  # (CB, WB, C)
+    x = x_ref[...]  # (N,)
+    g = jnp.take(x, idx.reshape(-1), axis=0).reshape(idx.shape)
+    o_ref[...] += jnp.sum(vals.astype(o_ref.dtype) * g.astype(o_ref.dtype), axis=1)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("chunk_block", "width_block", "interpret", "out_dtype")
+)
+def sell_spmv_arrays(
+    col3: jnp.ndarray,
+    val3: jnp.ndarray,
+    x: jnp.ndarray,
+    *,
+    chunk_block: int = 8,
+    width_block: int | None = None,
+    interpret: bool = True,
+    out_dtype=None,
+) -> jnp.ndarray:
+    """col3/val3: (nc, W, C); x: (N,) -> (nc, C) tile results.
+
+    nc must be divisible by chunk_block and W by width_block (pad at format
+    construction; ``SELL.padded_views(pad_width_to=...)``).
+    """
+    nc, W, C = col3.shape
+    wb = width_block or W
+    assert nc % chunk_block == 0, (nc, chunk_block)
+    assert W % wb == 0, (W, wb)
+    odt = out_dtype or jnp.result_type(val3.dtype, x.dtype)
+    grid = (nc // chunk_block, W // wb)
+    return pl.pallas_call(
+        _sell_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((chunk_block, wb, C), lambda i, w: (i, w, 0)),
+            pl.BlockSpec((chunk_block, wb, C), lambda i, w: (i, w, 0)),
+            pl.BlockSpec((x.shape[0],), lambda i, w: (0,)),
+        ],
+        out_specs=pl.BlockSpec((chunk_block, C), lambda i, w: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nc, C), odt),
+        interpret=interpret,
+    )(col3, val3, x)
+
+
+def sell_spmv_scatter(tiles: jnp.ndarray, perm: jnp.ndarray, n_rows: int) -> jnp.ndarray:
+    """Scatter (nc, C) permuted tiles back to original row order."""
+    y = jnp.zeros(n_rows + 1, dtype=tiles.dtype)
+    y = y.at[perm.reshape(-1)].add(tiles.reshape(-1))
+    return y[:n_rows]
+
+
+def vmem_bytes(chunk_block: int, width_block: int, C: int, n: int,
+               val_bytes: int = 4, idx_bytes: int = 4, x_bytes: int = 4) -> int:
+    """Working-set claim for the BlockSpec choice (must be << VMEM)."""
+    slab = chunk_block * width_block * C
+    return slab * (val_bytes + idx_bytes) * 2 + n * x_bytes + chunk_block * C * 4

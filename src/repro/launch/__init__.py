@@ -1,0 +1,3 @@
+# NOTE: do not import .dryrun here — it sets XLA_FLAGS at import time and is
+# meant to be run as its own process (python -m repro.launch.dryrun).
+from . import mesh  # noqa: F401

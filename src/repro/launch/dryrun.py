@@ -1,0 +1,276 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# NOTE: the two lines above MUST run before any jax import (jax locks the
+# device count at first init) — hence no `from __future__ import ...` here.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this lowers the real step function — train_step (fwd + bwd +
+AdamW/ZeRO-1 update), prefill, or decode_step — with ShapeDtypeStruct
+inputs and rule-derived GSPMD shardings, compiles it for the production
+mesh built from 512 placeholder host devices, and extracts:
+
+  * cost_analysis   -> HLO FLOPs / bytes (per device),
+  * memory_analysis -> per-device HBM footprint (proves the config fits),
+  * compiled HLO    -> collective op census (bytes per collective kind).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-7b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both --out dryrun.jsonl
+"""
+
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import ARCHS, SHAPES, input_specs, shape_applicable
+from ..models.registry import Model, get_config
+from ..sharding import rules as shrules
+from ..train.optimizer import OptimizerConfig, adamw_update, opt_state_shapes
+from ..utils import hlo as hlolib
+from ..utils.jaxpr_flops import flops_of_fn
+from .mesh import make_production_mesh
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def build_step(model: Model, shape_name: str, mesh, opt_cfg=OptimizerConfig()):
+    """Returns (fn, example_args (SDS pytrees), in_shardings, out_shardings)."""
+    cfg = model.cfg
+    spec = SHAPES[shape_name]
+    specs = input_specs(cfg, shape_name)
+    pshapes = model.param_shapes()
+    prof = cfg.shard_profile
+    # FSDP (huge models): params themselves carry the DP shard dim too
+    pspec_fn = shrules.zero1_specs if cfg.fsdp else shrules.param_specs
+    pshard = _named(mesh, pspec_fn(pshapes, mesh, profile=prof))
+
+    if spec.kind == "train":
+        oshapes = opt_state_shapes(pshapes, cfg.opt_dtype)
+        oshard = {"m": _named(mesh, shrules.zero1_specs(pshapes, mesh, profile=prof)),
+                  "v": _named(mesh, shrules.zero1_specs(pshapes, mesh, profile=prof)),
+                  "step": NamedSharding(mesh, P())}
+        bshard = _named(mesh, shrules.batch_specs(specs["batch"], mesh, profile=prof))
+
+        def train_step(params, opt_state, batch):
+            (loss, metrics), grads = jax.value_and_grad(
+                model.loss, has_aux=True)(params, batch)
+            new_p, new_o, stats = adamw_update(opt_cfg, grads, opt_state, params)
+            return new_p, new_o, {"loss": loss, **metrics, **stats}
+
+        args = (pshapes, oshapes, specs["batch"])
+        in_sh = (pshard, oshard, bshard)
+        out_sh = (pshard, oshard, None)
+        return train_step, args, in_sh, out_sh
+
+    if spec.kind == "prefill":
+        cshard = _named(mesh, shrules.cache_specs(
+            specs["cache"], mesh, seq_axis_threshold=cfg.kv_seq_shard_threshold))
+        bshard = _named(mesh, shrules.batch_specs(specs["batch"], mesh, profile=prof))
+
+        def prefill_step(params, batch, cache):
+            return model.prefill(params, batch, cache)
+
+        args = (pshapes, specs["batch"], specs["cache"])
+        in_sh = (pshard, bshard, cshard)
+        return prefill_step, args, in_sh, None
+
+    # decode
+    cshard = _named(mesh, shrules.cache_specs(
+        specs["cache"], mesh, seq_axis_threshold=cfg.kv_seq_shard_threshold))
+    tshard = _named(mesh, shrules.batch_specs(specs["token"], mesh, profile=prof))
+
+    def decode_step(params, cache, token, pos):
+        return model.decode_step(params, cache, token, pos)
+
+    args = (pshapes, specs["cache"], specs["token"], specs["pos"])
+    in_sh = (pshard, cshard, tshard, NamedSharding(mesh, P()))
+    return decode_step, args, in_sh, None
+
+
+def _depth_override(cfg, n_units: int) -> dict:
+    """Config overrides giving exactly ``n_units`` scanned units, unrolled."""
+    if cfg.family == "hybrid":
+        return {"n_layers": n_units * cfg.hybrid_period, "scan_unroll": n_units}
+    if cfg.family == "encdec":
+        return {"n_layers": n_units, "n_enc_layers": n_units, "scan_unroll": n_units}
+    return {"n_layers": cfg.first_dense + n_units, "scan_unroll": n_units}
+
+
+def _compile_cell(cfg, shape_name: str, mesh):
+    """Lower+compile one step; returns (compiled, lower_s, compile_s)."""
+    model = Model(cfg)
+    fn, args, in_sh, out_sh = build_step(model, shape_name, mesh)
+    jit_kw = {"in_shardings": in_sh}
+    if out_sh is not None:
+        jit_kw["out_shardings"] = out_sh
+    t0 = time.time()
+    with mesh:
+        lowered = jax.jit(fn, **jit_kw).lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    return compiled, t_lower, t_compile
+
+
+def extrapolate_depth(arch: str, shape_name: str, mesh, *, depths=(1, 2),
+                      extra_cfg: dict | None = None) -> dict:
+    """Per-device bytes / collective bytes at full depth via a linear fit over
+    two shallow UNROLLED compiles (XLA counts rolled scan bodies once — see
+    utils/jaxpr_flops.py; unrolling shallow depths and fitting
+    C(L) = a + b*L recovers the true full-depth totals for homogeneous
+    stacks)."""
+    cfg = get_config(arch, **(extra_cfg or {}))
+    pts = []
+    for L in depths:
+        cfg_l = get_config(arch, **(extra_cfg or {}), **_depth_override(cfg, L))
+        compiled, _, _ = _compile_cell(cfg_l, shape_name, mesh)
+        cost = compiled.cost_analysis()
+        coll = hlolib.parse_collectives(compiled.as_text())
+        pts.append({"L": L,
+                    "flops": float(cost.get("flops", 0.0)),
+                    "bytes": float(cost.get("bytes accessed", 0.0)),
+                    "coll": float(coll.total_bytes),
+                    "coll_detail": coll.summary()})
+    L1, L2 = pts[0]["L"], pts[1]["L"]
+    full_units = cfg.n_units if cfg.family != "encdec" else cfg.n_layers
+    out = {"depths": depths, "full_units": full_units, "points": pts}
+    for k in ("flops", "bytes", "coll"):
+        b = (pts[1][k] - pts[0][k]) / (L2 - L1)
+        a = pts[0][k] - b * L1
+        out[f"{k}_per_device_extrap"] = a + b * full_units
+        out[f"{k}_per_unit"] = b
+        out[f"{k}_outside"] = a
+    return out
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool, verbose: bool = True,
+             extra_cfg: dict | None = None, extrapolate: bool = False) -> dict:
+    cfg = get_config(arch, **(extra_cfg or {}))
+    ok, why = shape_applicable(cfg, shape_name)
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16"}
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        return rec
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model = Model(cfg)
+    t0 = time.time()
+    try:
+        fn, args, in_sh, out_sh = build_step(model, shape_name, mesh)
+        jit_kw = {"in_shardings": in_sh}
+        if out_sh is not None:
+            jit_kw["out_shardings"] = out_sh
+        with mesh:
+            lowered = jax.jit(fn, **jit_kw).lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+        hlo_text = compiled.as_text()
+        coll = hlolib.parse_collectives(hlo_text)
+        n_dev = mesh.devices.size
+        rec.update(
+            status="ok",
+            n_devices=int(n_dev),
+            lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            flops_per_device=float(cost.get("flops", 0.0)),
+            bytes_per_device=float(cost.get("bytes accessed", 0.0)),
+            collective_bytes_per_device=float(coll.total_bytes),
+            collective_detail=coll.summary(),
+            utilization_ratio=None,
+        )
+        if mem is not None:
+            rec["memory"] = {
+                "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+                "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+                "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+                "generated_code_bytes": int(getattr(mem, "generated_code_size_in_bytes", 0)),
+            }
+        # model-level FLOPs for the useful-compute ratio
+        spec = SHAPES[shape_name]
+        n_active = model.active_params()
+        if spec.kind == "train":
+            model_flops = 6.0 * n_active * spec.seq_len * spec.global_batch
+        elif spec.kind == "prefill":
+            model_flops = 2.0 * n_active * spec.seq_len * spec.global_batch
+        else:
+            model_flops = 2.0 * n_active * spec.global_batch
+        rec["model_flops"] = float(model_flops)
+        rec["n_active_params"] = float(n_active)
+        # exact executed FLOPs from the jaxpr (scan/remat aware), global
+        try:
+            rec["jaxpr_flops_global"] = float(flops_of_fn(fn, *args))
+        except Exception as e:  # noqa: BLE001
+            rec["jaxpr_flops_global"] = None
+            rec["jaxpr_flops_error"] = str(e)
+        if extrapolate:
+            try:
+                rec["extrap"] = extrapolate_depth(arch, shape_name, mesh,
+                                                  extra_cfg=extra_cfg)
+            except Exception as e:  # noqa: BLE001
+                rec["extrap_error"] = f"{type(e).__name__}: {e}"
+        if verbose:
+            print(f"[dryrun] {arch} x {shape_name} x {rec['mesh']}: OK "
+                  f"(lower {t_lower:.0f}s compile {t_compile:.0f}s, "
+                  f"{rec['flops_per_device']:.3g} flops/dev, "
+                  f"coll {coll.total_bytes/1e6:.1f} MB/dev)")
+            if mem is not None:
+                print(f"  memory_analysis: {rec['memory']}")
+    except Exception as e:  # noqa: BLE001 — report, don't crash the sweep
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+        if verbose:
+            print(f"[dryrun] {arch} x {shape_name} x {rec['mesh']}: FAILED {e}")
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None, help="append JSONL records here")
+    ap.add_argument("--extrapolate", action="store_true",
+                    help="also run shallow unrolled compiles for exact "
+                         "byte/collective extrapolation")
+    args = ap.parse_args(argv)
+
+    archs = list(ARCHS) if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    records = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                rec = run_cell(arch, shape, multi_pod=mp,
+                               extrapolate=args.extrapolate and not mp)
+                records.append(rec)
+                if args.out:
+                    with open(args.out, "a") as f:
+                        f.write(json.dumps(rec) + "\n")
+    n_ok = sum(r["status"] == "ok" for r in records)
+    n_skip = sum(r["status"] == "skipped" for r in records)
+    n_err = sum(r["status"] == "error" for r in records)
+    print(f"[dryrun] done: {n_ok} ok, {n_skip} skipped, {n_err} errors")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,26 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant: importing this module never touches
+jax device state (the dry-run sets XLA_FLAGS before any jax import; tests
+and benches see the real single device).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips/pod ("data","model"); 2 pods -> (2,16,16) with the
+    leading "pod" axis folded into data parallelism."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int | None = None):
+    """Mesh over whatever devices exist (CPU tests, small runs)."""
+    n = len(jax.devices())
+    m = model or 1
+    while n % m:
+        m -= 1
+    return jax.make_mesh((n // m, m), ("data", "model"))

@@ -1,0 +1,70 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+On this CPU container use ``--reduced`` (small same-family config); on a real
+pod the same entry point shards the full config over the production mesh.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import reduced
+from ..data.pipeline import pipeline_for
+from ..models.registry import Model, get_config
+from ..sharding import rules as shrules
+from ..train.optimizer import OptimizerConfig
+from ..train.trainer import TrainLoop, TrainLoopConfig
+from .mesh import make_host_mesh
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--schedule", default="wsd", choices=["wsd", "cosine", "const"])
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-resume", action="store_true")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    model = Model(cfg)
+    print(f"[launch] {cfg.name} ({cfg.family}): "
+          f"{model.total_params()/1e6:.1f}M params, "
+          f"{model.active_params()/1e6:.1f}M active/token")
+
+    mesh = make_host_mesh(model=args.model_parallel)
+    print(f"[launch] mesh {dict(zip(mesh.axis_names, mesh.devices.shape))}")
+
+    pipe = pipeline_for(cfg, shape_batch=args.batch, seq_len=args.seq, seed=args.seed)
+    opt_cfg = OptimizerConfig(lr=args.lr, schedule=args.schedule,
+                              warmup_steps=max(1, args.steps // 10),
+                              total_steps=args.steps)
+    loop_cfg = TrainLoopConfig(total_steps=args.steps, log_every=args.log_every,
+                               ckpt_every=args.ckpt_every, ckpt_dir=args.ckpt_dir)
+
+    with mesh:
+        params = model.init(jax.random.PRNGKey(args.seed))
+        pshard = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                              shrules.param_specs(params, mesh),
+                              is_leaf=lambda x: isinstance(x, P))
+        params = jax.device_put(params, pshard)
+        loop = TrainLoop(model, opt_cfg, loop_cfg, pipe)
+        loop.run(params=params, resume=not args.no_resume, seed=args.seed)
+    print("[launch] done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from . import (attention, frontends, layers, mamba2, moe, registry, sparse,  # noqa: F401
+               transformer, whisper)

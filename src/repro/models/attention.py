@@ -1,0 +1,361 @@
+"""Attention variants: GQA (MHA/MQA as special cases), qk-norm, sliding
+window, cross-attention, and DeepSeek-style MLA (multi-head latent attention).
+
+Both execution regimes of the paper's bandwidth analysis appear here:
+
+* **train/prefill** — chunked (flash-style, online-softmax) attention: scan
+  over query chunks with an inner scan over KV chunks, never materializing
+  the (S, S) score matrix.  Compute-bound at large S.
+* **decode** — one query token against a long KV cache: a pure
+  matrix-*vector* pipeline, bandwidth-bound exactly like the paper's SpMV
+  (every cached byte read once per token, ~2 Flops per cached element).
+
+MLA stores the compressed latent (kv_lora + rope_dim per token) in the
+cache and uses the *absorbed* formulation at decode: the up-projections are
+folded into the query/output transforms so attention runs directly against
+the latent — an algebraic re-association that cuts decode cache traffic by
+~(2*H*hd)/(kv_lora+rope) ≈ 7x for the lite config; the paper's "reduce the
+algorithmic balance" move applied to attention.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .layers import NEG_INF, apply_rope, dense_init, dense_shape, qk_norm_apply
+
+# ---------------------------------------------------------------------------
+# config
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    rope_theta: float = 10000.0
+    qk_norm: bool = False
+    window: int | None = None          # sliding-window size (None = full)
+    softmax_scale: float | None = None
+
+    @property
+    def scale(self) -> float:
+        return self.softmax_scale if self.softmax_scale else self.head_dim ** -0.5
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    d_model: int
+    n_heads: int
+    kv_lora: int = 512
+    rope_dim: int = 64
+    nope_dim: int = 128
+    v_dim: int = 128
+    rope_theta: float = 10000.0
+
+    @property
+    def scale(self) -> float:
+        return (self.nope_dim + self.rope_dim) ** -0.5
+
+
+# ---------------------------------------------------------------------------
+# GQA params
+# ---------------------------------------------------------------------------
+
+
+def gqa_init(key, cfg: AttnConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    D, H, K, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    p = {
+        "wq": dense_init(ks[0], D, H * hd, dtype)["w"],
+        "wk": dense_init(ks[1], D, K * hd, dtype)["w"],
+        "wv": dense_init(ks[2], D, K * hd, dtype)["w"],
+        "wo": dense_init(ks[3], H * hd, D, dtype)["w"],
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def gqa_shape(cfg: AttnConfig, dtype=jnp.float32):
+    D, H, K, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    p = {
+        "wq": jax.ShapeDtypeStruct((D, H * hd), dtype),
+        "wk": jax.ShapeDtypeStruct((D, K * hd), dtype),
+        "wv": jax.ShapeDtypeStruct((D, K * hd), dtype),
+        "wo": jax.ShapeDtypeStruct((H * hd, D), dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jax.ShapeDtypeStruct((hd,), dtype)
+        p["k_norm"] = jax.ShapeDtypeStruct((hd,), dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# chunked (flash-style) attention — train / prefill
+# ---------------------------------------------------------------------------
+
+
+def _chunk_mask(qpos, kpos, causal: bool, window: int | None):
+    """(qc, kc) additive mask from absolute positions."""
+    d = qpos[:, None] - kpos[None, :]
+    ok = jnp.ones(d.shape, bool)
+    if causal:
+        ok &= d >= 0
+    if window is not None:
+        ok &= d < window
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def flash_attention(
+    q: jnp.ndarray,  # (B, Sq, H, hd)
+    k: jnp.ndarray,  # (B, Sk, K, hd)
+    v: jnp.ndarray,  # (B, Sk, K, vd)
+    *,
+    scale: float,
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: int = 0,
+    q_chunk: int = 1024,
+    k_chunk: int = 1024,
+) -> jnp.ndarray:
+    B, Sq, H, hd = q.shape
+    _, Sk, K, vd = v.shape
+    G = H // K
+    qc = min(q_chunk, Sq)
+    kc = min(k_chunk, Sk)
+    assert Sq % qc == 0 and Sk % kc == 0, (Sq, qc, Sk, kc)
+    nq, nk = Sq // qc, Sk // kc
+    qs = q.reshape(B, nq, qc, K, G, hd).transpose(1, 0, 2, 3, 4, 5)  # (nq,B,qc,K,G,hd)
+    ks = k.reshape(B, nk, kc, K, hd).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(B, nk, kc, K, vd).transpose(1, 0, 2, 3, 4)
+
+    def q_body(_, qblk_i):
+        qblk, iq = qblk_i
+        qpos = q_offset + iq * qc + jnp.arange(qc)
+
+        def kv_body(carry, kblk_i):
+            m, l, acc = carry
+            kblk, vblk, ik = kblk_i
+            kpos = ik * kc + jnp.arange(kc)
+            s = jnp.einsum(
+                "bqkgd,bskd->bqkgs", qblk, kblk, preferred_element_type=jnp.float32
+            ) * scale
+            s = s + _chunk_mask(qpos, kpos, causal, window)[None, :, None, None, :]
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bqkgs,bskd->bqkgd", p.astype(vblk.dtype), vblk,
+                preferred_element_type=jnp.float32,
+            )
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, qc, K, G), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, qc, K, G), jnp.float32)
+        a0 = jnp.zeros((B, qc, K, G, vd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_body, (m0, l0, a0), (ks, vs, jnp.arange(nk)))
+        out = acc / jnp.maximum(l[..., None], 1e-20)
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_body, None, (qs, jnp.arange(nq)))
+    # (nq, B, qc, K, G, vd) -> (B, Sq, H, vd)
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, K * G, vd)
+    return out
+
+
+def decode_attention(
+    q: jnp.ndarray,      # (B, 1, H, hd)
+    k_cache: jnp.ndarray,  # (B, S, K, hd)
+    v_cache: jnp.ndarray,  # (B, S, K, vd)
+    pos: jnp.ndarray,    # () current position (number of valid cache slots - 1)
+    *,
+    scale: float,
+    window: int | None = None,
+) -> jnp.ndarray:
+    """One-token attention against the cache: the bandwidth-bound MVM."""
+    B, S, K, hd = k_cache.shape
+    H = q.shape[2]
+    G = H // K
+    qg = q.reshape(B, K, G, hd)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    kpos = jnp.arange(S)
+    ok = kpos <= pos
+    if window is not None:
+        ok &= kpos > pos - window
+    s = jnp.where(ok[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, v_cache.shape[-1]).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA apply (train / prefill / decode / cross)
+# ---------------------------------------------------------------------------
+
+
+def gqa_apply(
+    p,
+    x: jnp.ndarray,                # (B, S, D)
+    cfg: AttnConfig,
+    positions: jnp.ndarray,        # (S,) absolute positions of x
+    *,
+    causal: bool = True,
+    cache: dict | None = None,     # {"k": (B, Smax, K, hd), "v": ...}
+    cache_pos: jnp.ndarray | None = None,  # () write offset (decode/prefill)
+    kv_input: jnp.ndarray | None = None,   # cross-attn: encoder states (B, Se, D)
+    use_rope: bool = True,
+    q_chunk: int = 1024,
+    k_chunk: int = 1024,
+    compute_dtype=jnp.bfloat16,
+):
+    """Returns (out (B,S,D), new_cache)."""
+    B, S, D = x.shape
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    xc = x.astype(compute_dtype)
+    q = (xc @ p["wq"].astype(compute_dtype)).reshape(B, S, H, hd)
+    kv_src = xc if kv_input is None else kv_input.astype(compute_dtype)
+    k = (kv_src @ p["wk"].astype(compute_dtype)).reshape(B, -1, K, hd)
+    v = (kv_src @ p["wv"].astype(compute_dtype)).reshape(B, -1, K, hd)
+    if cfg.qk_norm:
+        q = qk_norm_apply(p["q_norm"], q)
+        k = qk_norm_apply(p["k_norm"], k)
+    if use_rope and kv_input is None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    elif use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+
+    new_cache = None
+    if cache is not None:
+        wp = cache_pos if cache_pos is not None else jnp.int32(0)
+        k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), wp, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), wp, axis=1)
+        new_cache = {"k": k_cache, "v": v_cache}
+        if S == 1:  # decode step
+            out = decode_attention(q, k_cache.astype(compute_dtype),
+                                   v_cache.astype(compute_dtype), wp,
+                                   scale=cfg.scale, window=cfg.window)
+        else:  # prefill: attend within the freshly written prefix
+            out = flash_attention(q, k, v, scale=cfg.scale, causal=causal,
+                                  window=cfg.window, q_chunk=q_chunk, k_chunk=k_chunk)
+    else:
+        out = flash_attention(q, k, v, scale=cfg.scale, causal=causal,
+                              window=cfg.window, q_chunk=q_chunk, k_chunk=k_chunk)
+
+    y = out.reshape(B, S, H * hd) @ p["wo"].astype(compute_dtype)
+    return y.astype(x.dtype), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2): latent-compressed KV
+# ---------------------------------------------------------------------------
+
+
+def mla_init(key, cfg: MLAConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+    D, H = cfg.d_model, cfg.n_heads
+    qd = cfg.nope_dim + cfg.rope_dim
+    return {
+        "wq": dense_init(ks[0], D, H * qd, dtype)["w"],
+        "w_dkv": dense_init(ks[1], D, cfg.kv_lora, dtype)["w"],
+        "w_kr": dense_init(ks[2], D, cfg.rope_dim, dtype)["w"],
+        "kv_norm": jnp.ones((cfg.kv_lora,), dtype),
+        "w_uk": dense_init(ks[3], cfg.kv_lora, H * cfg.nope_dim, dtype)["w"],
+        "w_uv": dense_init(ks[4], cfg.kv_lora, H * cfg.v_dim, dtype)["w"],
+        "wo": dense_init(ks[5], H * cfg.v_dim, D, dtype)["w"],
+    }
+
+
+def mla_shape(cfg: MLAConfig, dtype=jnp.float32):
+    D, H = cfg.d_model, cfg.n_heads
+    qd = cfg.nope_dim + cfg.rope_dim
+    S = jax.ShapeDtypeStruct
+    return {
+        "wq": S((D, H * qd), dtype),
+        "w_dkv": S((D, cfg.kv_lora), dtype),
+        "w_kr": S((D, cfg.rope_dim), dtype),
+        "kv_norm": S((cfg.kv_lora,), dtype),
+        "w_uk": S((cfg.kv_lora, H * cfg.nope_dim), dtype),
+        "w_uv": S((cfg.kv_lora, H * cfg.v_dim), dtype),
+        "wo": S((H * cfg.v_dim, D), dtype),
+    }
+
+
+def _mla_latent(p, xc, positions, cfg: MLAConfig):
+    """Compressed latent c_kv (B,S,kv_lora) and shared rope key (B,S,rope)."""
+    c_kv = xc @ p["w_dkv"].astype(xc.dtype)
+    c_kv = qk_norm_apply(p["kv_norm"], c_kv)
+    k_r = (xc @ p["w_kr"].astype(xc.dtype)).reshape(*xc.shape[:2], 1, cfg.rope_dim)
+    k_r = apply_rope(k_r, positions, cfg.rope_theta)
+    return c_kv, k_r[:, :, 0, :]
+
+
+def mla_apply(
+    p,
+    x: jnp.ndarray,
+    cfg: MLAConfig,
+    positions: jnp.ndarray,
+    *,
+    cache: dict | None = None,      # {"c_kv": (B,Smax,kv_lora), "k_rope": (B,Smax,rope)}
+    cache_pos: jnp.ndarray | None = None,
+    q_chunk: int = 1024,
+    k_chunk: int = 1024,
+    compute_dtype=jnp.bfloat16,
+):
+    B, S, D = x.shape
+    H = cfg.n_heads
+    xc = x.astype(compute_dtype)
+    q = (xc @ p["wq"].astype(compute_dtype)).reshape(B, S, H, cfg.nope_dim + cfg.rope_dim)
+    q_nope, q_rope = q[..., : cfg.nope_dim], q[..., cfg.nope_dim :]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    c_kv, k_rope = _mla_latent(p, xc, positions, cfg)
+
+    new_cache = None
+    if cache is not None:
+        wp = cache_pos if cache_pos is not None else jnp.int32(0)
+        c_all = jax.lax.dynamic_update_slice_in_dim(cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), wp, axis=1)
+        kr_all = jax.lax.dynamic_update_slice_in_dim(cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), wp, axis=1)
+        new_cache = {"c_kv": c_all, "k_rope": kr_all}
+
+    if cache is not None and S == 1:
+        # --- absorbed decode: attention directly on the latent cache ---
+        wuk = p["w_uk"].astype(compute_dtype).reshape(cfg.kv_lora, H, cfg.nope_dim)
+        # fold w_uk into the query: q_lat (B,H,lora) attends the latent directly
+        q_lat = jnp.einsum("bhd,lhd->bhl", q_nope[:, 0], wuk)
+        c = new_cache["c_kv"].astype(compute_dtype)     # (B, Smax, lora)
+        kr = new_cache["k_rope"].astype(compute_dtype)  # (B, Smax, rope)
+        s = (jnp.einsum("bhl,bsl->bhs", q_lat, c, preferred_element_type=jnp.float32)
+             + jnp.einsum("bhr,bsr->bhs", q_rope[:, 0], kr, preferred_element_type=jnp.float32)
+             ) * cfg.scale
+        kpos = jnp.arange(c.shape[1])
+        s = jnp.where((kpos <= wp)[None, None, :], s, NEG_INF)
+        pr = jax.nn.softmax(s, axis=-1)
+        o_lat = jnp.einsum("bhs,bsl->bhl", pr.astype(compute_dtype), c,
+                           preferred_element_type=jnp.float32).astype(compute_dtype)
+        wuv = p["w_uv"].astype(compute_dtype).reshape(cfg.kv_lora, H, cfg.v_dim)
+        out = jnp.einsum("bhl,lhv->bhv", o_lat, wuv)
+        out = out.reshape(B, 1, H * cfg.v_dim)
+    else:
+        # --- train/prefill: materialize per-head k/v from the latent ---
+        src_c = c_kv if cache is None else c_kv
+        k_nope = (src_c @ p["w_uk"].astype(compute_dtype)).reshape(B, S, H, cfg.nope_dim)
+        v = (src_c @ p["w_uv"].astype(compute_dtype)).reshape(B, S, H, cfg.v_dim)
+        k_full = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, S, H, cfg.rope_dim))], axis=-1)
+        q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+        out = flash_attention(q_full, k_full, v, scale=cfg.scale, causal=True,
+                              q_chunk=q_chunk, k_chunk=k_chunk)
+        out = out.reshape(B, S, H * cfg.v_dim)
+
+    y = out @ p["wo"].astype(compute_dtype)
+    return y.astype(x.dtype), new_cache

@@ -1,0 +1,34 @@
+"""Modality frontends — STUBS per the assignment.
+
+"``[audio]``/``[vlm]`` entries specify the transformer BACKBONE only; the
+modality frontend is a STUB (``input_specs()`` provides precomputed
+frame/patch embeddings)."
+
+These helpers generate deterministic fake embeddings with the right shapes
+and dtypes for smoke tests and examples, and document what the real
+frontends would compute.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def vit_patch_embeddings_stub(key, batch: int, seq: int, d_model: int,
+                              dtype=jnp.bfloat16) -> jnp.ndarray:
+    """Pixtral: real path = ViT over image patches (conv patchify + RoPE-2D
+    blocks) producing one embedding per patch interleaved with text.  Stub:
+    unit-variance random embeddings of shape (B, S, D)."""
+    return jax.random.normal(key, (batch, seq, d_model), dtype)
+
+
+def audio_frame_embeddings_stub(key, batch: int, frames: int, d_model: int,
+                                dtype=jnp.bfloat16) -> jnp.ndarray:
+    """Whisper: real path = log-mel spectrogram -> two strided Conv1d + GELU
+    (stride 2 => frames = samples/320) + sinusoidal positions.  Stub: random
+    frame embeddings of shape (B, frames, D)."""
+    return jax.random.normal(key, (batch, frames, d_model), dtype)
+
+
+def embeds_spec(batch: int, seq: int, d_model: int, dtype=jnp.bfloat16):
+    return jax.ShapeDtypeStruct((batch, seq, d_model), dtype)

@@ -1,0 +1,162 @@
+"""Shared building blocks for all model families.
+
+Functional style: params are nested dicts of jnp arrays; every block has an
+``init_*`` (key -> params) and an ``apply`` function.  Parameters are kept in
+``param_dtype`` (fp32 by default) and cast to ``compute_dtype`` (bf16) on
+entry to each block — the standard mixed-precision policy.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32, scale: float | None = None):
+    s = scale if scale is not None else 1.0 / np.sqrt(d_in)
+    return {"w": jax.random.normal(key, (d_in, d_out), dtype) * s}
+
+
+def dense_shape(d_in: int, d_out: int, dtype=jnp.float32):
+    return {"w": jax.ShapeDtypeStruct((d_in, d_out), dtype)}
+
+
+def apply_dense(p, x, compute_dtype=jnp.bfloat16):
+    return x.astype(compute_dtype) @ p["w"].astype(compute_dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32):
+    return {"table": jax.random.normal(key, (vocab, d), dtype) * 0.02}
+
+
+def apply_embed(p, tokens, compute_dtype=jnp.bfloat16):
+    return jnp.take(p["table"], tokens, axis=0).astype(compute_dtype)
+
+
+def apply_unembed(p, x, compute_dtype=jnp.bfloat16):
+    """Logits in fp32 (softmax stability)."""
+    return jnp.einsum(
+        "...d,vd->...v", x.astype(compute_dtype), p["table"].astype(compute_dtype),
+        preferred_element_type=jnp.float32,
+    )
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def apply_rmsnorm(p, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def qk_norm_apply(scale, x, eps: float = 1e-6):
+    """Per-head RMS norm on q/k (Qwen3-style); x: (..., n_heads, head_dim)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embedding
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float = 10000.0) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float64) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10000.0):
+    """x: (..., seq, n_heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_frequencies(hd, theta), dtype=jnp.float32)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# gated MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, d_model: int, d_ff: int, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi_gate": dense_init(k1, d_model, d_ff, dtype)["w"],
+        "wi_up": dense_init(k2, d_model, d_ff, dtype)["w"],
+        "wo": dense_init(k3, d_ff, d_model, dtype)["w"],
+    }
+
+
+def mlp_shape(d_model: int, d_ff: int, dtype=jnp.float32):
+    return {
+        "wi_gate": jax.ShapeDtypeStruct((d_model, d_ff), dtype),
+        "wi_up": jax.ShapeDtypeStruct((d_model, d_ff), dtype),
+        "wo": jax.ShapeDtypeStruct((d_ff, d_model), dtype),
+    }
+
+
+def apply_mlp(p, x, act: str = "silu", compute_dtype=jnp.bfloat16):
+    xc = x.astype(compute_dtype)
+    g = xc @ p["wi_gate"].astype(compute_dtype)
+    u = xc @ p["wi_up"].astype(compute_dtype)
+    if act == "gelu":
+        g = jax.nn.gelu(g)
+    else:
+        g = jax.nn.silu(g)
+    return (g * u) @ p["wo"].astype(compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+
+def softmax_cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                          ignore_id: int = -1, z_loss: float = 0.0):
+    """Mean CE over non-ignored positions; logits fp32 (B, S, V)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None].clip(0), axis=-1)[..., 0]
+    nll = lse - ll
+    if z_loss:
+        nll = nll + z_loss * jnp.square(lse)
+    mask = (labels != ignore_id).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(1.0, jnp.sum(mask))
+
+
+# ---------------------------------------------------------------------------
+# misc
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e9
+
+
+def causal_mask(s_q: int, s_k: int, q_offset=0) -> jnp.ndarray:
+    """(s_q, s_k) additive mask; q_offset shifts query positions (decode)."""
+    qi = jnp.arange(s_q)[:, None] + q_offset
+    kj = jnp.arange(s_k)[None, :]
+    return jnp.where(kj <= qi, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def sliding_mask(s_q: int, s_k: int, window: int, q_offset=0) -> jnp.ndarray:
+    qi = jnp.arange(s_q)[:, None] + q_offset
+    kj = jnp.arange(s_k)[None, :]
+    ok = (kj <= qi) & (kj > qi - window)
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)

@@ -1,0 +1,241 @@
+"""Mamba-2 (SSD — state-space duality) layer, chunked for the MXU.
+
+Train/prefill uses the *block* form of SSD: the sequence is cut into chunks
+of Q tokens; within a chunk the recurrence is expanded into a (Q, Q) masked
+"attention" computed on the MXU, and between chunks only the (heads, hd, N)
+state is carried through a lax.scan.  This is the TPU-friendly formulation —
+long vectorizable inner loops, exactly the property the paper prizes in JDS
+("large loop lengths ... much better suited for vector processors").
+
+Decode is the pure recurrence: h <- a*h + B x; y = C.h + D*x — a
+bandwidth-bound state update (every state byte touched per token), the
+attention-free sibling of the decode-MVM regime.
+
+Simplifications vs the reference CUDA implementation (documented):
+ngroups=1, no sequence parallelism inside the layer, real (not complex) A.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    d_model: int
+    d_state: int = 128
+    head_dim: int = 64
+    expand: int = 2
+    d_conv: int = 4
+    chunk: int = 256
+    dt_min: float = 0.001
+    dt_max: float = 0.1
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.d_state  # x + B + C streams
+
+
+def ssm_init(key, cfg: SSMConfig, dtype=jnp.float32):
+    # NOTE: the z/x/BC/dt projections (and the depthwise conv) are stored as
+    # SEPARATE leaves, not one fused in_proj.  A fused projection's stream
+    # boundaries (di, 2di, ...) never align with a 16-way shard grid, so
+    # every jnp.split of its sharded output costs halo collective-permutes —
+    # measured as the dominant collective term of the mamba/jamba baselines
+    # (EXPERIMENTS.md §Perf H2 iter 4).  Depthwise conv is per-channel, so
+    # splitting it per stream is mathematically identical.
+    ks = jax.random.split(key, 7)
+    di, N, H = cfg.d_inner, cfg.d_state, cfg.n_heads
+    import numpy as np
+    dt = np.exp(np.random.RandomState(0).uniform(
+        np.log(cfg.dt_min), np.log(cfg.dt_max), H)).astype(np.float32)
+    return {
+        "z_proj": dense_init(ks[0], cfg.d_model, di, dtype)["w"],
+        "x_proj": dense_init(ks[1], cfg.d_model, di, dtype)["w"],
+        "bc_proj": dense_init(ks[2], cfg.d_model, 2 * N, dtype)["w"],
+        "dt_proj": dense_init(ks[3], cfg.d_model, H, dtype)["w"],
+        "conv_x_w": jax.random.normal(ks[4], (di, cfg.d_conv), dtype) * 0.2,
+        "conv_x_b": jnp.zeros((di,), dtype),
+        "conv_bc_w": jax.random.normal(ks[5], (2 * N, cfg.d_conv), dtype) * 0.2,
+        "conv_bc_b": jnp.zeros((2 * N,), dtype),
+        "A_log": jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)).astype(dtype),
+        "D": jnp.ones((H,), dtype),
+        "dt_bias": jnp.asarray(dt + np.log(-np.expm1(-dt)), dtype),  # inv softplus
+        "norm": jnp.ones((di,), dtype),
+        "out_proj": dense_init(ks[6], di, cfg.d_model, dtype)["w"],
+    }
+
+
+def ssm_shape(cfg: SSMConfig, dtype=jnp.float32):
+    S = jax.ShapeDtypeStruct
+    di, N, H = cfg.d_inner, cfg.d_state, cfg.n_heads
+    return {
+        "z_proj": S((cfg.d_model, di), dtype),
+        "x_proj": S((cfg.d_model, di), dtype),
+        "bc_proj": S((cfg.d_model, 2 * N), dtype),
+        "dt_proj": S((cfg.d_model, H), dtype),
+        "conv_x_w": S((di, cfg.d_conv), dtype),
+        "conv_x_b": S((di,), dtype),
+        "conv_bc_w": S((2 * N, cfg.d_conv), dtype),
+        "conv_bc_b": S((2 * N,), dtype),
+        "A_log": S((H,), dtype),
+        "D": S((H,), dtype),
+        "dt_bias": S((H,), dtype),
+        "norm": S((di,), dtype),
+        "out_proj": S((di, cfg.d_model), dtype),
+    }
+
+
+def _gated_rmsnorm(scale, y, z, eps=1e-6):
+    yf = (y * jax.nn.silu(z.astype(jnp.float32))).astype(jnp.float32)
+    var = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    return (yf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(y.dtype)
+
+
+def _split_proj(p, x, cfg: SSMConfig, compute_dtype):
+    xc = x.astype(compute_dtype)
+    z = xc @ p["z_proj"].astype(compute_dtype)     # (B,S,di)
+    xs = xc @ p["x_proj"].astype(compute_dtype)    # (B,S,di)
+    bc = xc @ p["bc_proj"].astype(compute_dtype)   # (B,S,2N)
+    dt = xc @ p["dt_proj"].astype(compute_dtype)   # (B,S,H)
+    return z, xs, bc, dt
+
+
+def _causal_conv_one(w, b, xbc, d_conv: int, conv_state=None):
+    """Depthwise causal conv over seq; returns (out, new_conv_state)."""
+    B, S, Cd = xbc.shape
+    w = w.astype(xbc.dtype)  # (Cd, d_conv)
+    if conv_state is None:
+        hist = jnp.zeros((B, d_conv - 1, Cd), xbc.dtype)
+    else:
+        hist = conv_state
+    xin = jnp.concatenate([hist, xbc], axis=1)  # (B, S + d_conv - 1, Cd)
+    out = sum(
+        xin[:, i : i + S, :] * w[:, i][None, None, :] for i in range(d_conv)
+    ) + b.astype(xbc.dtype)
+    new_state = xin[:, -(d_conv - 1):, :] if d_conv > 1 else hist
+    return jax.nn.silu(out), new_state
+
+
+def _ssd_chunked(xh, Bm, Cm, dt_a, cfg: SSMConfig, h0=None):
+    """Chunked SSD scan.
+
+    xh:  (B, S, H, hd) inputs per head
+    Bm:  (B, S, N) input matrix (ngroups=1, shared across heads)
+    Cm:  (B, S, N) output matrix
+    dt_a: tuple (dt (B,S,H) fp32, a (B,S,H) fp32 = -exp(A_log)*dt)
+    Returns (y (B,S,H,hd), h_final (B,H,hd,N)).
+    """
+    B, S, H, hd = xh.shape
+    N = Bm.shape[-1]
+    Q = min(cfg.chunk, S)
+    S_orig = S
+    if S % Q:  # pad to a chunk multiple; pads are causal-inert (B=0, x=0)
+        pad = Q - S % Q
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        dt_a = (jnp.pad(dt_a[0], ((0, 0), (0, pad), (0, 0))),
+                jnp.pad(dt_a[1], ((0, 0), (0, pad), (0, 0))))
+        S = S + pad
+    nq = S // Q
+    dt, a = dt_a
+    xq = xh.reshape(B, nq, Q, H, hd)
+    Bq = Bm.reshape(B, nq, Q, N)
+    Cq = Cm.reshape(B, nq, Q, N)
+    dtq = dt.reshape(B, nq, Q, H)
+    aq = a.reshape(B, nq, Q, H)
+
+    def chunk_body(h, inp):
+        xb, bb, cb, dtb, ab = inp  # (B,Q,H,hd), (B,Q,N), (B,Q,N), (B,Q,H), (B,Q,H)
+        cum = jnp.cumsum(ab, axis=1)                    # (B,Q,H) log-decay prefix
+        total = cum[:, -1:, :]                          # (B,1,H)
+        # intra-chunk: masked quadratic form on the MXU
+        rel = cum[:, :, None, :] - cum[:, None, :, :]   # (B,Q,Q,H) log decay i<-j
+        mask = jnp.tril(jnp.ones((Q, Q), bool))
+        decay = jnp.where(mask[None, :, :, None], jnp.exp(rel), 0.0)
+        scores = jnp.einsum("bqn,bsn->bqs", cb, bb)[:, :, :, None] * decay  # (B,Q,Q,H)
+        xdt = xb * dtb[..., None]                       # (B,Q,H,hd) dt-weighted input
+        y_intra = jnp.einsum("bqsh,bshd->bqhd", scores.astype(xb.dtype), xdt)
+        # inter-chunk: contribution of the carried state
+        y_inter = jnp.einsum("bqn,bhdn->bqhd", cb, h.astype(cb.dtype)) \
+            * jnp.exp(cum)[..., None].astype(xb.dtype)
+        # state update: h' = h * exp(total) + sum_t exp(total - cum_t) B_t (dt x)_t
+        w = jnp.exp(total - cum)                        # (B,Q,H)
+        h_new = h * jnp.exp(total)[:, 0, :, None, None].astype(h.dtype) + jnp.einsum(
+            "bqn,bqhd->bhdn", bb, (xdt * w[..., None]).astype(bb.dtype))
+        return h_new, y_intra + y_inter
+
+    if h0 is None:
+        h0 = jnp.zeros((B, H, hd, N), jnp.float32)
+    xs = (xq.transpose(1, 0, 2, 3, 4), Bq.transpose(1, 0, 2, 3),
+          Cq.transpose(1, 0, 2, 3), dtq.transpose(1, 0, 2, 3), aq.transpose(1, 0, 2, 3))
+    h_fin, ys = jax.lax.scan(chunk_body, h0, xs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, H, hd)
+    return y[:, :S_orig], h_fin
+
+
+def ssm_apply(p, x: jnp.ndarray, cfg: SSMConfig, *, cache: dict | None = None,
+              compute_dtype=jnp.bfloat16):
+    """x: (B, S, D).  cache = {"conv": (B, d_conv-1, conv_dim),
+    "ssm": (B, H, hd, N)} for decode (S == 1) / chunk-streaming prefill.
+    Returns (y, new_cache)."""
+    B, S, D = x.shape
+    di, N, H, hd = cfg.d_inner, cfg.d_state, cfg.n_heads, cfg.head_dim
+    z, xs, bc, dt_raw = _split_proj(p, x, cfg, compute_dtype)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))          # (H,)
+    a = dt * A[None, None, :]                              # (B,S,H) log decay
+
+    conv_x_state = cache["conv_x"] if cache is not None else None
+    conv_bc_state = cache["conv_bc"] if cache is not None else None
+    xin, new_conv_x = _causal_conv_one(p["conv_x_w"], p["conv_x_b"], xs,
+                                       cfg.d_conv, conv_x_state)
+    bc_c, new_conv_bc = _causal_conv_one(p["conv_bc_w"], p["conv_bc_b"], bc,
+                                         cfg.d_conv, conv_bc_state)
+    Bm, Cm = jnp.split(bc_c, [N], axis=-1)  # 2N sharded 16-way: aligned at N
+    xh = xin.reshape(B, S, H, hd)
+
+    if cache is not None and S == 1:
+        # pure recurrence
+        h = cache["ssm"]                                   # (B,H,hd,N) fp32
+        xdt = (xh[:, 0] * dt[:, 0, :, None]).astype(jnp.float32)  # (B,H,hd)
+        h_new = h * jnp.exp(a[:, 0])[:, :, None, None] + jnp.einsum(
+            "bn,bhd->bhdn", Bm[:, 0].astype(jnp.float32), xdt)
+        y = jnp.einsum("bn,bhdn->bhd", Cm[:, 0].astype(jnp.float32), h_new)
+        y = y[:, None].astype(compute_dtype)               # (B,1,H,hd)
+        y = y + p["D"].astype(compute_dtype)[None, None, :, None] * xh
+        new_cache = {"conv_x": new_conv_x, "conv_bc": new_conv_bc, "ssm": h_new}
+    else:
+        h0 = cache["ssm"] if cache is not None else None
+        y, h_fin = _ssd_chunked(xh, Bm.astype(jnp.float32), Cm.astype(jnp.float32),
+                                (dt, a), cfg, h0)
+        y = y.astype(compute_dtype) + p["D"].astype(compute_dtype)[None, None, :, None] * xh
+        new_cache = ({"conv_x": new_conv_x, "conv_bc": new_conv_bc, "ssm": h_fin}
+                     if cache is not None else None)
+
+    y = y.reshape(B, S, di)
+    y = _gated_rmsnorm(p["norm"], y, z)
+    out = y.astype(compute_dtype) @ p["out_proj"].astype(compute_dtype)
+    return out.astype(x.dtype), new_cache
+
+
+def ssm_cache_shape(cfg: SSMConfig, batch: int, dtype=jnp.bfloat16):
+    return {
+        "conv_x": jax.ShapeDtypeStruct((batch, cfg.d_conv - 1, cfg.d_inner), dtype),
+        "conv_bc": jax.ShapeDtypeStruct((batch, cfg.d_conv - 1, 2 * cfg.d_state), dtype),
+        "ssm": jax.ShapeDtypeStruct((batch, cfg.n_heads, cfg.head_dim, cfg.d_state),
+                                    jnp.float32),
+    }

@@ -1,0 +1,133 @@
+"""Model registry: a uniform API over all families.
+
+``get(name)`` returns a ``Model`` whose methods are what the trainer, the
+serving engine, and the dry-run consume:
+
+    init(key) / param_shapes()
+    loss(params, batch)                       -> (loss, metrics)
+    prefill(params, batch, max_len)           -> (logits, cache)
+    decode_step(params, cache, batch, pos)    -> (logits, cache)
+    cache_shape(batch_size, max_len)
+
+Configs register themselves via ``register`` at import (see repro.configs).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import transformer as T
+from . import whisper as W
+
+_REGISTRY: dict[str, Callable[[], "T.ModelConfig"]] = {}
+
+
+def register(name: str, cfg_fn: Callable[[], "T.ModelConfig"]):
+    _REGISTRY[name] = cfg_fn
+
+
+def names() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def get_config(name: str, **overrides) -> "T.ModelConfig":
+    import dataclasses as _dc
+
+    if name not in _REGISTRY:
+        # trigger config registration
+        import repro.configs  # noqa: F401
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {names()}")
+    cfg = _REGISTRY[name]()
+    # nested-config passthroughs (hillclimb levers)
+    mdg = overrides.pop("moe_dispatch_groups", None)
+    if mdg is not None and cfg.moe is not None:
+        cfg = _dc.replace(cfg, moe=_dc.replace(cfg.moe, dispatch_groups=int(mdg)))
+    mgw = overrides.pop("moe_gather_weights", None)
+    if mgw is not None and cfg.moe is not None:
+        cfg = _dc.replace(cfg, moe=_dc.replace(cfg.moe, gather_weights=bool(int(mgw))))
+    return _dc.replace(cfg, **overrides) if overrides else cfg
+
+
+@dataclass
+class Model:
+    cfg: T.ModelConfig
+
+    # --- params ---
+    def init(self, key):
+        if self.cfg.family == "encdec":
+            return W.encdec_init(key, self.cfg)
+        return T.lm_init(key, self.cfg)
+
+    def param_shapes(self):
+        if self.cfg.family == "encdec":
+            return W.encdec_param_shapes(self.cfg)
+        return T.lm_param_shapes(self.cfg)
+
+    # --- training ---
+    def loss(self, params, batch):
+        if self.cfg.family == "encdec":
+            return W.encdec_loss(params, self.cfg, batch)
+        return T.lm_loss(params, self.cfg, batch)
+
+    # --- serving ---
+    def cache_shape(self, batch_size: int, max_len: int):
+        if self.cfg.family == "encdec":
+            return W.encdec_cache_shape(self.cfg, batch_size, max_len)
+        return T.lm_cache_shape(self.cfg, batch_size, max_len)
+
+    def init_cache(self, batch_size: int, max_len: int):
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                            self.cache_shape(batch_size, max_len))
+
+    def prefill(self, params, batch, cache):
+        """batch: {"tokens"|"embeds"(+"enc_embeds")}; cache: zero-initialized
+        pytree of capacity max_len.  Returns (last-position logits, cache)."""
+        if self.cfg.family == "encdec":
+            enc_out = W.encode(params, self.cfg, batch["enc_embeds"])
+            logits, cache = W.decode(params, self.cfg, batch["tokens"], enc_out,
+                                     cache=cache, cache_pos=jnp.int32(0))
+            return logits[:, -1], {"dec": cache, "enc_out": enc_out}
+        inputs = batch["embeds"] if self.cfg.input_mode == "embeds" else batch["tokens"]
+        logits, cache, _ = T.lm_forward(params, self.cfg, inputs,
+                                        cache=cache, cache_pos=jnp.int32(0))
+        return logits[:, -1], cache
+
+    def decode_step(self, params, cache, token, pos):
+        """token: (B,) int32 (or (B,D) embeds); pos: () int32 write position.
+        Returns (logits (B,V), cache)."""
+        if self.cfg.family == "encdec":
+            logits, dec = W.decode(params, self.cfg, token[:, None],
+                                   cache["enc_out"], cache=cache["dec"],
+                                   cache_pos=pos)
+            return logits[:, -1], {"dec": dec, "enc_out": cache["enc_out"]}
+        if self.cfg.input_mode == "embeds":
+            inputs = token[:, None, :]
+        else:
+            inputs = token[:, None]
+        logits, cache, _ = T.lm_forward(params, self.cfg, inputs,
+                                        cache=cache, cache_pos=pos)
+        return logits[:, -1], cache
+
+    # --- accounting ---
+    def active_params(self) -> float:
+        if self.cfg.family == "encdec":
+            D = self.cfg.d_model
+            attn = D * (self.cfg.n_heads + 2 * self.cfg.n_kv_heads) * self.cfg.head_dim \
+                + self.cfg.n_heads * self.cfg.head_dim * D
+            mlp = 3 * D * self.cfg.d_ff
+            return (self.cfg.n_enc_layers * (attn + mlp)
+                    + self.cfg.n_layers * (2 * attn + mlp)
+                    + D * self.cfg.vocab)
+        return T.active_param_count(self.cfg)
+
+    def total_params(self) -> int:
+        from ..utils.tree import param_count
+        return param_count(self.param_shapes())
+
+
+def get(name: str, **overrides) -> Model:
+    return Model(get_config(name, **overrides))

@@ -1,0 +1,113 @@
+"""SparseLinear: weight matrices in the paper's storage formats.
+
+This is the paper's contribution applied to LM weights: any linear layer can
+store its (d_out, d_in) weight as BSR (MXU-aligned dense blocks) or SELL
+(unstructured), with the **format advisor** (core/perfmodel.py) choosing the
+scheme from the sparsity pattern — "a hint to the respective optimal storage
+scheme" — and the Pallas kernels executing it.
+
+At decode (batch of activations = a few vectors), a SparseLinear apply *is*
+the paper's SpMVM: bandwidth-bound streaming of val/col operands against a
+VMEM-resident activation.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import perfmodel as PM
+from ..core.formats import BSR, CSR, SELL, matrix_stats
+from ..kernels import ops as KOPS
+
+
+@dataclass
+class SparseLinear:
+    """y = x @ W^T with W stored sparse; W shape (d_out, d_in)."""
+
+    fmt: str                 # "bsr" | "sell"
+    matrix: object           # BSR or SELL container
+    d_in: int
+    d_out: int
+    density: float
+    _apply_fn: object = None
+
+    @staticmethod
+    def from_dense(w: np.ndarray, *, fmt: str = "auto",
+                   block_shape: tuple[int, int] = (8, 128),
+                   backend: str = "auto") -> "SparseLinear":
+        """w: (d_out, d_in) with zeros marking pruned weights."""
+        w = np.asarray(w)
+        d_out, d_in = w.shape
+        nnz = int((w != 0).sum())
+        density = nnz / w.size
+        if fmt == "auto":
+            fmt = advise_weight_format(w, block_shape)
+        if fmt == "bsr":
+            mat = BSR.from_dense(w, block_shape)
+            f = KOPS.make_bsr_spmm(mat, backend=backend)
+            def apply_fn(x2d):            # x2d: (d_in, B)
+                return f(x2d)
+        elif fmt == "sell":
+            csr = CSR.from_dense(w)
+            mat = SELL.from_csr(csr, C=8, sigma=256)
+            fs = KOPS.make_sell_spmv(mat, backend=backend)
+            def apply_fn(x2d):
+                return jax.vmap(fs, in_axes=1, out_axes=1)(x2d)
+        else:
+            raise ValueError(fmt)
+        return SparseLinear(fmt, mat, d_in, d_out, density, apply_fn)
+
+    def __call__(self, x: jnp.ndarray) -> jnp.ndarray:
+        """x: (..., d_in) -> (..., d_out)."""
+        lead = x.shape[:-1]
+        x2d = x.reshape(-1, self.d_in).T.astype(jnp.float32)   # (d_in, B)
+        y2d = self._apply_fn(x2d)                              # (d_out, B)
+        return y2d.T.reshape(*lead, self.d_out).astype(x.dtype)
+
+    def streamed_bytes(self, am: PM.AccessModel = PM.TPU_FP32) -> float:
+        return PM.spmv_streamed_bytes(self.matrix, am)
+
+
+def magnitude_prune(w: np.ndarray, density: float, *, structured: tuple[int, int] | None = None,
+                    seed: int = 0) -> np.ndarray:
+    """Keep the top-|density| fraction of weights (optionally whole blocks)."""
+    w = np.asarray(w).copy()
+    if structured:
+        bm, bn = structured
+        M, N = w.shape
+        score = np.abs(w).reshape(M // bm, bm, N // bn, bn).mean((1, 3))
+        k = max(1, int(score.size * density))
+        thr = np.partition(score.ravel(), -k)[-k]
+        mask = np.kron(score >= thr, np.ones((bm, bn), dtype=bool))
+        w[~mask] = 0.0
+    else:
+        k = max(1, int(w.size * density))
+        thr = np.partition(np.abs(w).ravel(), -k)[-k]
+        w[np.abs(w) < thr] = 0.0
+    return w
+
+
+def advise_weight_format(w: np.ndarray, block_shape: tuple[int, int]) -> str:
+    """Pick BSR when the pattern is block-friendly (low fill expansion),
+    SELL otherwise — the paper's advisor specialized to weights."""
+    bm, bn = block_shape
+    M, N = w.shape
+    if M % bm or N % bn:
+        return "sell"
+    tiles = (np.abs(w).reshape(M // bm, bm, N // bn, bn).max((1, 3)) > 0)
+    nnz = (w != 0).sum()
+    stored = tiles.sum() * bm * bn
+    fill_ratio = stored / max(1, nnz)
+    # BSR streams fill_ratio x the values but amortizes indices and runs on
+    # the MXU; the crossover from the balance model is ~2.5x fill
+    return "bsr" if fill_ratio <= 2.5 else "sell"
+
+
+def sparsity_report(w: np.ndarray, block_shape=(8, 128)) -> dict:
+    csr = CSR.from_dense(np.asarray(w))
+    st = matrix_stats(csr)
+    st["advised_format"] = advise_weight_format(w, block_shape)
+    return st

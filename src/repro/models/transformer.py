@@ -1,0 +1,471 @@
+"""Unified decoder stack for all assigned LM families.
+
+One repeating **unit** (a layer, or a hybrid super-block of ``period``
+layers) is scanned over the depth axis with stacked parameters — compile
+time stays flat in n_layers, and per-layer KV/SSM caches ride through the
+scan as xs/ys.
+
+Families:
+  dense   : [attn + gated-MLP] x L            (gemma/qwen3/minicpm/glm4/pixtral)
+  moe     : [attn + MoE] x L (leading ``first_dense`` layers use a dense MLP)
+  ssm     : [mamba2] x L                       (attention-free)
+  hybrid  : [(period-1) mamba2 + 1 attn; alternating MoE/MLP] x (L/period)
+  encdec  : see whisper.py
+
+The attention flavour is GQA by default, MLA when ``cfg.mla`` is set.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as A
+from . import mamba2 as M2
+from . import moe as MOE
+from .layers import (apply_embed, apply_mlp, apply_rmsnorm, apply_unembed,
+                     embed_init, mlp_init, mlp_shape, rmsnorm_init,
+                     softmax_cross_entropy)
+
+# ---------------------------------------------------------------------------
+# config
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | encdec
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    act: str = "silu"
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = True
+    embed_scale: bool = False        # gemma: x *= sqrt(d_model)
+    window: int | None = None
+    mla: A.MLAConfig | None = None
+    moe: MOE.MoEConfig | None = None
+    moe_every: int = 1
+    first_dense: int = 0
+    dense_ff: int = 0                # FFN width of leading dense layers
+    ssm: M2.SSMConfig | None = None
+    hybrid_period: int = 8
+    hybrid_attn_idx: int = 4
+    n_enc_layers: int = 0
+    input_mode: str = "tokens"       # tokens | embeds (stub frontends feed embeds)
+    q_chunk: int = 1024
+    k_chunk: int = 1024
+    compute_dtype: Any = jnp.bfloat16
+    param_dtype: Any = jnp.float32
+    remat: str = "full"              # none | full | dots
+    cache_dtype: Any = jnp.bfloat16
+    scan_unroll: int = 1             # layer-scan unroll factor (dry-run analysis)
+    fsdp: bool = False               # shard params over the data axes too (ZeRO-3)
+    opt_dtype: Any = jnp.float32     # AdamW moment dtype (bf16 for huge models)
+    shard_profile: str = "default"   # default | dp_only | moe2d (§Perf levers)
+    # Cache sequence-parallel cutoff: caches whose head dim cannot shard over
+    # TP fall back to sharding the sequence dim at/above this length.  The
+    # baseline sweep used 100k (long-context only); the §Perf fit audit found
+    # unshardable-head archs (minicpm kv=36, glm4 kv=2, pixtral/jamba kv=8,
+    # whisper kv=6) blow HBM with replicated 32k caches -> 8192 is the
+    # production default (recorded as a fleet-wide optimization).
+    kv_seq_shard_threshold: int = 8192
+    # doc fields
+    source: str = ""
+    notes: str = ""
+
+    @property
+    def attn(self) -> A.AttnConfig:
+        return A.AttnConfig(self.d_model, self.n_heads, self.n_kv_heads,
+                            self.head_dim, self.rope_theta, self.qk_norm, self.window)
+
+    @property
+    def n_units(self) -> int:
+        if self.family == "hybrid":
+            return self.n_layers // self.hybrid_period
+        return self.n_layers - self.first_dense
+
+    def active_params_per_layer(self) -> float:
+        """Active (per-token) parameter count of one repeating layer."""
+        D, hd = self.d_model, self.head_dim
+        if self.mla:
+            m = self.mla
+            attn = D * self.n_heads * (m.nope_dim + m.rope_dim) + D * (m.kv_lora + m.rope_dim) \
+                + m.kv_lora * self.n_heads * (m.nope_dim + m.v_dim) + self.n_heads * m.v_dim * D
+        else:
+            attn = D * (self.n_heads + 2 * self.n_kv_heads) * hd + self.n_heads * hd * D
+        if self.family == "ssm":
+            return _ssm_params(self.ssm)
+        if self.moe is not None:
+            ff = 3 * D * self.moe.d_expert * (self.moe.top_k + self.moe.n_shared) \
+                + D * self.moe.n_experts
+        else:
+            ff = 3 * D * self.d_ff
+        return attn + ff
+
+
+def _ssm_params(s: M2.SSMConfig) -> float:
+    di = s.d_inner
+    return (s.d_model * (2 * di + 2 * s.d_state + s.n_heads)
+            + s.conv_dim * s.d_conv + di * s.d_model + 3 * s.n_heads + di)
+
+
+def active_param_count(cfg: ModelConfig) -> float:
+    """6*N_active FLOPs/token uses this N (embeddings excluded, unembed included)."""
+    n = 0.0
+    if cfg.family == "hybrid":
+        per = cfg.hybrid_period
+        for i in range(per):
+            if i == cfg.hybrid_attn_idx:
+                attn = cfg.d_model * (cfg.n_heads + 2 * cfg.n_kv_heads) * cfg.head_dim \
+                    + cfg.n_heads * cfg.head_dim * cfg.d_model
+            else:
+                attn = _ssm_params(cfg.ssm)
+            if cfg.moe is not None and i % 2 == 1:
+                ff = 3 * cfg.d_model * cfg.moe.d_expert * cfg.moe.top_k
+            else:
+                ff = 3 * cfg.d_model * cfg.d_ff
+            n += attn + ff
+        n *= cfg.n_layers // per
+    else:
+        n = cfg.active_params_per_layer() * (cfg.n_layers - cfg.first_dense)
+        if cfg.first_dense:
+            D = cfg.d_model
+            attn = D * (cfg.n_heads + 2 * cfg.n_kv_heads) * cfg.head_dim \
+                + cfg.n_heads * cfg.head_dim * D
+            if cfg.mla:
+                m = cfg.mla
+                attn = D * cfg.n_heads * (m.nope_dim + m.rope_dim) + D * (m.kv_lora + m.rope_dim) \
+                    + m.kv_lora * cfg.n_heads * (m.nope_dim + m.v_dim) + cfg.n_heads * m.v_dim * D
+            n += cfg.first_dense * (attn + 3 * D * (cfg.dense_ff or cfg.d_ff))
+    n += cfg.d_model * cfg.vocab  # unembed matvec
+    return n
+
+
+# ---------------------------------------------------------------------------
+# single-layer builders
+# ---------------------------------------------------------------------------
+
+
+def _attn_init(key, cfg: ModelConfig, dtype):
+    if cfg.mla is not None:
+        return A.mla_init(key, cfg.mla, dtype)
+    return A.gqa_init(key, cfg.attn, dtype)
+
+
+def _attn_shape(cfg: ModelConfig, dtype):
+    if cfg.mla is not None:
+        return A.mla_shape(cfg.mla, dtype)
+    return A.gqa_shape(cfg.attn, dtype)
+
+
+def _attn_apply(p, x, cfg: ModelConfig, positions, cache, cache_pos):
+    if cfg.mla is not None:
+        return A.mla_apply(p, x, cfg.mla, positions, cache=cache, cache_pos=cache_pos,
+                           q_chunk=cfg.q_chunk, k_chunk=cfg.k_chunk,
+                           compute_dtype=cfg.compute_dtype)
+    return A.gqa_apply(p, x, cfg.attn, positions, cache=cache, cache_pos=cache_pos,
+                       q_chunk=cfg.q_chunk, k_chunk=cfg.k_chunk,
+                       compute_dtype=cfg.compute_dtype)
+
+
+def attn_layer_init(key, cfg: ModelConfig, *, ffn: str, d_ff: int, dtype):
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln_attn": rmsnorm_init(cfg.d_model, dtype),
+        "attn": _attn_init(k1, cfg, dtype),
+        "ln_ffn": rmsnorm_init(cfg.d_model, dtype),
+    }
+    if ffn == "moe":
+        p["moe"] = MOE.moe_init(k2, cfg.d_model, cfg.moe, dtype)
+    else:
+        p["mlp"] = mlp_init(k2, cfg.d_model, d_ff, dtype)
+    return p
+
+
+def attn_layer_shape(cfg: ModelConfig, *, ffn: str, d_ff: int, dtype):
+    p = {
+        "ln_attn": {"scale": jax.ShapeDtypeStruct((cfg.d_model,), dtype)},
+        "attn": _attn_shape(cfg, dtype),
+        "ln_ffn": {"scale": jax.ShapeDtypeStruct((cfg.d_model,), dtype)},
+    }
+    if ffn == "moe":
+        p["moe"] = MOE.moe_shape(cfg.d_model, cfg.moe, dtype)
+    else:
+        p["mlp"] = mlp_shape(cfg.d_model, d_ff, dtype)
+    return p
+
+
+def attn_layer_apply(p, x, cfg: ModelConfig, positions, cache, cache_pos):
+    h, new_cache = _attn_apply(p["attn"], apply_rmsnorm(p["ln_attn"], x), cfg,
+                               positions, cache, cache_pos)
+    x = x + h
+    aux = {"aux_loss": jnp.float32(0.0), "router_z": jnp.float32(0.0)}
+    if "moe" in p:
+        h, aux_m = MOE.moe_apply(p["moe"], apply_rmsnorm(p["ln_ffn"], x), cfg.moe,
+                                 compute_dtype=cfg.compute_dtype)
+        aux = {"aux_loss": aux_m["aux_loss"], "router_z": aux_m["router_z"]}
+    else:
+        h = apply_mlp(p["mlp"], apply_rmsnorm(p["ln_ffn"], x), act=cfg.act,
+                      compute_dtype=cfg.compute_dtype).astype(x.dtype)
+    return x + h, new_cache, aux
+
+
+def ssm_layer_init(key, cfg: ModelConfig, dtype):
+    return {"ln": rmsnorm_init(cfg.d_model, dtype), "ssm": M2.ssm_init(key, cfg.ssm, dtype)}
+
+
+def ssm_layer_shape(cfg: ModelConfig, dtype):
+    return {"ln": {"scale": jax.ShapeDtypeStruct((cfg.d_model,), dtype)},
+            "ssm": M2.ssm_shape(cfg.ssm, dtype)}
+
+
+def ssm_layer_apply(p, x, cfg: ModelConfig, cache):
+    h, new_cache = M2.ssm_apply(p["ssm"], apply_rmsnorm(p["ln"], x), cfg.ssm,
+                                cache=cache, compute_dtype=cfg.compute_dtype)
+    aux = {"aux_loss": jnp.float32(0.0), "router_z": jnp.float32(0.0)}
+    return x + h, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# unit = repeating scanned element
+# ---------------------------------------------------------------------------
+
+
+def unit_init(key, cfg: ModelConfig, dtype):
+    if cfg.family in ("dense", "moe"):
+        ffn = "moe" if (cfg.family == "moe") else "mlp"
+        return attn_layer_init(key, cfg, ffn=ffn, d_ff=cfg.d_ff, dtype=dtype)
+    if cfg.family == "ssm":
+        return ssm_layer_init(key, cfg, dtype)
+    if cfg.family == "hybrid":
+        per = cfg.hybrid_period
+        keys = jax.random.split(key, per)
+        unit = {}
+        for i in range(per):
+            if i == cfg.hybrid_attn_idx:
+                ffn = "moe" if (cfg.moe is not None and i % 2 == 1) else "mlp"
+                unit[f"l{i}"] = attn_layer_init(keys[i], cfg, ffn=ffn, d_ff=cfg.d_ff, dtype=dtype)
+            else:
+                blk = ssm_layer_init(keys[i], cfg, dtype)
+                if cfg.moe is not None and i % 2 == 1:
+                    blk["ln_ffn"] = rmsnorm_init(cfg.d_model, dtype)
+                    blk["moe"] = MOE.moe_init(jax.random.fold_in(keys[i], 7),
+                                              cfg.d_model, cfg.moe, dtype)
+                else:
+                    blk["ln_ffn"] = rmsnorm_init(cfg.d_model, dtype)
+                    blk["mlp"] = mlp_init(jax.random.fold_in(keys[i], 7),
+                                          cfg.d_model, cfg.d_ff, dtype)
+                unit[f"l{i}"] = blk
+        return unit
+    raise ValueError(cfg.family)
+
+
+def unit_shape(cfg: ModelConfig, dtype):
+    if cfg.family in ("dense", "moe"):
+        ffn = "moe" if (cfg.family == "moe") else "mlp"
+        return attn_layer_shape(cfg, ffn=ffn, d_ff=cfg.d_ff, dtype=dtype)
+    if cfg.family == "ssm":
+        return ssm_layer_shape(cfg, dtype)
+    if cfg.family == "hybrid":
+        per = cfg.hybrid_period
+        unit = {}
+        sds = lambda d: jax.ShapeDtypeStruct((d,), dtype)  # noqa: E731
+        for i in range(per):
+            if i == cfg.hybrid_attn_idx:
+                ffn = "moe" if (cfg.moe is not None and i % 2 == 1) else "mlp"
+                unit[f"l{i}"] = attn_layer_shape(cfg, ffn=ffn, d_ff=cfg.d_ff, dtype=dtype)
+            else:
+                blk = ssm_layer_shape(cfg, dtype)
+                blk["ln_ffn"] = {"scale": sds(cfg.d_model)}
+                if cfg.moe is not None and i % 2 == 1:
+                    blk["moe"] = MOE.moe_shape(cfg.d_model, cfg.moe, dtype)
+                else:
+                    blk["mlp"] = mlp_shape(cfg.d_model, cfg.d_ff, dtype)
+                unit[f"l{i}"] = blk
+        return unit
+    raise ValueError(cfg.family)
+
+
+def unit_apply(p, x, cfg: ModelConfig, positions, cache, cache_pos):
+    """Returns (x, new_cache, aux)."""
+    if cfg.family in ("dense", "moe"):
+        return attn_layer_apply(p, x, cfg, positions, cache, cache_pos)
+    if cfg.family == "ssm":
+        return ssm_layer_apply(p, x, cfg, cache)
+    if cfg.family == "hybrid":
+        per = cfg.hybrid_period
+        aux_t = {"aux_loss": jnp.float32(0.0), "router_z": jnp.float32(0.0)}
+        new_cache = {}
+        for i in range(per):
+            blk = p[f"l{i}"]
+            sub_cache = cache[f"l{i}"] if cache is not None else None
+            if i == cfg.hybrid_attn_idx:
+                x, nc, aux = attn_layer_apply(blk, x, cfg, positions, sub_cache, cache_pos)
+            else:
+                x, nc, aux = ssm_layer_apply({"ln": blk["ln"], "ssm": blk["ssm"]},
+                                             x, cfg, sub_cache)
+                if "moe" in blk:
+                    h, aux_m = MOE.moe_apply(blk["moe"], apply_rmsnorm(blk["ln_ffn"], x),
+                                             cfg.moe, compute_dtype=cfg.compute_dtype)
+                    aux = {"aux_loss": aux_m["aux_loss"], "router_z": aux_m["router_z"]}
+                    x = x + h
+                elif "mlp" in blk:
+                    h = apply_mlp(blk["mlp"], apply_rmsnorm(blk["ln_ffn"], x), act=cfg.act,
+                                  compute_dtype=cfg.compute_dtype).astype(x.dtype)
+                    x = x + h
+            new_cache[f"l{i}"] = nc
+            aux_t = jax.tree.map(lambda a, b: a + b, aux_t, aux)
+        return x, (new_cache if cache is not None else None), aux_t
+    raise ValueError(cfg.family)
+
+
+def unit_cache_shape(cfg: ModelConfig, batch: int, max_len: int):
+    """ShapeDtypeStruct pytree of one unit's cache."""
+    S = jax.ShapeDtypeStruct
+    if cfg.family in ("dense", "moe"):
+        if cfg.mla is not None:
+            return {"c_kv": S((batch, max_len, cfg.mla.kv_lora), cfg.cache_dtype),
+                    "k_rope": S((batch, max_len, cfg.mla.rope_dim), cfg.cache_dtype)}
+        return {"k": S((batch, max_len, cfg.n_kv_heads, cfg.head_dim), cfg.cache_dtype),
+                "v": S((batch, max_len, cfg.n_kv_heads, cfg.head_dim), cfg.cache_dtype)}
+    if cfg.family == "ssm":
+        return M2.ssm_cache_shape(cfg.ssm, batch, cfg.cache_dtype)
+    if cfg.family == "hybrid":
+        out = {}
+        for i in range(cfg.hybrid_period):
+            if i == cfg.hybrid_attn_idx:
+                out[f"l{i}"] = {
+                    "k": S((batch, max_len, cfg.n_kv_heads, cfg.head_dim), cfg.cache_dtype),
+                    "v": S((batch, max_len, cfg.n_kv_heads, cfg.head_dim), cfg.cache_dtype)}
+            else:
+                out[f"l{i}"] = M2.ssm_cache_shape(cfg.ssm, batch, cfg.cache_dtype)
+        return out
+    raise ValueError(cfg.family)
+
+
+# ---------------------------------------------------------------------------
+# full model
+# ---------------------------------------------------------------------------
+
+
+def _stack_shapes(tree, n):
+    return jax.tree.map(lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype), tree)
+
+
+def lm_init(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 4)
+    dt = cfg.param_dtype
+    params = {"embed": embed_init(ks[0], cfg.vocab, cfg.d_model, dt),
+              "ln_f": rmsnorm_init(cfg.d_model, dt)}
+    if not cfg.tie_embeddings:
+        params["unembed"] = embed_init(ks[3], cfg.vocab, cfg.d_model, dt)
+    if cfg.first_dense:
+        fkeys = jax.random.split(ks[2], cfg.first_dense)
+        params["head_layers"] = [
+            attn_layer_init(fk, cfg, ffn="mlp", d_ff=(cfg.dense_ff or cfg.d_ff), dtype=dt)
+            for fk in fkeys]
+    ukeys = jax.random.split(ks[1], cfg.n_units)
+    params["units"] = jax.vmap(lambda k: unit_init(k, cfg, dt))(ukeys)
+    return params
+
+
+def lm_param_shapes(cfg: ModelConfig):
+    dt = cfg.param_dtype
+    S = jax.ShapeDtypeStruct
+    params = {"embed": {"table": S((cfg.vocab, cfg.d_model), dt)},
+              "ln_f": {"scale": S((cfg.d_model,), dt)}}
+    if not cfg.tie_embeddings:
+        params["unembed"] = {"table": S((cfg.vocab, cfg.d_model), dt)}
+    if cfg.first_dense:
+        params["head_layers"] = [
+            attn_layer_shape(cfg, ffn="mlp", d_ff=(cfg.dense_ff or cfg.d_ff), dtype=dt)
+            for _ in range(cfg.first_dense)]
+    params["units"] = _stack_shapes(unit_shape(cfg, dt), cfg.n_units)
+    return params
+
+
+def lm_cache_shape(cfg: ModelConfig, batch: int, max_len: int):
+    cache = {"units": _stack_shapes(unit_cache_shape(cfg, batch, max_len), cfg.n_units)}
+    if cfg.first_dense:
+        cache["head_layers"] = [
+            {"k": jax.ShapeDtypeStruct((batch, max_len, cfg.n_kv_heads, cfg.head_dim), cfg.cache_dtype),
+             "v": jax.ShapeDtypeStruct((batch, max_len, cfg.n_kv_heads, cfg.head_dim), cfg.cache_dtype)}
+            if cfg.mla is None else
+            {"c_kv": jax.ShapeDtypeStruct((batch, max_len, cfg.mla.kv_lora), cfg.cache_dtype),
+             "k_rope": jax.ShapeDtypeStruct((batch, max_len, cfg.mla.rope_dim), cfg.cache_dtype)}
+            for _ in range(cfg.first_dense)]
+    return cache
+
+
+def lm_forward(params, cfg: ModelConfig, inputs, *, positions=None, cache=None,
+               cache_pos=None):
+    """inputs: tokens (B,S) int32 or embeds (B,S,D).  Returns
+    (logits (B,S,V) fp32, new_cache, aux)."""
+    if cfg.input_mode == "tokens" and jnp.issubdtype(inputs.dtype, jnp.integer):
+        x = apply_embed(params["embed"], inputs, cfg.compute_dtype)
+    else:
+        x = inputs.astype(cfg.compute_dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.compute_dtype)
+    B, Spos = x.shape[0], x.shape[1]
+    if positions is None:
+        base = cache_pos if cache_pos is not None else 0
+        positions = base + jnp.arange(Spos)
+
+    aux0 = {"aux_loss": jnp.float32(0.0), "router_z": jnp.float32(0.0)}
+    new_head_caches = None
+    if cfg.first_dense:
+        new_head_caches = []
+        for i, blk in enumerate(params["head_layers"]):
+            sub = cache["head_layers"][i] if cache is not None else None
+            x, nc, aux_i = attn_layer_apply(blk, x, cfg, positions, sub, cache_pos)
+            aux0 = jax.tree.map(lambda a, b: a + b, aux0, aux_i)
+            new_head_caches.append(nc)
+
+    def body(carry, xs):
+        x, aux = carry
+        if cache is not None:
+            unit_p, unit_c = xs
+        else:
+            unit_p, unit_c = xs, None
+        x, nc, aux_u = unit_apply(unit_p, x, cfg, positions, unit_c, cache_pos)
+        aux = jax.tree.map(lambda a, b: a + b, aux, aux_u)
+        return (x, aux), nc
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    elif cfg.remat == "dots":
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.checkpoint_dots)
+
+    xs = (params["units"], cache["units"]) if cache is not None else params["units"]
+    (x, aux), unit_caches = jax.lax.scan(body, (x, aux0), xs,
+                                         unroll=cfg.scan_unroll)
+
+    x = apply_rmsnorm(params["ln_f"], x)
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = apply_unembed(table, x, cfg.compute_dtype)
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {"units": unit_caches}
+        if cfg.first_dense:
+            new_cache["head_layers"] = new_head_caches
+    return logits, new_cache, aux
+
+
+def lm_loss(params, cfg: ModelConfig, batch):
+    """batch: {"tokens" | "embeds", "labels"} -> (loss, metrics)."""
+    inputs = batch["embeds"] if cfg.input_mode == "embeds" else batch["tokens"]
+    logits, _, aux = lm_forward(params, cfg, inputs)
+    ce = softmax_cross_entropy(logits, batch["labels"])
+    loss = ce + aux["aux_loss"] + aux["router_z"]
+    return loss, {"ce": ce, **aux}

@@ -1,0 +1,72 @@
+"""KV-cache management for the serving engine.
+
+The cache is the model-defined pytree (registry.Model.cache_shape); this
+module adds the host-side slot manager for continuous batching: a fixed
+batch of B slots, each slot independently holding one request's position,
+so finished requests are replaced without reshaping any device buffer
+(static shapes — the serving analogue of the paper's "uniform ELL slabs":
+regularity first, bookkeeping on the host).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def zeros_like_shapes(shape_tree):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), shape_tree)
+
+
+def cache_bytes(shape_tree) -> int:
+    total = 0
+    for leaf in jax.tree.leaves(shape_tree):
+        total += int(np.prod(leaf.shape)) * np.dtype(leaf.dtype).itemsize
+    return total
+
+
+@dataclass
+class Slot:
+    request_id: int | None = None
+    pos: int = 0                 # next write position
+    prompt_len: int = 0
+    generated: list = field(default_factory=list)
+    done: bool = True
+
+
+@dataclass
+class SlotManager:
+    batch_size: int
+    max_len: int
+    slots: list = None
+
+    def __post_init__(self):
+        self.slots = [Slot() for _ in range(self.batch_size)]
+
+    def free_slots(self) -> list[int]:
+        return [i for i, s in enumerate(self.slots) if s.done]
+
+    def admit(self, request_id: int, prompt_len: int) -> int | None:
+        free = self.free_slots()
+        if not free:
+            return None
+        i = free[0]
+        self.slots[i] = Slot(request_id, prompt_len, prompt_len, [], False)
+        return i
+
+    def record_token(self, i: int, token: int, eos_id: int, max_new: int):
+        s = self.slots[i]
+        if s.done:
+            return
+        s.generated.append(int(token))
+        s.pos += 1
+        if token == eos_id or len(s.generated) >= max_new or s.pos >= self.max_len - 1:
+            s.done = True
+
+    def positions(self) -> np.ndarray:
+        return np.asarray([s.pos for s in self.slots], np.int32)
+
+    def active_mask(self) -> np.ndarray:
+        return np.asarray([not s.done for s in self.slots], bool)

@@ -1,0 +1,271 @@
+"""GSPMD sharding rules: parameter-path regexes -> PartitionSpecs.
+
+Logical axes:
+  TP   — the mesh "model" axis: attention heads, FFN hidden, vocab, experts.
+  DP   — the data axes ("data", plus "pod" when multi-pod): batch, and
+         (ZeRO-1) optimizer-state shards.
+
+Rules match on the '/'-joined parameter path and give a spec for the
+*trailing* dims of the tensor (stacked layer axes are padded with None on
+the left).  The resolver downgrades any axis whose dimension is not
+divisible by the mesh-axis size to replicated — e.g. glm4's 2 KV heads on a
+16-way model axis — so every config lowers on every mesh without manual
+exceptions (the fallback is logged for the roofline discussion).
+"""
+from __future__ import annotations
+
+import re
+from typing import Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+TP = "model"
+# DP axes resolved at mesh time: ("pod", "data") if present, else ("data",)
+
+
+def dp_axes(mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+# (regex, trailing-dims spec template) — template entries: "tp", "dp", None
+PARAM_RULES: list[tuple[str, tuple]] = [
+    # embeddings: vocab-sharded (row-parallel embed / column-parallel unembed)
+    (r"(embed|unembed)/table$", ("tp", None)),
+    # attention projections
+    (r"attn/wq$", (None, "tp")),
+    (r"attn/wk$", (None, "tp")),
+    (r"attn/wv$", (None, "tp")),
+    (r"attn/wo$", ("tp", None)),
+    (r"attn/(q_norm|k_norm)$", (None,)),
+    # MLA
+    (r"attn/w_dkv$", (None, None)),
+    (r"attn/w_kr$", (None, None)),
+    (r"attn/kv_norm$", (None,)),
+    (r"attn/w_uk$", (None, "tp")),
+    (r"attn/w_uv$", (None, "tp")),
+    # MoE: expert-parallel over TP
+    (r"moe/router$", (None, None)),
+    (r"moe/wi_(gate|up)$", ("tp", None, None)),
+    (r"moe/wo$", ("tp", None, None)),
+    (r"moe/shared/wi_(gate|up)$", (None, "tp")),
+    (r"moe/shared/wo$", ("tp", None)),
+    # dense MLP
+    (r"mlp/wi_(gate|up)$", (None, "tp")),
+    (r"mlp/wo$", ("tp", None)),
+    # mamba2 (per-stream projections: shard boundaries align by construction)
+    (r"ssm/(z_proj|x_proj|bc_proj|dt_proj)$", (None, "tp")),
+    (r"ssm/conv_(x|bc)_w$", ("tp", None)),
+    (r"ssm/conv_(x|bc)_b$", ("tp",)),
+    (r"ssm/(A_log|D|dt_bias)$", (None,)),
+    (r"ssm/norm$", ("tp",)),
+    (r"ssm/out_proj$", ("tp", None)),
+    # norms / scalars
+    (r"(ln_\w+|norm)/scale$", (None,)),
+]
+
+
+def _match_spec(path: str) -> tuple | None:
+    for rx, spec in PARAM_RULES:
+        if re.search(rx, path):
+            return spec
+    return None
+
+
+def _resolve(template: Sequence, shape: tuple[int, ...], mesh: Mesh,
+             fallbacks: list | None = None, path: str = "") -> P:
+    """Pad template to rank, map 'tp'/'dp' to mesh axes, check divisibility."""
+    rank = len(shape)
+    tmpl = (None,) * (rank - len(template)) + tuple(template)
+    axes_of = {"tp": (TP,), "dp": dp_axes(mesh)}
+    out = []
+    for dim, t in zip(shape, tmpl):
+        if t is None:
+            out.append(None)
+            continue
+        names = axes_of.get(t, (t,))
+        names = tuple(n for n in names if n in mesh.axis_names)
+        size = int(np.prod([mesh.shape[n] for n in names])) if names else 1
+        if not names or dim % size != 0:
+            if fallbacks is not None:
+                fallbacks.append((path, t, dim, size))
+            out.append(None)
+        else:
+            out.append(names if len(names) > 1 else names[0])
+    return P(*out)
+
+
+# Sharding profiles — the §Perf hillclimb levers (see EXPERIMENTS.md):
+#   default : TP over "model" per PARAM_RULES
+#   dp_only : replicate params, shard batch over EVERY mesh axis — removes
+#             all per-layer TP collectives (right answer for small models
+#             where activation collectives dwarf the gradient all-reduce)
+#   moe2d   : MoE expert weights sharded expert x hidden over (model x data)
+#             — weights never move (no FSDP all-gather); collectives become
+#             activation-sized dispatch instead of weight-sized gathers
+_MOE2D_OVERRIDES = [
+    (r"moe/wi_(gate|up)$", ("tp", None, "dp")),
+    (r"moe/wo$", ("tp", "dp", None)),
+]
+
+
+def _match_spec_profile(path: str, profile: str):
+    if profile == "moe2d":
+        for rx, spec in _MOE2D_OVERRIDES:
+            if re.search(rx, path):
+                return spec
+    return _match_spec(path)
+
+
+def param_specs(param_shapes, mesh: Mesh, *, log_fallbacks: bool = False,
+                profile: str = "default"):
+    """Pytree of PartitionSpec matching ``param_shapes`` (a pytree of
+    ShapeDtypeStruct or arrays)."""
+    fallbacks: list = []
+    flat, treedef = jax.tree_util.tree_flatten_with_path(param_shapes)
+    specs = []
+    for path, leaf in flat:
+        name = "/".join(_key_str(p) for p in path)
+        tmpl = _match_spec_profile(name, profile)
+        if profile == "dp_only" and tmpl is not None:
+            tmpl = tuple(None if t == "tp" else t for t in tmpl)
+        if tmpl is None:
+            specs.append(P())
+        else:
+            specs.append(_resolve(tmpl, leaf.shape, mesh, fallbacks, name))
+    if log_fallbacks and fallbacks:
+        seen = set()
+        for path, t, dim, size in fallbacks:
+            key = re.sub(r"units/", "", path)
+            if key in seen:
+                continue
+            seen.add(key)
+            print(f"[sharding] replicated {path}: dim {dim} % {t}({size}) != 0")
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def param_shardings(param_shapes, mesh: Mesh, **kw):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(param_shapes, mesh, **kw))
+
+
+def _key_str(p) -> str:
+    if isinstance(p, jax.tree_util.DictKey):
+        return str(p.key)
+    if isinstance(p, jax.tree_util.SequenceKey):
+        return str(p.idx)
+    if isinstance(p, jax.tree_util.GetAttrKey):
+        return str(p.name)
+    return str(p)
+
+
+# ---------------------------------------------------------------------------
+# ZeRO-1: optimizer-state sharding on top of TP
+# ---------------------------------------------------------------------------
+
+
+def zero1_specs(param_shapes, mesh: Mesh, *, profile: str = "default"):
+    """Optimizer-state specs: the param spec plus DP sharding on the largest
+    still-replicated dim (divisibility permitting).  This is ZeRO-1 in GSPMD
+    terms: master weights/moments sharded over the data axes, gathered
+    implicitly by XLA at the param update."""
+    base = param_specs(param_shapes, mesh, profile=profile)
+    if profile == "dp_only":
+        dps = tuple(mesh.axis_names)       # every axis is a data axis
+    else:
+        dps = dp_axes(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in dps])) if dps else 1
+
+    def augment(spec: P, leaf):
+        if dp_size <= 1:
+            return spec
+        shape = leaf.shape
+        entries = list(spec) + [None] * (len(shape) - len(spec))
+        # a dp axis may appear at most once per spec (e.g. moe2d already
+        # spends "data" on the expert hidden dim) — skip if present
+        used = {a for e in entries if e is not None
+                for a in (e if isinstance(e, tuple) else (e,))}
+        if used & set(dps):
+            return spec
+        # choose the largest replicated dim divisible by dp_size
+        best, best_dim = None, 0
+        for i, (s, d) in enumerate(zip(entries, shape)):
+            if s is None and d % dp_size == 0 and d > best_dim:
+                best, best_dim = i, d
+        if best is None:
+            return spec
+        entries[best] = dps if len(dps) > 1 else dps[0]
+        return P(*entries)
+
+    return jax.tree.map(augment, base, param_shapes,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# activation / batch / cache shardings
+# ---------------------------------------------------------------------------
+
+
+def batch_specs(batch_shapes, mesh: Mesh, *, profile: str = "default"):
+    """Shard dim 0 (global batch) over the DP axes (every axis in dp_only)."""
+    dps = tuple(mesh.axis_names) if profile == "dp_only" else dp_axes(mesh)
+    dp = dps if len(dps) > 1 else (dps[0] if dps else None)
+    dp_size = int(np.prod([mesh.shape[a] for a in dps])) if dps else 1
+
+    def spec(leaf):
+        if not leaf.shape or leaf.shape[0] % dp_size:
+            return P()
+        return P(dp, *([None] * (len(leaf.shape) - 1)))
+
+    return jax.tree.map(spec, batch_shapes)
+
+
+def cache_specs(cache_shapes, mesh: Mesh, *, seq_axis_threshold: int = 100_000):
+    """KV/SSM-cache sharding for serving:
+
+    * batch dim over DP when divisible;
+    * KV-head / SSM-head dim over TP when divisible;
+    * for very long contexts (>= threshold) with unshardable heads, shard the
+      *sequence* dim over TP instead (sequence parallelism for decode).
+    """
+    dps = dp_axes(mesh)
+    dp = dps if len(dps) > 1 else (dps[0] if dps else None)
+    dp_size = int(np.prod([mesh.shape[a] for a in dps])) if dps else 1
+    tp_size = int(mesh.shape[TP]) if TP in mesh.axis_names else 1
+
+    def spec_shape(shape):
+        entries: list = [None] * len(shape)
+        if shape and shape[0] % dp_size == 0 and shape[0] >= dp_size:
+            entries[0] = dp
+        # rank-4: KV cache (B, S, K, hd) — S huge — or SSM state (B, H, hd, N)
+        if len(shape) == 4:
+            kv_like = shape[1] >= 1024 and shape[1] >= 4 * shape[2]
+            if kv_like:
+                if shape[2] % tp_size == 0 and shape[2] >= tp_size:
+                    entries[2] = TP      # KV heads
+                elif shape[1] % tp_size == 0 and shape[1] >= seq_axis_threshold:
+                    entries[1] = TP      # sequence parallelism over the cache
+            else:
+                if shape[1] % tp_size == 0 and shape[1] >= tp_size:
+                    entries[1] = TP      # SSM heads
+                elif shape[2] % tp_size == 0 and shape[2] >= tp_size:
+                    entries[2] = TP
+        elif len(shape) == 3:            # MLA latent (B, S, lora) / conv state
+            if shape[1] >= seq_axis_threshold and shape[1] % tp_size == 0:
+                entries[1] = TP
+            elif shape[2] % tp_size == 0 and shape[2] >= tp_size:
+                entries[2] = TP          # conv channels / latent dim
+        return entries
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shapes)
+    out = []
+    for path, leaf in flat:
+        names = [_key_str(p) for p in path]
+        if "units" in names:
+            # stacked (n_units, ...) cache: layer axis stays unsharded
+            entries = [None] + spec_shape(leaf.shape[1:])
+        else:
+            entries = spec_shape(leaf.shape)
+        out.append(P(*entries))
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,1 @@
+from . import checkpoint, compression, elastic, optimizer, trainer  # noqa: F401

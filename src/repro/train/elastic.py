@@ -1,0 +1,101 @@
+"""Elastic scaling + straggler mitigation.
+
+Node failures at 1000+ chips are routine; the recovery path here is:
+
+  1. **detect** — ``Heartbeat`` tracks per-step wall time; a step slower than
+     ``factor`` x the rolling median flags a straggler (on a real pod this is
+     fed by per-host agents; the policy layer is identical).
+  2. **decide** — ``ElasticPolicy`` chooses: tolerate (transient), or
+     re-mesh to the surviving device set.
+  3. **re-mesh** — checkpoints store *global* arrays, so resuming on a
+     different mesh is restore + device_put with the new shardings
+     (``remesh_state``).  Any (data x model) factorization of the surviving
+     chip count works as long as the sharding rules' divisibility fallbacks
+     allow it — which they do by construction.
+
+The dry-run proves the re-mesh path by lowering the same step on meshes of
+different shapes; tests exercise save -> restore-onto-smaller-mesh.
+"""
+from __future__ import annotations
+
+import statistics
+from dataclasses import dataclass, field
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+
+from ..sharding import rules as shrules
+
+
+@dataclass
+class Heartbeat:
+    factor: float = 3.0
+    window: int = 32
+    times: list = field(default_factory=list)
+    flagged: list = field(default_factory=list)
+
+    def beat(self, step: int, wall_s: float):
+        self.times.append(wall_s)
+        if len(self.times) > self.window:
+            self.times.pop(0)
+        if self.is_straggling():
+            self.flagged.append(step)
+
+    def median(self) -> float:
+        return statistics.median(self.times) if self.times else 0.0
+
+    def is_straggling(self) -> bool:
+        if len(self.times) < 5:
+            return False
+        return self.times[-1] > self.factor * statistics.median(self.times[:-1])
+
+
+@dataclass
+class ElasticPolicy:
+    tolerate_flags: int = 3      # consecutive straggler steps before re-mesh
+
+    def should_remesh(self, hb: Heartbeat) -> bool:
+        if len(hb.flagged) < self.tolerate_flags:
+            return False
+        tail = hb.flagged[-self.tolerate_flags:]
+        return tail == list(range(tail[0], tail[0] + self.tolerate_flags))
+
+
+def choose_mesh_shape(n_devices: int, prefer_model: int = 16) -> tuple[int, int]:
+    """Largest (data, model) factorization with model <= prefer_model.
+    Survivor counts that aren't nicely divisible degrade model-parallel width
+    first (TP needs divisibility more than DP does)."""
+    model = min(prefer_model, n_devices)
+    while n_devices % model:
+        model -= 1
+    return n_devices // model, model
+
+
+def make_mesh_from_devices(devices, shape: tuple[int, int],
+                           axis_names=("data", "model")) -> Mesh:
+    arr = np.asarray(devices[: shape[0] * shape[1]]).reshape(shape)
+    return Mesh(arr, axis_names)
+
+
+def remesh_state(state: dict, param_like, new_mesh: Mesh) -> dict:
+    """Re-shard a restored {params, opt_state} onto ``new_mesh``.
+
+    Checkpoint leaves are global numpy arrays; placement is one device_put
+    per leaf with the rule-derived sharding for the new mesh.
+    """
+    pspecs = shrules.param_specs(param_like, new_mesh)
+    pshard = jax.tree.map(lambda s: NamedSharding(new_mesh, s), pspecs,
+                          is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+    out = {"params": jax.device_put(state["params"], pshard)}
+    if "opt_state" in state:
+        zspecs = shrules.zero1_specs(param_like, new_mesh)
+        zshard = jax.tree.map(lambda s: NamedSharding(new_mesh, s), zspecs,
+                              is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+        mo = state["opt_state"]
+        out["opt_state"] = {
+            "m": jax.device_put(mo["m"], zshard),
+            "v": jax.device_put(mo["v"], zshard),
+            "step": jax.device_put(mo["step"]),
+        }
+    return out

@@ -1,0 +1,94 @@
+"""AdamW with WSD (warmup-stable-decay) schedule — pure JAX, no optax.
+
+WSD is the minicpm-2b training schedule (arXiv:2404.06395): linear warmup,
+long constant plateau, short sharp decay — implemented exactly, plus cosine
+and constant for the other archs.  Optimizer state is a pytree mirroring the
+params, so the ZeRO-1 sharding rules (sharding/rules.zero1_specs) apply to
+it directly.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    schedule: str = "wsd"        # wsd | cosine | const
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    decay_frac: float = 0.1      # WSD: final fraction spent decaying
+    min_lr_frac: float = 0.1
+
+
+def schedule_lr(cfg: OptimizerConfig, step: jnp.ndarray) -> jnp.ndarray:
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, s / jnp.maximum(1.0, cfg.warmup_steps))
+    if cfg.schedule == "const":
+        return cfg.lr * warm
+    if cfg.schedule == "cosine":
+        t = jnp.clip((s - cfg.warmup_steps) / jnp.maximum(1.0, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0)
+        cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return cfg.lr * warm * cos
+    # WSD: warmup -> stable -> linear decay over the last decay_frac steps
+    decay_start = cfg.total_steps * (1.0 - cfg.decay_frac)
+    t = jnp.clip((s - decay_start) / jnp.maximum(1.0, cfg.total_steps - decay_start), 0.0, 1.0)
+    dec = 1.0 - (1.0 - cfg.min_lr_frac) * t
+    return cfg.lr * warm * dec
+
+
+def init_opt_state(params, dtype=jnp.float32):
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, dtype), params)
+    return {"m": zeros, "v": jax.tree.map(jnp.copy, zeros), "step": jnp.zeros((), jnp.int32)}
+
+
+def opt_state_shapes(param_shapes, dtype=jnp.float32):
+    z = jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, dtype), param_shapes)
+    return {"m": z, "v": z, "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), gn
+
+
+def adamw_update(cfg: OptimizerConfig, grads, opt_state, params):
+    """Returns (new_params, new_opt_state, stats)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = opt_state["step"] + 1
+    lr = schedule_lr(cfg, step)
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m_new = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+        v_new = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(gf)
+        mhat = m_new / bc1
+        vhat = v_new / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if cfg.weight_decay and p.ndim >= 2:  # decay matrices only
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return ((p.astype(jnp.float32) - lr * delta).astype(p.dtype),
+                m_new.astype(m.dtype), v_new.astype(v.dtype))
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(opt_state["m"])
+    flat_v = treedef.flatten_up_to(opt_state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}, {"lr": lr, "grad_norm": gnorm}

@@ -1,0 +1,142 @@
+"""Train step + host-level training loop with fault tolerance.
+
+``make_train_step`` builds the jitted SPMD step:
+  * loss/grad through the model registry (any family),
+  * optional microbatch gradient accumulation (lax.scan over microbatches),
+  * grad clip + AdamW/WSD update,
+  * donated params/opt-state buffers.
+
+``TrainLoop`` adds the production concerns:
+  * periodic checkpoint (atomic, manifest-based; train/checkpoint.py),
+  * resume-from-latest with deterministic data skip-ahead,
+  * per-step heartbeat + straggler detection hooks (train/elastic.py),
+  * NaN-step rejection (skip update, keep params — the cheap insurance
+    against data spikes at scale).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.registry import Model
+from . import checkpoint as ckpt_lib
+from .elastic import Heartbeat
+from .optimizer import OptimizerConfig, adamw_update, init_opt_state
+
+
+def make_loss_fn(model: Model):
+    def loss_fn(params, batch):
+        return model.loss(params, batch)
+    return loss_fn
+
+
+def make_train_step(model: Model, opt_cfg: OptimizerConfig, *,
+                    microbatches: int = 1, donate: bool = True,
+                    skip_nan_updates: bool = True):
+    """Returns jitted ``train_step(params, opt_state, batch) ->
+    (params, opt_state, metrics)``."""
+    loss_fn = make_loss_fn(model)
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        return loss, metrics, grads
+
+    def accumulate(params, batch):
+        if microbatches == 1:
+            return grads_of(params, batch)
+        # split batch dim into microbatches and scan
+        def resh(x):
+            return x.reshape(microbatches, x.shape[0] // microbatches, *x.shape[1:])
+        mb = jax.tree.map(resh, batch)
+
+        def body(carry, micro):
+            acc, loss_acc = carry
+            loss, metrics, grads = grads_of(params, micro)
+            acc = jax.tree.map(jnp.add, acc, grads)
+            return (acc, loss_acc + loss), metrics
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (gsum, loss_sum), metrics = jax.lax.scan(body, (zeros, 0.0), mb)
+        grads = jax.tree.map(lambda g: g / microbatches, gsum)
+        metrics = jax.tree.map(lambda m: m[-1], metrics)
+        return loss_sum / microbatches, metrics, grads
+
+    def train_step(params, opt_state, batch):
+        loss, metrics, grads = accumulate(params, batch)
+        new_params, new_opt, stats = adamw_update(opt_cfg, grads, opt_state, params)
+        if skip_nan_updates:
+            bad = ~jnp.isfinite(loss)
+            new_params = jax.tree.map(
+                lambda n, o: jnp.where(bad, o, n), new_params, params)
+            new_opt = jax.tree.map(lambda n, o: jnp.where(bad, o, n), new_opt, opt_state)
+            stats = dict(stats, skipped=bad)
+        out_metrics = {"loss": loss, **metrics, **stats}
+        return new_params, new_opt, out_metrics
+
+    donate_argnums = (0, 1) if donate else ()
+    return jax.jit(train_step, donate_argnums=donate_argnums)
+
+
+# ---------------------------------------------------------------------------
+# host loop
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class TrainLoopConfig:
+    total_steps: int = 100
+    log_every: int = 10
+    ckpt_every: int = 50
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    keep_ckpts: int = 3
+    straggler_factor: float = 3.0
+
+
+@dataclass
+class TrainLoop:
+    model: Model
+    opt_cfg: OptimizerConfig
+    loop_cfg: TrainLoopConfig
+    data_iter: object                      # data.pipeline.TokenPipeline
+    heartbeat: Heartbeat = field(default=None)
+    history: list = field(default_factory=list)
+
+    def run(self, params=None, opt_state=None, start_step: int = 0,
+            resume: bool = True, seed: int = 0):
+        cfgL = self.loop_cfg
+        step_fn = make_train_step(self.model, self.opt_cfg)
+        if resume:
+            restored = ckpt_lib.restore_latest(cfgL.ckpt_dir)
+            if restored is not None:
+                params, opt_state, start_step = (
+                    restored["params"], restored["opt_state"], restored["step"])
+                print(f"[train] resumed from step {start_step}")
+        if params is None:
+            params = self.model.init(jax.random.PRNGKey(seed))
+        if opt_state is None:
+            opt_state = init_opt_state(params)
+        self.data_iter.skip_to(start_step)
+        hb = self.heartbeat or Heartbeat(factor=cfgL.straggler_factor)
+
+        step = start_step
+        while step < cfgL.total_steps:
+            batch = self.data_iter.next_batch()
+            t0 = time.perf_counter()
+            params, opt_state, metrics = step_fn(params, opt_state, batch)
+            jax.block_until_ready(metrics["loss"])
+            dt = time.perf_counter() - t0
+            hb.beat(step, dt)
+            step += 1
+            if step % cfgL.log_every == 0 or step == cfgL.total_steps:
+                loss = float(metrics["loss"])
+                self.history.append((step, loss, dt))
+                print(f"[train] step {step:5d} loss {loss:.4f} {dt*1e3:.1f} ms"
+                      + (" STRAGGLER" if hb.is_straggling() else ""))
+            if step % cfgL.ckpt_every == 0 or step == cfgL.total_steps:
+                ckpt_lib.save(cfgL.ckpt_dir, step, params=params,
+                              opt_state=opt_state, keep=cfgL.keep_ckpts)
+        return params, opt_state, step

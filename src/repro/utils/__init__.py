@@ -1,0 +1,1 @@
+from . import hlo, hw, tree  # noqa: F401

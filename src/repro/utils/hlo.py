@@ -1,0 +1,175 @@
+"""HLO-text analysis: collective-byte accounting for the roofline.
+
+``compiled.cost_analysis()`` gives FLOPs and HBM bytes but not collective
+traffic, so we parse the (stable)HLO / optimized-HLO text and sum operand
+sizes of every collective op:
+
+    all-gather, all-reduce, reduce-scatter, all-to-all, collective-permute
+    (and their -start/-done async split forms, counted once at -start).
+
+Byte accounting convention: for each collective we count the *output* shape
+bytes for all-gather (data landing per device after the op is what crosses
+links, up to the (n-1)/n factor which we fold into an effective-bytes
+correction), the *input* bytes for reduce-scatter/all-reduce/all-to-all, and
+the message bytes for collective-permute.  This follows the assignment's
+"sum operand sizes" instruction; ring-algorithm (n-1)/n factors are applied
+by the roofline layer when `ring_correct=True`.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1,
+    "s4": 1, "u4": 1,
+    "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+# shapes look like  f32[128,1024]{1,0}  or bf16[2,16,16]  or f32[] (scalar)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+_COLLECTIVE_KINDS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+    "collective-broadcast",
+    "ragged-all-to-all",
+)
+
+
+def shape_bytes(shape_str: str) -> int:
+    """Bytes of one shape literal like ``f32[8,128]``; 0 if unparsable."""
+    m = _SHAPE_RE.match(shape_str.strip())
+    if not m:
+        return 0
+    dtype, dims = m.groups()
+    b = _DTYPE_BYTES.get(dtype)
+    if b is None:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+    return n * b
+
+
+def _tuple_or_shape_bytes(sig: str) -> int:
+    """Bytes of an HLO result signature which may be a tuple ``(f32[..], ..)``."""
+    total = 0
+    for m in _SHAPE_RE.finditer(sig):
+        dtype, dims = m.groups()
+        b = _DTYPE_BYTES.get(dtype)
+        if b is None:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * b
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    """Per-kind op counts and byte totals for one HLO module."""
+
+    bytes_by_kind: dict = field(default_factory=lambda: defaultdict(int))
+    count_by_kind: dict = field(default_factory=lambda: defaultdict(int))
+    ops: list = field(default_factory=list)  # (kind, bytes, line)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.count_by_kind.values())
+
+    def summary(self) -> dict:
+        return {
+            "total_bytes": self.total_bytes,
+            "total_count": self.total_count,
+            **{f"{k}_bytes": v for k, v in sorted(self.bytes_by_kind.items())},
+            **{f"{k}_count": v for k, v in sorted(self.count_by_kind.items())},
+        }
+
+
+# an HLO instruction line:   %name = <sig> <opcode>(<operands>), ...
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(?P<sig>\([^)]*\)|\S+)\s+(?P<op>[\w\-]+)"
+)
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Scan HLO (optimized or stable) text and account collective bytes."""
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        op = m.group("op")
+        # normalize async forms: all-gather-start -> all-gather; skip -done/-update
+        base = op
+        for suffix in ("-start", "-done", "-update"):
+            if base.endswith(suffix):
+                base = base[: -len(suffix)]
+        if base not in _COLLECTIVE_KINDS:
+            continue
+        if op.endswith("-done") or op.endswith("-update"):
+            continue  # counted at -start
+        nbytes = _tuple_or_shape_bytes(m.group("sig"))
+        stats.bytes_by_kind[base] += nbytes
+        stats.count_by_kind[base] += 1
+        stats.ops.append((base, nbytes, line.strip()[:160]))
+    return stats
+
+
+def collective_bytes(hlo_text: str) -> int:
+    return parse_collectives(hlo_text).total_bytes
+
+
+def effective_link_bytes(stats: CollectiveStats, axis_sizes: dict | None = None) -> float:
+    """Apply ring-algorithm per-device link-byte factors.
+
+    For a ring over n devices: all-gather and reduce-scatter move (n-1)/n of
+    the full buffer per device; all-reduce = RS + AG = 2(n-1)/n; all-to-all
+    moves (n-1)/n; collective-permute moves exactly its message.  Without
+    axis sizes we use the conservative n->inf limit (factor 1, all-reduce 2).
+    """
+    if axis_sizes:
+        n = 1
+        for v in axis_sizes.values():
+            n *= int(v)
+        f = (n - 1) / n if n > 1 else 0.0
+    else:
+        f = 1.0
+    factors = {
+        "all-gather": f,
+        "reduce-scatter": f,
+        "all-reduce": 2 * f,
+        "all-to-all": f,
+        "collective-permute": 1.0,
+        "collective-broadcast": 1.0,
+        "ragged-all-to-all": f,
+    }
+    return sum(factors.get(k, 1.0) * v for k, v in stats.bytes_by_kind.items())
+
+
+def count_op(hlo_text: str, opcode: str) -> int:
+    """Count occurrences of an opcode (e.g. 'fusion', 'dot', 'transpose')."""
+    n = 0
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if m and m.group("op") == opcode:
+            n += 1
+    return n

@@ -1,0 +1,63 @@
+"""Small pytree utilities shared across the framework."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def param_count(tree) -> int:
+    """Total number of elements across all array leaves."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    return int(sum(np.prod(l.shape) if hasattr(l, "shape") else 1 for l in leaves))
+
+
+def param_bytes(tree) -> int:
+    total = 0
+    for l in jax.tree_util.tree_leaves(tree):
+        if hasattr(l, "shape") and hasattr(l, "dtype"):
+            total += int(np.prod(l.shape)) * np.dtype(l.dtype).itemsize
+    return total
+
+
+def tree_any_nan(tree) -> bool:
+    leaves = [l for l in jax.tree_util.tree_leaves(tree) if hasattr(l, "dtype")]
+    flags = [jnp.any(jnp.isnan(l.astype(jnp.float32))) for l in leaves if jnp.issubdtype(l.dtype, jnp.floating)]
+    if not flags:
+        return False
+    return bool(jax.device_get(jnp.any(jnp.stack(flags))))
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [l for l in jax.tree_util.tree_leaves(tree) if hasattr(l, "dtype")]
+    sq = sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    return jnp.sqrt(sq)
+
+
+def cast_tree(tree, dtype):
+    return jax.tree.map(
+        lambda l: l.astype(dtype) if hasattr(l, "dtype") and jnp.issubdtype(l.dtype, jnp.floating) else l,
+        tree,
+    )
+
+
+def flatten_with_paths(tree) -> list[tuple[str, jax.Array]]:
+    """(dot-joined-path, leaf) pairs — used by the checkpointer manifest."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        name = "/".join(_path_elem_str(p) for p in path)
+        out.append((name, leaf))
+    return out
+
+
+def _path_elem_str(p) -> str:
+    if isinstance(p, jax.tree_util.DictKey):
+        return str(p.key)
+    if isinstance(p, jax.tree_util.SequenceKey):
+        return str(p.idx)
+    if isinstance(p, jax.tree_util.GetAttrKey):
+        return str(p.name)
+    if isinstance(p, jax.tree_util.FlattenedIndexKey):
+        return str(p.key)
+    return str(p)

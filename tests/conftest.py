@@ -1,0 +1,23 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here by design — smoke tests and
+benches must see the real single CPU device; only launch/dryrun.py forces
+512 placeholder devices (in its own process)."""
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def hh_small():
+    from repro.core.matrices import holstein_hubbard_surrogate
+    return holstein_hubbard_surrogate(600, seed=1)
+
+
+@pytest.fixture(scope="session")
+def hh_exact():
+    from repro.core.matrices import HolsteinHubbardParams, holstein_hubbard_exact
+    return holstein_hubbard_exact(HolsteinHubbardParams(L=3, n_up=1, n_dn=1, max_phonon=2))

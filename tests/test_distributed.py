@@ -1,0 +1,82 @@
+"""Distributed SpMV: partitioners in-process, 8-device equivalence via
+subprocess (device count must be forced before jax init)."""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import distributed as D
+from repro.core import spmv as S
+from repro.core.matrices import holstein_hubbard_surrogate, power_law_rows
+
+
+def test_nnz_balance_beats_row_balance():
+    m = power_law_rows(2000, 2000, mean_nnz=8, seed=0, alpha=2.5)
+    rows = D.partition_imbalance(m, D.row_balanced_partition(m.n_rows, 8))
+    nnz = D.partition_imbalance(m, D.nnz_balanced_partition(m, 8))
+    assert nnz <= rows * 1.001
+    assert nnz < 1.2  # near-perfect work balance
+    # on the paper's matrix too
+    hh = holstein_hubbard_surrogate(1500, seed=0)
+    assert (D.partition_imbalance(hh, D.nnz_balanced_partition(hh, 8))
+            <= D.partition_imbalance(hh, D.row_balanced_partition(hh.n_rows, 8)))
+
+
+def test_partition_bounds_cover_all_rows(hh_small):
+    for parts in (1, 3, 8):
+        b = D.nnz_balanced_partition(hh_small, parts)
+        assert b[0] == 0 and b[-1] == hh_small.n_rows
+        assert (np.diff(b) >= 0).all()
+
+
+def test_row_blocks_reconstruct(hh_small):
+    blocks = D.build_row_blocks(hh_small, parts=4)
+    # scattering every block entry back must reproduce the dense matrix rows
+    d = np.zeros(hh_small.shape)
+    for p in range(4):
+        for i in range(blocks.col.shape[1]):
+            r = blocks.row_map[p, i]
+            if r >= hh_small.n_rows:
+                continue
+            for w in range(blocks.col.shape[2]):
+                if blocks.val[p, i, w] != 0:
+                    d[r, blocks.col[p, i, w]] += blocks.val[p, i, w]
+    np.testing.assert_allclose(d, hh_small.to_dense(), atol=1e-5)
+
+
+def test_single_device_shard_map_paths(hh_small):
+    """Both shard_map variants run (1-device mesh) and match the reference."""
+    mesh = D.make_mesh_1d()
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(hh_small.shape[1]).astype(np.float32))
+    y_ref = np.asarray(S.csr_spmv(hh_small, x))
+    for build, make in ((D.build_row_blocks, D.make_allgather_spmv),
+                        (D.build_ring_blocks, D.make_ring_spmv)):
+        blocks = build(hh_small, parts=len(jax.devices()))
+        y = np.asarray(jax.jit(make(blocks, mesh))(x))
+        np.testing.assert_allclose(y, y_ref, rtol=2e-4, atol=1e-4)
+
+
+def test_traffic_models(hh_small):
+    rb = D.build_row_blocks(hh_small, 4)
+    ring = D.build_ring_blocks(hh_small, 4)
+    t_ag = D.allgather_traffic_bytes(rb)
+    t_ring = D.ring_traffic_bytes(ring)
+    # the ring never holds more than one shard of x
+    assert t_ring["per_chip_x"] < t_ag["per_chip_x"]
+
+
+@pytest.mark.slow
+def test_8device_equivalence_subprocess():
+    """Run the module selftest under 8 forced host devices."""
+    env = dict(os.environ, XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH="src")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.core.distributed", "2000"],
+        capture_output=True, text=True, env=env, cwd=os.path.dirname(os.path.dirname(__file__)),
+        timeout=300)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "SELFTEST PASS" in out.stdout

@@ -1,0 +1,89 @@
+"""Storage-format containers: conversions, roundtrips, invariants (+ hypothesis)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import formats as F
+from repro.core.matrices import holstein_hubbard_surrogate, random_sparse
+
+FORMATS = [("csr", {}), ("ell", {}), ("jds", {}), ("sell", dict(C=8)),
+           ("sell", dict(C=8, sigma=32)), ("sell", dict(C=16, sort_cols=True)),
+           ("hybrid", {})]
+
+
+@pytest.mark.parametrize("fmt,kw", FORMATS)
+def test_roundtrip_dense(hh_small, fmt, kw):
+    d = hh_small.to_dense()
+    obj = F.convert(hh_small, fmt, **kw)
+    np.testing.assert_allclose(obj.to_dense(), d, atol=1e-5)
+
+
+def test_csr_coo_roundtrip(hh_small):
+    coo = hh_small.to_coo()
+    back = F.CSR.from_coo(coo)
+    np.testing.assert_array_equal(back.row_ptr, hh_small.row_ptr)
+    np.testing.assert_array_equal(back.col_idx, hh_small.col_idx)
+
+
+def test_bsr_roundtrip():
+    from repro.core.matrices import block_sparse_dense
+    d = block_sparse_dense(64, 256, (8, 128), 0.5, seed=0)
+    bsr = F.BSR.from_dense(d, (8, 128))
+    np.testing.assert_allclose(bsr.to_dense(), d, atol=0)
+    assert 0.0 < bsr.density() <= 1.0
+
+
+def test_jds_permutation_sorted(hh_small):
+    jds = F.JDS.from_csr(hh_small)
+    lens = hh_small.row_lengths()[np.asarray(jds.perm)]
+    assert (np.diff(lens) <= 0).all(), "JDS rows must be sorted by decreasing length"
+    assert jds.n_diags == int(hh_small.row_lengths().max())
+    assert jds.nnz == hh_small.nnz
+
+
+def test_sell_chunk_geometry(hh_small):
+    sell = F.SELL.from_csr(hh_small, C=8, sigma=64)
+    assert sell.n_chunks == -(-hh_small.n_rows // 8)
+    cp = np.asarray(sell.chunk_ptr)
+    cw = np.asarray(sell.chunk_width)
+    np.testing.assert_array_equal(np.diff(cp), cw.astype(np.int64) * 8)
+
+
+def test_sell_sigma_full_matches_jds_order(hh_small):
+    sell = F.SELL.from_csr(hh_small, C=8, sigma=None)  # sigma = n
+    jds = F.JDS.from_csr(hh_small)
+    n = hh_small.n_rows
+    np.testing.assert_array_equal(np.asarray(sell.perm)[:n], np.asarray(jds.perm))
+
+
+def test_split_dia_captures_diagonals(hh_small):
+    hyb = F.split_dia(hh_small, min_occupancy=0.5, max_diags=16)
+    assert len(np.asarray(hyb.dia.offsets)) > 0
+    frac = hyb.dia.nnz / hh_small.nnz
+    assert 0.3 < frac < 0.95  # the dense diagonals carry the bulk
+
+
+def test_matrix_stats(hh_small):
+    st_ = F.matrix_stats(hh_small)
+    assert st_["nnz"] == hh_small.nnz
+    assert 5 < st_["nnz_per_row_mean"] < 25
+    assert 0.0 <= st_["frac_backward_jumps"] <= 1.0
+    assert st_["frac_nnz_top12_diags"] > 0.3
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(8, 60), k=st.integers(1, 6), seed=st.integers(0, 1000))
+def test_property_roundtrip_all_formats(n, k, seed):
+    m = random_sparse(n, n, min(k, n), seed=seed)
+    d = m.to_dense()
+    for fmt, kw in [("ell", {}), ("jds", {}), ("sell", dict(C=4))]:
+        obj = F.convert(m, fmt, **kw)
+        np.testing.assert_allclose(obj.to_dense(), d, atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 100))
+def test_property_surrogate_symmetric(seed):
+    m = holstein_hubbard_surrogate(300, seed=seed)
+    d = m.to_dense()
+    np.testing.assert_allclose(d, d.T, atol=1e-6)

@@ -1,0 +1,76 @@
+"""Holstein-Hubbard generators + the Lanczos host application."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import spmv as S
+from repro.core.eigensolver import ground_state_energy, lanczos, power_iteration
+from repro.core.matrices import (HolsteinHubbardParams, holstein_hubbard_exact,
+                                 holstein_hubbard_surrogate, laplacian_2d)
+
+
+def test_hh_exact_hermitian(hh_exact):
+    d = hh_exact.to_dense()
+    np.testing.assert_allclose(d, d.T, atol=1e-12)
+
+
+def test_hh_exact_dimension(hh_exact):
+    # L=3, 1 up, 1 dn, 3 phonon levels/site: 3 * 3 * 27 = 243
+    assert hh_exact.shape == (243, 243)
+    assert hh_exact.nnz > 243  # off-diagonal structure exists
+
+
+def test_hh_exact_limits():
+    # g=0, U=0: electrons and phonons decouple; E0 = 2*min(eps_k) (free hopping)
+    p = HolsteinHubbardParams(L=4, n_up=1, n_dn=1, max_phonon=0, t=1.0, U=0.0,
+                              g=0.0, omega0=1.0, periodic=True)
+    m = holstein_hubbard_exact(p)
+    ev = np.linalg.eigvalsh(m.to_dense())
+    # 1 up + 1 dn on a 4-ring: E0 = -2t + -2t = -4t
+    assert ev[0] == pytest.approx(-4.0, abs=1e-9)
+
+
+def test_hh_surrogate_stats():
+    m = holstein_hubbard_surrogate(3000, seed=0)
+    from repro.core.formats import matrix_stats
+    st = matrix_stats(m)
+    assert st["nnz_per_row_mean"] == pytest.approx(14.0, rel=0.2)
+    assert st["frac_nnz_top12_diags"] > 0.45  # ~60% incl. main diagonal
+    d = m.to_dense()
+    np.testing.assert_allclose(d, d.T, atol=1e-5)
+
+
+def test_lanczos_vs_dense(hh_exact):
+    ev = np.linalg.eigvalsh(hh_exact.to_dense())
+    apply_A = S.make_spmv(hh_exact)
+    res = lanczos(apply_A, hh_exact.shape[0], m=80, dtype=jnp.float32)
+    assert res.eigenvalues[0] == pytest.approx(ev[0], abs=5e-5)
+    assert res.eigenvalues[-1] == pytest.approx(ev[-1], abs=5e-4)
+    assert res.n_spmv == res.n_iterations  # one SpMV per iteration, as in the paper
+
+
+def test_lanczos_laplacian():
+    m = laplacian_2d(12, 12)
+    ev = np.linalg.eigvalsh(m.to_dense())
+    e0 = ground_state_energy(S.make_spmv(m), m.shape[0], m=100)
+    assert e0 == pytest.approx(ev[0], abs=1e-4)
+
+
+def test_power_iteration_consistency(hh_exact):
+    apply_A = S.make_spmv(hh_exact)
+    lam = power_iteration(apply_A, hh_exact.shape[0], iters=400)
+    ev = np.linalg.eigvalsh(hh_exact.to_dense())
+    lam_max_abs = max(abs(ev[0]), abs(ev[-1]))
+    assert abs(lam) == pytest.approx(lam_max_abs, rel=1e-3)
+
+
+def test_lanczos_format_independent(hh_exact):
+    """The eigensolver result cannot depend on the storage scheme."""
+    from repro.core import formats as F
+    e_csr = ground_state_energy(S.make_spmv(hh_exact), hh_exact.shape[0], m=60)
+    sell = F.SELL.from_csr(hh_exact, C=8)
+    e_sell = ground_state_energy(S.make_spmv(sell), hh_exact.shape[0], m=60)
+    hyb = F.split_dia(hh_exact)
+    e_hyb = ground_state_energy(S.make_spmv(hyb), hh_exact.shape[0], m=60)
+    assert e_csr == pytest.approx(e_sell, abs=1e-5)
+    assert e_csr == pytest.approx(e_hyb, abs=1e-5)

@@ -1,0 +1,166 @@
+"""Model-layer correctness: attention variants, MLA, SSD, MoE, consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import reduced, smoke_batch
+from repro.models import transformer as T
+from repro.models.attention import AttnConfig, flash_attention, gqa_apply, gqa_init
+from repro.models.mamba2 import SSMConfig, ssm_apply, ssm_cache_shape, ssm_init
+from repro.models.moe import MoEConfig, moe_apply, moe_init
+from repro.models.registry import Model, get_config
+
+
+def _naive_attention(q, k, v, scale, causal=True, window=None):
+    B, S, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    qg = q.reshape(B, S, K, G, hd)
+    s = jnp.einsum("bqkgd,bskd->bqkgs", qg, k) * scale
+    d = jnp.arange(S)[:, None] - jnp.arange(S)[None, :]
+    ok = jnp.ones((S, S), bool)
+    if causal:
+        ok &= d >= 0
+    if window:
+        ok &= d < window
+    s = jnp.where(ok[None, :, None, None, :], s, -1e9)
+    p = jax.nn.softmax(s, -1)
+    return jnp.einsum("bqkgs,bskd->bqkgd", p, v).reshape(B, S, H, hd)
+
+
+@pytest.mark.parametrize("qc,kc,window", [(32, 32, None), (16, 64, None),
+                                          (64, 16, 40), (128, 128, None)])
+def test_flash_vs_naive(qc, kc, window):
+    key = jax.random.PRNGKey(0)
+    B, S, H, K, hd = 2, 128, 4, 2, 16
+    q = jax.random.normal(key, (B, S, H, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, K, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, K, hd))
+    out = flash_attention(q, k, v, scale=hd**-0.5, window=window, q_chunk=qc, k_chunk=kc)
+    ref = _naive_attention(q, k, v, hd**-0.5, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-6)
+
+
+def test_gqa_decode_matches_prefill():
+    cfg = AttnConfig(d_model=32, n_heads=4, n_kv_heads=2, head_dim=8)
+    p = gqa_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 9, 32), jnp.float32)
+    full, _ = gqa_apply(p, x, cfg, jnp.arange(9), compute_dtype=jnp.float32)
+    cache = {"k": jnp.zeros((1, 16, 2, 8)), "v": jnp.zeros((1, 16, 2, 8))}
+    _, cache = gqa_apply(p, x[:, :8], cfg, jnp.arange(8), cache=cache,
+                         cache_pos=jnp.int32(0), compute_dtype=jnp.float32)
+    step, _ = gqa_apply(p, x[:, 8:9], cfg, jnp.asarray([8]), cache=cache,
+                        cache_pos=jnp.int32(8), compute_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(step[0, 0]), np.asarray(full[0, 8]),
+                               rtol=2e-3, atol=2e-5)
+
+
+def test_ssd_chunk_invariance():
+    """Chunked SSD must be chunk-size independent (exactness of the scan)."""
+    cfg32 = SSMConfig(d_model=32, d_state=8, head_dim=8, expand=2, chunk=32)
+    cfg8 = SSMConfig(d_model=32, d_state=8, head_dim=8, expand=2, chunk=8)
+    p = ssm_init(jax.random.PRNGKey(0), cfg32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, 32), jnp.float32)
+    y32, _ = ssm_apply(p, x, cfg32, compute_dtype=jnp.float32)
+    y8, _ = ssm_apply(p, x, cfg8, compute_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(y32), np.asarray(y8), rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_prefill_then_decode():
+    cfg = SSMConfig(d_model=32, d_state=8, head_dim=8, expand=2, chunk=16)
+    p = ssm_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 17, 32), jnp.float32)
+    y_full, _ = ssm_apply(p, x, cfg, compute_dtype=jnp.float32)
+    cache = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), ssm_cache_shape(cfg, 1, jnp.float32))
+    y_pre, cache = ssm_apply(p, x[:, :16], cfg, cache=cache, compute_dtype=jnp.float32)
+    y_step, _ = ssm_apply(p, x[:, 16:17], cfg, cache=cache, compute_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(y_step[0, 0]), np.asarray(y_full[0, 16]),
+                               rtol=2e-3, atol=2e-4)
+
+
+def test_moe_high_capacity_matches_dense_dispatch():
+    """With capacity >> need, the gather dispatch must equal the dense
+    weighted-sum-over-experts formulation."""
+    cfg = MoEConfig(n_experts=4, top_k=2, d_expert=16, capacity_factor=8.0)
+    p = moe_init(jax.random.PRNGKey(0), 24, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 24), jnp.float32)
+    y, aux = moe_apply(p, x, cfg, compute_dtype=jnp.float32)
+    assert float(aux["dropped_frac"]) == 0.0
+    # dense reference
+    xf = x.reshape(-1, 24)
+    logits = xf @ p["router"]
+    probs = jax.nn.softmax(logits, -1)
+    topw, tope = jax.lax.top_k(probs, 2)
+    topw = topw / topw.sum(-1, keepdims=True)
+    y_ref = np.zeros((16, 24), np.float32)
+    for t in range(16):
+        for j in range(2):
+            e = int(tope[t, j])
+            h = jax.nn.silu(xf[t] @ p["wi_gate"][e]) * (xf[t] @ p["wi_up"][e])
+            y_ref[t] += float(topw[t, j]) * np.asarray(h @ p["wo"][e])
+    np.testing.assert_allclose(np.asarray(y).reshape(16, 24), y_ref, rtol=2e-4, atol=2e-4)
+
+
+def test_moe_capacity_drops_accounted():
+    cfg = MoEConfig(n_experts=2, top_k=1, d_expert=8, capacity_factor=0.25)
+    p = moe_init(jax.random.PRNGKey(0), 16, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 32, 16), jnp.float32)
+    _, aux = moe_apply(p, x, cfg, compute_dtype=jnp.float32)
+    assert float(aux["dropped_frac"]) > 0.0
+
+
+@pytest.mark.parametrize("name", ["qwen3-0.6b", "glm4-9b", "deepseek-v2-lite-16b",
+                                  "mamba2-2.7b", "jamba-1.5-large-398b", "whisper-tiny"])
+def test_prefill_decode_consistency(name):
+    cfg = reduced(get_config(name), compute_dtype=jnp.float32, cache_dtype=jnp.float32)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 2, 16
+    batch = smoke_batch(cfg, batch=B, seq=S + 1)
+    if cfg.family == "encdec":
+        toks = batch["tokens"]
+        from repro.models.whisper import decode, encode
+        enc_out = encode(params, cfg, batch["enc_embeds"])
+        logits_full, _ = decode(params, cfg, toks, enc_out)
+        cache = model.init_cache(B, S + 4)
+        lg_pre, cache2 = model.prefill(
+            params, {"enc_embeds": batch["enc_embeds"], "tokens": toks[:, :S]}, cache)
+        # NB: prefill's enc_out comes from the same embeds -> identical
+        lg_dec, _ = model.decode_step(params, cache2, toks[:, S], jnp.int32(S))
+    elif cfg.input_mode == "embeds":
+        emb = batch["embeds"]
+        logits_full, _, _ = T.lm_forward(params, cfg, emb)
+        cache = model.init_cache(B, S + 4)
+        lg_pre, cache2 = model.prefill(params, {"embeds": emb[:, :S]}, cache)
+        lg_dec, _ = model.decode_step(params, cache2, emb[:, S], jnp.int32(S))
+    else:
+        toks = batch["tokens"]
+        logits_full, _, _ = T.lm_forward(params, cfg, toks)
+        cache = model.init_cache(B, S + 4)
+        lg_pre, cache2 = model.prefill(params, {"tokens": toks[:, :S]}, cache)
+        lg_dec, _ = model.decode_step(params, cache2, toks[:, S], jnp.int32(S))
+    scale = float(jnp.abs(logits_full).max())
+    assert float(jnp.abs(lg_pre - logits_full[:, S - 1]).max()) / scale < 1e-4
+    assert float(jnp.abs(lg_dec - logits_full[:, S]).max()) / scale < 1e-4
+
+
+def test_active_params_sane():
+    for name, lo, hi in [("gemma-7b", 7e9, 10e9), ("qwen3-0.6b", 0.3e9, 0.8e9),
+                         ("deepseek-v2-lite-16b", 1.5e9, 4e9),
+                         ("jamba-1.5-large-398b", 30e9, 120e9)]:
+        n = Model(get_config(name)).active_params()
+        assert lo < n < hi, (name, n)
+
+
+def test_total_params_sane():
+    # NB: moonshot's *assigned* config (48L x 64 experts x d_ff 1408) works
+    # out to ~27B total — the assignment's numbers are authoritative over the
+    # "16b" in the name (the hf Moonlight-16B has 27 layers).
+    for name, lo, hi in [("gemma-7b", 7e9, 10e9),
+                         ("deepseek-v2-lite-16b", 12e9, 20e9),
+                         ("moonshot-v1-16b-a3b", 20e9, 35e9),
+                         ("mamba2-2.7b", 2e9, 3.5e9),
+                         ("jamba-1.5-large-398b", 330e9, 450e9)]:
+        n = Model(get_config(name)).total_params()
+        assert lo < n < hi, (name, n / 1e9)

@@ -1,0 +1,102 @@
+"""The balance model must reproduce the paper's numbers exactly."""
+import numpy as np
+import pytest
+
+from repro.core import formats as F
+from repro.core import perfmodel as PM
+from repro.core.matrices import holstein_hubbard_surrogate, random_sparse
+from repro.utils.hw import NEHALEM, TPU_V5E, WOODCREST
+
+
+def test_paper_balance_numbers():
+    """CRS = 10 B/F and JDS = 18 B/F at fp64/int32 (paper Sec. 2)."""
+    am = PM.PAPER_FP64
+    assert PM.balance_csr(am) == pytest.approx(10.0)
+    assert PM.balance_jds(am) == pytest.approx(18.0)
+
+
+def test_blocked_jds_approaches_crs():
+    """Paper: blocking 'eventually becomes equal to CRS balance'."""
+    am = PM.PAPER_FP64
+    b = PM.balance_blocked_jds(am, rows_per_block=1000, nnz_per_row=14)
+    assert b == pytest.approx(PM.balance_csr(am, nnz_per_row=14))
+    assert b < PM.balance_jds(am)
+
+
+def test_index_overhead_50pct():
+    """Paper Fig 2: indirect addressing costs ~+50% for ISADD (the 4-byte
+    index against an 8-byte value)."""
+    dense_bytes = 8          # PDADD: one fp64 load
+    indirect_bytes = 8 + 4   # ISADD: value + index
+    assert indirect_bytes / dense_bytes == pytest.approx(1.5)
+
+
+def test_waste_from_stride():
+    assert PM.waste_from_stride(1, 8) == 1.0
+    assert PM.waste_from_stride(8, 8) == 8.0
+    assert PM.waste_from_stride(530, 8) == 8.0  # full line per element
+    assert PM.waste_from_stride(4, 8) == 4.0
+
+
+def test_dia_balance_beats_csr():
+    am = PM.PAPER_FP64
+    assert PM.balance_dia(am, n_diags=12, occupancy=0.9) < PM.balance_csr(am)
+
+
+def test_bsr_balance_amortizes_indices():
+    am = PM.TPU_FP32
+    b_small = PM.balance_bsr(am, (1, 1), fill_ratio=1.0)
+    b_big = PM.balance_bsr(am, (8, 128), fill_ratio=1.0)
+    assert b_big < b_small
+
+
+def test_prediction_memory_bound():
+    am = PM.TPU_FP32
+    p = PM.predict("csr", PM.balance_csr(am, 14), nnz=10**7, chip=TPU_V5E)
+    assert p.bound == "memory"
+    assert p.time_s > 0 and p.gflops > 0
+
+
+def test_predictions_scale_with_bandwidth():
+    am = PM.PAPER_FP64
+    b = PM.balance_csr(am, 14)
+    t_wood = PM.predict("csr", b, 10**6, chip=WOODCREST).time_s
+    t_neh = PM.predict("csr", b, 10**6, chip=NEHALEM).time_s
+    assert t_wood / t_neh == pytest.approx(NEHALEM.hbm_bytes_per_s / WOODCREST.hbm_bytes_per_s, rel=0.01)
+
+
+def test_advisor_prefers_hybrid_for_hh():
+    """The HH matrix (60% nnz in diagonals) should advise the DIA hybrid."""
+    m = holstein_hubbard_surrogate(2000, seed=0)
+    st = F.matrix_stats(m)
+    preds = PM.advise(st, m.row_lengths(), am=PM.TPU_FP32, C=8)
+    assert "hybrid" in preds
+    assert preds["_best"] in ("hybrid", "csr", "sell")
+    assert preds["hybrid"].time_s <= preds["jds"].time_s
+
+
+def test_advisor_uniform_matrix_no_hybrid():
+    m = random_sparse(500, 500, 8, seed=1)
+    st = F.matrix_stats(m)
+    preds = PM.advise(st, m.row_lengths())
+    assert "hybrid" not in preds  # no dominant diagonals -> no split
+
+
+def test_sell_pad_ratio_monotone_in_sigma():
+    """Larger sorting windows can only reduce (or keep) SELL padding."""
+    m = holstein_hubbard_surrogate(1500, seed=3)
+    lens = m.row_lengths()
+    r_small = PM.sell_pad_ratio(lens, C=8, sigma=8)
+    r_big = PM.sell_pad_ratio(lens, C=8, sigma=len(lens))
+    assert r_big <= r_small + 1e-9
+    assert r_big >= 1.0
+
+
+def test_streamed_bytes_concrete_vs_model(hh_small):
+    am = PM.TPU_FP32
+    csr_bytes = PM.spmv_streamed_bytes(hh_small, am)
+    sell = F.SELL.from_csr(hh_small, C=8)
+    sell_bytes = PM.spmv_streamed_bytes(sell, am)
+    assert sell_bytes >= csr_bytes * 0.9  # padding can only add traffic
+    hyb = F.split_dia(hh_small)
+    assert PM.spmv_streamed_bytes(hyb, am) < sell_bytes  # the hybrid's win

@@ -1,0 +1,83 @@
+"""Reference SpMV per format vs the dense oracle (+ hypothesis sweeps)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import formats as F
+from repro.core import spmv as S
+from repro.core.matrices import block_sparse_dense, laplacian_2d, random_sparse
+
+FORMATS = [("csr", {}), ("ell", {}), ("jds", {}), ("sell", dict(C=8)),
+           ("sell", dict(C=16, sigma=32, sort_cols=True)), ("hybrid", {})]
+
+
+def _check(m, fmt, kw, dtype=np.float32, rtol=2e-5):
+    d = m.to_dense().astype(np.float64)
+    x = np.random.default_rng(3).standard_normal(m.shape[1]).astype(dtype)
+    y_ref = d @ x.astype(np.float64)
+    obj = F.convert(m, fmt, **kw)
+    y = np.asarray(S.spmv(obj, jnp.asarray(x)), np.float64)
+    scale = max(1e-9, np.abs(y_ref).max())
+    assert np.abs(y - y_ref).max() / scale < rtol, fmt
+
+
+@pytest.mark.parametrize("fmt,kw", FORMATS)
+def test_formats_vs_dense(hh_small, fmt, kw):
+    _check(hh_small, fmt, kw)
+
+
+@pytest.mark.parametrize("fmt,kw", FORMATS)
+def test_laplacian(fmt, kw):
+    _check(laplacian_2d(16, 12, dtype=np.float32), fmt, kw)
+
+
+def test_bsr_spmv_spmm():
+    d = block_sparse_dense(64, 256, (8, 128), 0.4, seed=1)
+    m = F.BSR.from_dense(d, (8, 128))
+    x = np.random.default_rng(0).standard_normal(256).astype(np.float32)
+    y = np.asarray(S.bsr_spmv(m, jnp.asarray(x)))
+    np.testing.assert_allclose(y, d @ x, rtol=2e-4, atol=1e-4)
+    X = np.random.default_rng(1).standard_normal((256, 16)).astype(np.float32)
+    Y = np.asarray(S.bsr_spmm(m, jnp.asarray(X)))
+    np.testing.assert_allclose(Y, d @ X, rtol=2e-4, atol=1e-4)
+
+
+def test_make_spmv_jitted(hh_small):
+    f = S.make_spmv(F.convert(hh_small, "sell", C=8))
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(hh_small.shape[1]).astype(np.float32))
+    y1 = f(x)
+    y2 = f(x * 2)
+    np.testing.assert_allclose(np.asarray(y2), 2 * np.asarray(y1), rtol=1e-5)
+
+
+def test_flops_accounting(hh_small):
+    assert S.flops_of(hh_small) == 2 * hh_small.nnz
+
+
+def test_empty_rows():
+    # rows with zero entries must produce zeros, not garbage
+    rows = np.array([0, 0, 3], np.int32)
+    cols = np.array([1, 2, 0], np.int32)
+    vals = np.array([1.0, 2.0, 3.0], np.float32)
+    m = F.CSR.from_coo(F.COO(rows, cols, vals, (5, 4)))
+    x = jnp.asarray(np.ones(4, np.float32))
+    for fmt, kw in FORMATS:
+        y = np.asarray(S.spmv(F.convert(m, fmt, **kw), x))
+        np.testing.assert_allclose(y, m.to_dense() @ np.ones(4), atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(8, 48), nnz=st.integers(1, 8), seed=st.integers(0, 999))
+def test_property_spmv_equivalence(n, nnz, seed):
+    """All formats compute the same y for random matrices (the system's
+    central invariant: storage scheme never changes the math)."""
+    m = random_sparse(n, n, min(nnz, n), seed=seed)
+    x = np.random.default_rng(seed).standard_normal(n).astype(np.float32)
+    ys = {}
+    for fmt, kw in [("csr", {}), ("ell", {}), ("jds", {}), ("sell", dict(C=4))]:
+        ys[fmt] = np.asarray(S.spmv(F.convert(m, fmt, **kw), jnp.asarray(x)))
+    base = ys.pop("csr")
+    for fmt, y in ys.items():
+        np.testing.assert_allclose(y, base, rtol=2e-4, atol=2e-5)
