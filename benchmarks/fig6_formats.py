@@ -16,6 +16,7 @@ from repro.core import formats as F
 from repro.core import perfmodel as PM
 from repro.core import spmv as S
 from repro.core.matrices import holstein_hubbard_surrogate
+from repro.core.plan import SpMVPlan
 from repro.utils.hw import TPU_V5E
 
 from .common import host_chip, row, timeit
@@ -53,7 +54,8 @@ def run(full: bool = False):
         frac_back = float((d < 0).mean())
         rows.append(row("fig6a", name, frac_small, frac_back))
 
-    # 6b: serial SpMV performance per format
+    # 6b: serial SpMV performance per format, planned (compiled SpMVPlan)
+    # vs naive (per-call make_spmv closure, the pre-plan path)
     x = jnp.asarray(np.random.default_rng(0).standard_normal(n).astype(np.float32))
     st = F.matrix_stats(m)
     lens = m.row_lengths()
@@ -66,15 +68,16 @@ def run(full: bool = False):
          PM.balance_sell(PM.TPU_FP32, PM.sell_pad_ratio(lens, 8, 1024), st["nnz_per_row_mean"])),
         ("hybrid", F.split_dia(m), None),
     ]:
-        f = S.make_spmv(obj)
-        t = timeit(f, x, repeats=3)
-        gflops = 2 * m.nnz / t / 1e9
         if balance is not None:
-            pred = PM.predict(name, balance, m.nnz, chip=TPU_V5E)
-            rows.append(row("fig6b", name, gflops, t * 1e3, pred.gflops))
+            pred_gflops = PM.predict(name, balance, m.nnz, chip=TPU_V5E).gflops
         else:
-            am = PM.TPU_FP32
-            bytes_h = PM.spmv_streamed_bytes(obj, am)
-            pred_t = bytes_h / TPU_V5E.hbm_bytes_per_s
-            rows.append(row("fig6b", name, gflops, t * 1e3, 2 * m.nnz / pred_t / 1e9))
+            bytes_h = PM.spmv_streamed_bytes(obj, PM.TPU_FP32)
+            pred_gflops = 2 * m.nnz / (bytes_h / TPU_V5E.hbm_bytes_per_s) / 1e9
+        plan = SpMVPlan.compile(obj)
+        t_plan = timeit(plan.apply, x, repeats=3)
+        rows.append(row("fig6b", f"{name}_planned", 2 * m.nnz / t_plan / 1e9,
+                        t_plan * 1e3, pred_gflops))
+        t = timeit(S.make_naive_spmv(obj), x, repeats=3)
+        rows.append(row("fig6b", f"{name}_naive", 2 * m.nnz / t / 1e9,
+                        t * 1e3, pred_gflops))
     return rows

@@ -5,6 +5,10 @@ the SELL analogue sweeps the sorting window sigma (and chunk height C):
 larger sigma reduces padding (JDS-like), smaller sigma preserves locality
 (RBJDS-like).  We report the padding ratio (the model's streamed-bytes
 driver) and measured host GFLOP/s.
+
+The sweep runs through compiled SpMVPlans (the serving path); one
+plan-vs-naive pair is kept per figure so the preprocessing win stays
+visible, and the model's Pallas block choice is reported per config.
 """
 from __future__ import annotations
 
@@ -15,6 +19,7 @@ from repro.core import formats as F
 from repro.core import perfmodel as PM
 from repro.core import spmv as S
 from repro.core.matrices import holstein_hubbard_surrogate
+from repro.core.plan import SpMVPlan
 
 from .common import row, timeit
 
@@ -30,11 +35,20 @@ def run(full: bool = False):
         for sigma in sigmas:
             pad = PM.sell_pad_ratio(lens, C, sigma)
             obj = F.SELL.from_csr(m, C=C, sigma=sigma)
-            t = timeit(S.make_spmv(obj), x, repeats=3)
+            plan = SpMVPlan.compile(obj)
+            t = timeit(plan.apply, x, repeats=3)
+            W0 = int(np.asarray(obj.chunk_width).max())
+            blk = PM.select_pallas_blocks(obj.n_chunks, W0, C, n)
             rows.append(row("fig7", f"sell_C{C}_sigma{sigma}", 2 * m.nnz / t / 1e9,
-                            pad, t * 1e3))
+                            pad, t * 1e3,
+                            f"cb{blk.chunk_block}_wb{blk.width_block}"))
+    # plan-vs-naive on one mid-sweep config (the host-unrolled chunk loop)
+    obj = F.SELL.from_csr(m, C=8, sigma=128)
+    t_naive = timeit(S.make_naive_spmv(obj), x, repeats=3)
+    rows.append(row("fig7", "sell_C8_sigma128_naive", 2 * m.nnz / t_naive / 1e9,
+                    PM.sell_pad_ratio(lens, 8, 128), t_naive * 1e3))
     # unblocked baselines, as in the paper's figure
     for name, obj in [("csr", m), ("jds", F.JDS.from_csr(m))]:
-        t = timeit(S.make_spmv(obj), x, repeats=3)
+        t = timeit(SpMVPlan.compile(obj).apply, x, repeats=3)
         rows.append(row("fig7", name, 2 * m.nnz / t / 1e9, 1.0, t * 1e3))
     return rows

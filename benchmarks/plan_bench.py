@@ -1,0 +1,96 @@
+"""Planned vs naive repeated-SpMV benchmark — the plan layer's perf receipt.
+
+The repeated-SpMV setting (eigensolver iterations, decode steps) is the
+paper's accounting unit; this module measures it directly:
+
+* per-format GFlop/s of the compiled plan path (steady state over >=100
+  iterations), plus the perfmodel's roofline prediction;
+* plan-vs-naive speedup for CSR and SELL — the two hot paths the plan layer
+  replaces (per-call searchsorted row-id expansion; host-unrolled chunk
+  loop).  "naive" is the pre-plan ``make_spmv`` formulation, preserved as
+  ``core.spmv.make_naive_spmv``.
+
+``run()`` emits the standard CSV rows; ``run_json()`` returns a dict for
+``benchmarks.run --json`` (the perf-trajectory artifact, BENCH_PR1.json).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import formats as F
+from repro.core import spmv as S
+from repro.core.matrices import holstein_hubbard_surrogate
+from repro.core.plan import SpMVPlan
+
+from .common import row
+
+#: formats benchmarked through the plan path
+PLAN_FORMATS = ("csr", "ell", "jds", "sell", "hybrid")
+#: formats also measured through the naive per-call path (the acceptance pair)
+NAIVE_FORMATS = ("csr", "sell")
+
+
+def _time_iters(fn, x, iters: int) -> float:
+    """Steady-state seconds/call over ``iters`` calls (warmup excluded)."""
+    jax.block_until_ready(fn(x))
+    t0 = time.perf_counter()
+    y = None
+    for _ in range(iters):
+        y = fn(x)
+    jax.block_until_ready(y)
+    return (time.perf_counter() - t0) / iters
+
+
+def measure(n: int = 4000, iters: int = 100, seed: int = 0) -> dict:
+    m = holstein_hubbard_surrogate(n, seed=seed)
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(n).astype(np.float32))
+    flops = 2.0 * m.nnz
+    out = {
+        "matrix": {"kind": "holstein_hubbard_surrogate", "n": n, "nnz": m.nnz,
+                   "seed": seed},
+        "iters": iters,
+        "backend": jax.default_backend(),
+        "formats": {},
+    }
+    for fmt in PLAN_FORMATS:
+        obj = F.convert(m, fmt) if fmt != "sell" else F.SELL.from_csr(m, C=8, sigma=256)
+        t_build0 = time.perf_counter()
+        plan = SpMVPlan.compile(obj)
+        build_s = time.perf_counter() - t_build0
+        t_plan = _time_iters(plan.apply, x, iters)
+        entry = {
+            "gflops_planned": flops / t_plan / 1e9,
+            "t_planned_s": t_plan,
+            "plan_build_s": build_s,
+            "kernel": plan.report.kernel,
+            "predicted_gflops": plan.report.predicted_gflops,
+            "balance_bytes_per_flop": plan.report.balance_bytes_per_flop,
+        }
+        if fmt in NAIVE_FORMATS:
+            f_naive = S.make_naive_spmv(obj)
+            t_naive = _time_iters(f_naive, x, iters)
+            entry["gflops_naive"] = flops / t_naive / 1e9
+            entry["t_naive_s"] = t_naive
+            entry["speedup_plan_vs_naive"] = t_naive / t_plan
+        out["formats"][fmt] = entry
+    return out
+
+
+def run(full: bool = False):
+    res = measure(n=20_000 if full else 4000, iters=100)
+    rows = []
+    for fmt, e in res["formats"].items():
+        rows.append(row("plan_bench", f"{fmt}_planned", e["gflops_planned"],
+                        e["t_planned_s"] * 1e3, e["predicted_gflops"]))
+        if "gflops_naive" in e:
+            rows.append(row("plan_bench", f"{fmt}_naive", e["gflops_naive"],
+                            e["t_naive_s"] * 1e3, e["speedup_plan_vs_naive"]))
+    return rows
+
+
+def run_json(full: bool = False) -> dict:
+    return measure(n=20_000 if full else 4000, iters=100)

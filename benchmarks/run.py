@@ -1,15 +1,19 @@
 """Benchmark driver: one module per paper table/figure.
 
 ``PYTHONPATH=src python -m benchmarks.run [--full] [--only figX]``
+``PYTHONPATH=src python -m benchmarks.run --json BENCH_PR1.json``
 
 Prints ``figure,name,value[,extra...]`` CSV rows.  Default sizes finish in
 minutes on CPU; ``--full`` uses out-of-cache sizes matching the paper's
 methodology ("array lengths ... such that the problem does not fit in any
-cache level").
+cache level").  ``--json PATH`` runs the plan benchmark only and writes the
+per-format GFlop/s + plan-vs-naive speedups as a JSON perf-trajectory
+artifact.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -24,6 +28,7 @@ MODULES = [
     "fig8_parallel_scaling",
     "fig9_partition_balance",
     "perfmodel_validation",
+    "plan_bench",
 ]
 
 
@@ -31,10 +36,26 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the plan benchmark (per-format GFlop/s, "
+                         "plan-vs-naive speedup) as JSON and exit")
     args = ap.parse_args(argv)
 
+    if args.json:
+        from benchmarks.plan_bench import run_json
+        payload = run_json(full=args.full)
+        with open(args.json, "w") as fh:
+            json.dump(payload, fh, indent=2, sort_keys=True)
+        print(f"# wrote {args.json}", file=sys.stderr)
+        for fmt, e in payload["formats"].items():
+            extra = (f" speedup={e['speedup_plan_vs_naive']:.2f}x"
+                     if "speedup_plan_vs_naive" in e else "")
+            print(f"# {fmt}: {e['gflops_planned']:.3f} GF/s planned{extra}",
+                  file=sys.stderr)
+        return 0
+
     failures = 0
-    print("figure,name,value,extra1,extra2")
+    print("figure,name,value,extra1,extra2,extra3")
     for name in MODULES:
         if args.only and args.only not in name:
             continue

@@ -25,6 +25,7 @@ from repro.core import spmv as S
 from repro.core.eigensolver import lanczos
 from repro.core.matrices import (HolsteinHubbardParams, holstein_hubbard_exact,
                                  holstein_hubbard_surrogate)
+from repro.core.plan import SpMVPlan
 
 
 def main():
@@ -45,21 +46,22 @@ def main():
     m = holstein_hubbard_surrogate(args.n, seed=0)
     print(f"[surrogate] N={args.n} nnz={m.nnz}")
 
-    # --- 2. format shoot-out ----------------------------------------------
+    # --- 2. format shoot-out (compiled plans: preprocess once per format) ---
     x = jax.random.normal(jax.random.PRNGKey(0), (args.n,), jnp.float32)
     best_name, best_t, best_fn = None, np.inf, None
     for name, obj in [("csr", m), ("ell", F.ELL.from_csr(m)),
                       ("jds", F.JDS.from_csr(m)),
                       ("sell", F.SELL.from_csr(m, C=8, sigma=1024)),
                       ("hybrid", F.split_dia(m))]:
-        f = S.make_spmv(obj)
+        f = SpMVPlan.compile(obj)
         jax.block_until_ready(f(x))
         t0 = time.perf_counter()
         for _ in range(3):
             y = f(x)
         jax.block_until_ready(y)
         t = (time.perf_counter() - t0) / 3
-        print(f"  {name:7s} {2*m.nnz/t/1e9:7.2f} GFLOP/s ({t*1e3:.2f} ms)")
+        print(f"  {name:7s} {2*m.nnz/t/1e9:7.2f} GFLOP/s ({t*1e3:.2f} ms) "
+              f"[{f.report.kernel}]")
         if t < best_t:
             best_name, best_t, best_fn = name, t, f
 
@@ -72,14 +74,11 @@ def main():
     print(f"  E0={res.eigenvalues[0]:.6f} ({res.n_spmv} SpMVs, {dt:.2f}s total, "
           f"~{100*spmv_t/dt:.0f}% in SpMV)")
 
-    # --- 4. distributed SpMV over local devices -----------------------------
-    parts = len(jax.devices())
-    mesh = D.make_mesh_1d()
-    blocks = D.build_row_blocks(m, parts, balance="nnz")
-    dist = jax.jit(D.make_allgather_spmv(blocks, mesh))
+    # --- 4. distributed SpMV over local devices (per-shard plans) -----------
+    dist = D.compile_distributed_plan(m, strategy="allgather", balance="nnz")
     err = float(jnp.abs(dist(x) - best_fn(x)).max())
-    print(f"[distributed] {parts} device(s), allgather variant, "
-          f"max |diff| vs serial = {err:.2e}")
+    print(f"[distributed] {dist.parts} device(s), {dist.strategy} variant, "
+          f"imbalance={dist.imbalance:.3f}, max |diff| vs serial = {err:.2e}")
 
 
 if __name__ == "__main__":

@@ -22,6 +22,18 @@ import numpy as np
 Apply = Callable[[jnp.ndarray], jnp.ndarray]
 
 
+def as_apply(op) -> Apply:
+    """Normalize the injected operator: a callable (closure, jitted fn, or
+    SpMVPlan) passes through; a bare format container is compiled into an
+    SpMVPlan once, so every Lanczos iteration reuses the same cached
+    preprocessing + jitted executor."""
+    if callable(op):
+        return op
+    from .plan import SpMVPlan
+
+    return SpMVPlan.compile(op)
+
+
 @dataclass
 class LanczosResult:
     eigenvalues: np.ndarray      # converged Ritz values (ascending)
@@ -46,7 +58,11 @@ def lanczos(
     Host-level loop (m is small); each iteration performs exactly one SpMV —
     the paper's accounting unit.  With ``reorthogonalize`` the full basis is
     kept and Gram-Schmidt-corrected every step (stable for validation runs).
+
+    ``apply_A`` may be a callable, an ``SpMVPlan``, or a format container
+    (compiled to a plan on entry, so every iteration reuses it).
     """
+    apply_A = as_apply(apply_A)
     if v0 is None:
         v0 = jax.random.normal(jax.random.PRNGKey(seed), (n,), dtype)
     v = v0 / jnp.linalg.norm(v0)
@@ -102,6 +118,7 @@ def spectral_extent(apply_A: Apply, n: int, m: int = 32, **kw) -> tuple[float, f
 def power_iteration(apply_A: Apply, n: int, iters: int = 200, seed: int = 0,
                     dtype=jnp.float64) -> float:
     """|lambda|_max via power iteration — an independent cross-check oracle."""
+    apply_A = as_apply(apply_A)
     v = jax.random.normal(jax.random.PRNGKey(seed), (n,), dtype)
     v = v / jnp.linalg.norm(v)
 

@@ -244,6 +244,122 @@ def advise(
     return out
 
 
+def balance_of(fmt_obj, am: AccessModel = TPU_FP32) -> float:
+    """Algorithmic balance (bytes/Flop) for a *concrete* converted matrix —
+    the post-conversion analogue of ``advise``'s pattern-only estimates.
+    Pad/fill ratios are exact because the container is in hand."""
+    from . import formats as F
+
+    if isinstance(fmt_obj, F.CSR):
+        npr = fmt_obj.nnz / max(1, fmt_obj.shape[0])
+        return balance_csr(am, npr)
+    if isinstance(fmt_obj, F.COO):
+        # like CRS but with an explicit row index per element and a
+        # scattered (not register-held) result accumulation
+        per_elem = (am.value_bytes + 2 * am.index_bytes
+                    + am.invec_bytes_per_access() + 2 * am.value_bytes)
+        return per_elem / 2.0
+    if isinstance(fmt_obj, (F.ELL,)):
+        stored = int(np.prod(np.asarray(fmt_obj.val).shape))
+        npr = fmt_obj.nnz / max(1, fmt_obj.shape[0])
+        return balance_ell(am, stored / max(1, fmt_obj.nnz), npr)
+    if isinstance(fmt_obj, F.JDS):
+        return balance_jds(am)
+    if isinstance(fmt_obj, F.SELL):
+        stored = int(np.asarray(fmt_obj.val).shape[0])
+        npr = fmt_obj.nnz / max(1, fmt_obj.shape[0])
+        return balance_sell(am, stored / max(1, fmt_obj.nnz), npr)
+    if isinstance(fmt_obj, F.BSR):
+        return balance_bsr(am, fmt_obj.block_shape, fill_ratio=1.0)
+    if isinstance(fmt_obj, F.DIA):
+        stored = int(np.prod(np.asarray(fmt_obj.data).shape))
+        nd = max(1, int(np.asarray(fmt_obj.offsets).shape[0]))
+        occ = fmt_obj.nnz / max(1, stored)
+        return balance_dia(am, nd, occupancy=max(1e-3, occ))
+    if isinstance(fmt_obj, F.HybridDIA):
+        n_dia, n_rest = fmt_obj.dia.nnz, fmt_obj.rest.nnz
+        total = max(1, n_dia + n_rest)
+        return (n_dia * balance_of(fmt_obj.dia, am)
+                + n_rest * balance_of(fmt_obj.rest, am)) / total
+    raise TypeError(type(fmt_obj))
+
+
+# ---------------------------------------------------------------------------
+# Pallas block autotuning (model-driven, no on-device search)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class BlockChoice:
+    """Selected (chunk_block, width_block) for the SELL Pallas kernel."""
+
+    chunk_block: int
+    width_block: int
+    width_padded: int     # W after padding to a width_block multiple
+    vmem_bytes: int       # working-set claim of the choice
+    fits_vmem: bool
+
+
+def _divisors_desc(n: int, cap: int) -> list[int]:
+    return [d for d in range(min(n, cap), 0, -1) if n % d == 0]
+
+
+def select_pallas_blocks(
+    n_chunks: int,
+    width: int,
+    C: int,
+    n_cols: int,
+    *,
+    value_bytes: int = 4,
+    index_bytes: int = 4,
+    chip: ChipSpec = TPU_V5E,
+    vmem_fraction: float = 0.5,
+    max_chunk_block: int = 64,
+) -> BlockChoice:
+    """Pick (chunk_block, width_block) for ``sell_spmv_arrays`` from the
+    byte model alone: maximize the streamed slab (pipeline amortization)
+    subject to the VMEM working set fitting ``vmem_fraction`` of the chip's
+    VMEM (the rest is the double-buffering margin).  Prefers a full-width
+    block (one pass over the output tile, no revisits) when it fits.
+
+    Deterministic and host-only — the "autotuning" is the paper's predictive
+    model applied to the kernel's BlockSpec instead of an on-device sweep.
+    """
+    from ..kernels.sell_spmv import vmem_bytes as _vmem_claim  # deferred: no cycle
+
+    budget = int(chip.vmem_bytes * vmem_fraction)
+    width = max(1, width)
+    n_chunks = max(1, n_chunks)
+    # width_block candidates: powers of two up to width (padding W up to a
+    # multiple costs streamed zeros, so only consider wb <= next_pow2(width))
+    wbs = []
+    wb = 1
+    while wb < width:
+        wb *= 2
+    wbs.append(wb)  # full width in a single pass
+    while wb > 1:
+        wb //= 2
+        wbs.append(wb)
+    best: BlockChoice | None = None
+    for wb in wbs:                       # descending: full-width first
+        w_pad = -(-width // wb) * wb
+        for cb in _divisors_desc(n_chunks, max_chunk_block):
+            claim = _vmem_claim(cb, wb, C, n_cols, value_bytes, index_bytes, value_bytes)
+            if claim > budget:
+                continue
+            cand = BlockChoice(cb, wb, w_pad, int(claim), True)
+            if best is None or (cand.chunk_block * cand.width_block
+                                > best.chunk_block * best.width_block):
+                best = cand
+        if best is not None and best.width_block == wb:
+            break  # larger slabs only shrink from here; full-width preferred
+    if best is None:  # nothing fits (x alone blows VMEM): caller must fall back
+        wb = wbs[-1]
+        claim = _vmem_claim(1, wb, C, n_cols, value_bytes, index_bytes, value_bytes)
+        best = BlockChoice(1, wb, -(-width // wb) * wb, int(claim), False)
+    return best
+
+
 def spmv_streamed_bytes(fmt_obj, am: AccessModel) -> float:
     """Model-side byte count for a *concrete* converted matrix (used to
     validate predictions against measured/compiled traffic)."""

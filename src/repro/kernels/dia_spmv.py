@@ -43,9 +43,12 @@ def dia_spmv_arrays(
     offsets: tuple[int, ...],
     tile: int = 512,
     pad0: int,
-    interpret: bool = True,
+    interpret: bool | None = None,
     out_dtype=None,
 ) -> jnp.ndarray:
+    if interpret is None:  # compiled on TPU, interpreter elsewhere
+        from ..utils.hw import pallas_interpret_default
+        interpret = pallas_interpret_default()
     nd, n_pad = data.shape
     assert n_pad % tile == 0
     odt = out_dtype or jnp.result_type(data.dtype, x_pad.dtype)

@@ -21,7 +21,6 @@ from . import bsr_spmm as _bsr
 from . import dia_spmv as _dia
 from . import moe_gemm as _moe
 from . import ref as _ref
-from . import sell_spmv as _sell
 
 
 def on_tpu() -> bool:
@@ -35,7 +34,8 @@ def _resolve(backend: str) -> str:
 
 
 def _interpret() -> bool:
-    return not on_tpu()
+    from ..utils.hw import pallas_interpret_default
+    return pallas_interpret_default()
 
 
 # ---------------------------------------------------------------------------
@@ -43,30 +43,18 @@ def _interpret() -> bool:
 # ---------------------------------------------------------------------------
 
 
-def make_sell_spmv(m: SELL, *, backend: str = "auto", chunk_block: int = 8,
-                   width_pad: int = 8):
-    """Returns jitted ``f(x) -> y`` for a concrete SELL matrix."""
-    be = _resolve(backend)
-    col3, val3, _ = m.padded_views(pad_width_to=width_pad)
-    nc = col3.shape[0]
-    cb = min(chunk_block, nc)
-    while nc % cb:
-        cb -= 1
-    col3j, val3j = jnp.asarray(col3), jnp.asarray(val3)
-    perm = jnp.asarray(np.asarray(m.perm))
-    n = m.shape[0]
+def make_sell_spmv(m: SELL, *, backend: str = "auto", chunk_block: int | None = None,
+                   width_pad: int | None = None):
+    """Returns jitted ``f(x) -> y`` for a concrete SELL matrix.
 
-    if be == "pallas":
-        def f(x):
-            tiles = _sell.sell_spmv_arrays(col3j, val3j, x, chunk_block=cb,
-                                           interpret=_interpret())
-            return _sell.sell_spmv_scatter(tiles, perm, n)
-    else:
-        def f(x):
-            tiles = _ref.sell_spmv_ref(col3j, val3j, x)
-            return _sell.sell_spmv_scatter(tiles, perm, n)
+    Delegates to the plan layer — one compile pipeline (perfmodel block
+    choice, VMEM-fit fallback, cached padded views) for both entry points.
+    """
+    from ..core.plan import SpMVPlan
 
-    return jax.jit(f)
+    plan = SpMVPlan.compile(m, backend=_resolve(backend),
+                            chunk_block=chunk_block, width_block=width_pad)
+    return plan.apply
 
 
 # ---------------------------------------------------------------------------

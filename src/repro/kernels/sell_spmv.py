@@ -17,7 +17,7 @@ TPU tiling:
     hoping the cache keeps it.
   * val/col slabs stream through VMEM tiles of (CB, WB, C) via the grid
     pipeline (the analogue of the paper's hardware prefetcher, but explicit
-    and guaranteed — see DESIGN.md on prefetch adaptation).
+    and guaranteed — see docs/DESIGN.md on prefetch adaptation).
 
 Grid: (nc/CB, W/WB); the W axis accumulates into the same output block
 (revisited output => sequential W iterations, init at w==0).
@@ -45,6 +45,9 @@ def _sell_kernel(col_ref, val_ref, x_ref, o_ref):
     o_ref[...] += jnp.sum(vals.astype(o_ref.dtype) * g.astype(o_ref.dtype), axis=1)
 
 
+from ..utils.hw import pallas_interpret_default as _auto_interpret
+
+
 @functools.partial(
     jax.jit, static_argnames=("chunk_block", "width_block", "interpret", "out_dtype")
 )
@@ -55,14 +58,17 @@ def sell_spmv_arrays(
     *,
     chunk_block: int = 8,
     width_block: int | None = None,
-    interpret: bool = True,
+    interpret: bool | None = None,
     out_dtype=None,
 ) -> jnp.ndarray:
     """col3/val3: (nc, W, C); x: (N,) -> (nc, C) tile results.
 
     nc must be divisible by chunk_block and W by width_block (pad at format
     construction; ``SELL.padded_views(pad_width_to=...)``).
+    ``interpret=None`` resolves to compiled on TPU, interpret elsewhere.
     """
+    if interpret is None:
+        interpret = _auto_interpret()
     nc, W, C = col3.shape
     wb = width_block or W
     assert nc % chunk_block == 0, (nc, chunk_block)

@@ -14,12 +14,12 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..core import perfmodel as PM
 from ..core.formats import BSR, CSR, SELL, matrix_stats
+from ..core.plan import SpMVPlan
 from ..kernels import ops as KOPS
 
 
@@ -53,9 +53,9 @@ class SparseLinear:
         elif fmt == "sell":
             csr = CSR.from_dense(w)
             mat = SELL.from_csr(csr, C=8, sigma=256)
-            fs = KOPS.make_sell_spmv(mat, backend=backend)
-            def apply_fn(x2d):
-                return jax.vmap(fs, in_axes=1, out_axes=1)(x2d)
+            plan = SpMVPlan.compile(mat, backend=backend)
+            def apply_fn(x2d):                # one fused SpMM, not B SpMVs
+                return plan.spmm(x2d)
         else:
             raise ValueError(fmt)
         return SparseLinear(fmt, mat, d_in, d_out, density, apply_fn)

@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.plan import SpMVPlan
 from ..models.registry import Model
 from .kv_cache import SlotManager, zeros_like_shapes
 
@@ -83,3 +84,56 @@ class Engine:
         w = param_bytes(self.model.param_shapes())
         c = cache_bytes(self.model.cache_shape(self.batch_size, self.max_len))
         return w + c / max(1, self.batch_size)
+
+
+class SparseOperatorServer:
+    """Plan-backed SpMV serving: register a matrix once, answer many queries.
+
+    The operator-level analogue of the token engine above: each registered
+    matrix is compiled into an ``SpMVPlan`` exactly once (preprocessing +
+    kernel selection + jit), then every query hits the cached executor —
+    single vectors via ``spmv``, same-matrix batches via one fused ``spmm``
+    wave (the continuous-batching trick applied to SpMV traffic).
+    """
+
+    def __init__(self, *, backend: str = "auto", chip=None):
+        from ..utils.hw import TPU_V5E
+        self.backend = backend
+        self.chip = chip or TPU_V5E
+        self._plans: dict = {}
+        self._calls: dict = {}
+
+    def register(self, name: str, matrix, **plan_kw):
+        """Compile (idempotently) and returns the plan's report."""
+        plan = SpMVPlan.compile(matrix, backend=self.backend, chip=self.chip,
+                                **plan_kw)
+        self._plans[name] = plan
+        self._calls.setdefault(name, 0)
+        return plan.report
+
+    def plan(self, name: str) -> SpMVPlan:
+        return self._plans[name]
+
+    def spmv(self, name: str, x: jnp.ndarray) -> jnp.ndarray:
+        self._calls[name] += 1
+        return self._plans[name](x)
+
+    def spmm(self, name: str, X: jnp.ndarray) -> jnp.ndarray:
+        """One batched wave: X (N, K) -> Y (M, K), counted as K queries."""
+        self._calls[name] += int(X.shape[1])
+        return self._plans[name].spmm(X)
+
+    def stats(self) -> dict:
+        """Per-matrix serving stats for the roofline discussion."""
+        out = {}
+        for name, plan in self._plans.items():
+            r = plan.report
+            out[name] = {
+                "calls": self._calls[name],
+                "format": r.format,
+                "kernel": r.kernel,
+                "nnz": r.nnz,
+                "predicted_gflops": r.predicted_gflops,
+                "predicted_bytes_per_call": r.balance_bytes_per_flop * 2.0 * r.nnz,
+            }
+        return out

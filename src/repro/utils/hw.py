@@ -132,6 +132,14 @@ def roofline(
     )
 
 
+def pallas_interpret_default() -> bool:
+    """Single source of truth for the Pallas execution mode: compiled on
+    TPU, interpreter everywhere else (the CPU/test fallback)."""
+    import jax
+
+    return jax.default_backend() != "tpu"
+
+
 def model_flops_per_token(n_params_active: float) -> float:
     """The standard 6N approximation (fwd 2N + bwd 4N) per token."""
     return 6.0 * n_params_active

@@ -1,10 +1,11 @@
-"""Storage-format containers: conversions, roundtrips, invariants (+ hypothesis)."""
+"""Storage-format containers: conversions, roundtrips, invariants.
+
+Hypothesis property sweeps live in test_property.py (optional test extra).
+"""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import formats as F
-from repro.core.matrices import holstein_hubbard_surrogate, random_sparse
 
 FORMATS = [("csr", {}), ("ell", {}), ("jds", {}), ("sell", dict(C=8)),
            ("sell", dict(C=8, sigma=32)), ("sell", dict(C=16, sort_cols=True)),
@@ -69,21 +70,3 @@ def test_matrix_stats(hh_small):
     assert 5 < st_["nnz_per_row_mean"] < 25
     assert 0.0 <= st_["frac_backward_jumps"] <= 1.0
     assert st_["frac_nnz_top12_diags"] > 0.3
-
-
-@settings(max_examples=20, deadline=None)
-@given(n=st.integers(8, 60), k=st.integers(1, 6), seed=st.integers(0, 1000))
-def test_property_roundtrip_all_formats(n, k, seed):
-    m = random_sparse(n, n, min(k, n), seed=seed)
-    d = m.to_dense()
-    for fmt, kw in [("ell", {}), ("jds", {}), ("sell", dict(C=4))]:
-        obj = F.convert(m, fmt, **kw)
-        np.testing.assert_allclose(obj.to_dense(), d, atol=1e-6)
-
-
-@settings(max_examples=10, deadline=None)
-@given(seed=st.integers(0, 100))
-def test_property_surrogate_symmetric(seed):
-    m = holstein_hubbard_surrogate(300, seed=seed)
-    d = m.to_dense()
-    np.testing.assert_allclose(d, d.T, atol=1e-6)

@@ -12,7 +12,10 @@ from repro.sharding import rules as R
 
 
 def _mesh(shape=(16, 16), names=("data", "model")):
-    return AbstractMesh(shape, names)
+    try:
+        return AbstractMesh(shape, names)
+    except TypeError:  # older jax: AbstractMesh(((name, size), ...))
+        return AbstractMesh(tuple(zip(names, shape)))
 
 
 def test_param_rules_qwen3():

@@ -1,0 +1,181 @@
+"""SpMVPlan: round-trip correctness, cached preprocessing, block autotuning,
+plan-aware consumers (eigensolver, serving, distributed)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import formats as F
+from repro.core import perfmodel as PM
+from repro.core import spmv as S
+from repro.core.matrices import block_sparse_dense, holstein_hubbard_surrogate, random_sparse
+from repro.core.plan import SpMVPlan, plan_all_formats
+
+PLAN_FORMATS = [("csr", {}), ("ell", {}), ("jds", {}), ("sell", dict(C=8)),
+                ("sell", dict(C=16, sigma=32, sort_cols=True)), ("hybrid", {})]
+
+
+def _rand_x(n, seed=3, k=None, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    shape = (n,) if k is None else (n, k)
+    return rng.standard_normal(shape).astype(dtype)
+
+
+# --- round-trip correctness -------------------------------------------------
+
+@pytest.mark.parametrize("fmt,kw", PLAN_FORMATS)
+def test_plan_matches_reference_spmv(hh_small, fmt, kw):
+    obj = F.convert(hh_small, fmt, **kw)
+    x = jnp.asarray(_rand_x(hh_small.shape[1]))
+    y_plan = np.asarray(SpMVPlan.compile(obj)(x))
+    y_ref = np.asarray(S.spmv(hh_small, x))
+    np.testing.assert_allclose(y_plan, y_ref, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("fmt,kw", PLAN_FORMATS)
+def test_plan_spmm_matches_stacked_spmv(hh_small, fmt, kw):
+    obj = F.convert(hh_small, fmt, **kw)
+    X = jnp.asarray(_rand_x(hh_small.shape[1], k=5))
+    Y = np.asarray(SpMVPlan.compile(obj).spmm(X))
+    plan = SpMVPlan.compile(obj)
+    cols = np.stack([np.asarray(plan(X[:, j])) for j in range(5)], axis=1)
+    np.testing.assert_allclose(Y, cols, rtol=2e-5, atol=2e-5)
+
+
+def test_plan_synthetic_matrices():
+    for seed in (0, 1):
+        m = random_sparse(80, 64, 5, seed=seed)
+        x = jnp.asarray(_rand_x(64, seed=seed))
+        y_ref = m.to_dense() @ np.asarray(x)
+        for fmt, kw in [("csr", {}), ("jds", {}), ("sell", dict(C=4))]:
+            y = np.asarray(SpMVPlan.compile(F.convert(m, fmt, **kw))(x))
+            np.testing.assert_allclose(y, y_ref, rtol=2e-4, atol=2e-4)
+
+
+def test_plan_bsr_and_dia():
+    d = block_sparse_dense(64, 256, (8, 128), 0.4, seed=1)
+    mb = F.BSR.from_dense(d, (8, 128))
+    x = jnp.asarray(_rand_x(256, seed=0))
+    np.testing.assert_allclose(np.asarray(SpMVPlan.compile(mb)(x)),
+                               d @ np.asarray(x), rtol=2e-4, atol=1e-4)
+    hh = holstein_hubbard_surrogate(500, seed=2)
+    dia = F.split_dia(hh).dia
+    xd = jnp.asarray(_rand_x(500, seed=1))
+    np.testing.assert_allclose(np.asarray(SpMVPlan.compile(dia)(xd)),
+                               dia.to_dense() @ np.asarray(xd), rtol=1e-4, atol=1e-4)
+
+
+# --- plan memoization + cached preprocessing --------------------------------
+
+def test_plan_compile_is_memoized(hh_small):
+    sell = F.convert(hh_small, "sell", C=8)
+    p1 = SpMVPlan.compile(sell)
+    p2 = SpMVPlan.compile(sell)
+    assert p1 is p2
+    p3 = SpMVPlan.compile(sell, backend="pallas")
+    assert p3 is not p1
+
+
+def test_plan_no_repreprocessing_across_calls(hh_small):
+    """Compiling and repeatedly executing a plan performs each host
+    preprocessing step exactly once."""
+    m = holstein_hubbard_surrogate(400, seed=7)
+    sell = F.SELL.from_csr(m, C=8)
+    before = S.precompute_stats()
+    p_csr = SpMVPlan.compile(m)
+    p_sell = SpMVPlan.compile(sell)
+    x = jnp.asarray(_rand_x(400))
+    for _ in range(4):
+        p_csr(x)
+        p_sell(x)
+        SpMVPlan.compile(m)  # re-compile hits the memo, not the builders
+    after = S.precompute_stats()
+    assert after["csr_row_ids"] - before["csr_row_ids"] == 1
+    assert after["sell_padded_views"] - before["sell_padded_views"] == 1
+
+
+def test_plan_report_fields(hh_small):
+    plan = SpMVPlan.compile(F.convert(hh_small, "sell", C=8))
+    r = plan.report
+    assert r.format == "sell" and r.nnz == hh_small.nnz
+    assert r.kernel in ("xla", "pallas", "pallas-interpret")
+    assert r.balance_bytes_per_flop > 0 and r.predicted_gflops > 0
+    assert r.bound in ("memory", "compute")
+
+
+# --- model-driven Pallas autotuning ----------------------------------------
+
+def test_select_pallas_blocks_fits_vmem():
+    from repro.kernels.sell_spmv import vmem_bytes
+    from repro.utils.hw import TPU_V5E
+    blk = PM.select_pallas_blocks(1000, 20, 8, 100_000)
+    assert 1000 % blk.chunk_block == 0
+    assert blk.width_padded % blk.width_block == 0
+    assert blk.fits_vmem
+    claim = vmem_bytes(blk.chunk_block, blk.width_block, 8, 100_000)
+    assert claim <= TPU_V5E.vmem_bytes / 2
+
+
+def test_select_pallas_blocks_overflow_flagged():
+    import dataclasses
+    tiny = dataclasses.replace(PM.TPU_V5E, vmem_bytes=1024)
+    blk = PM.select_pallas_blocks(1000, 20, 8, 1_000_000, chip=tiny)
+    assert not blk.fits_vmem  # x alone blows the budget -> caller falls back
+
+
+def test_plan_pallas_interpret_fallback(hh_small):
+    """Off-TPU the pallas backend runs the kernel in interpret mode and
+    stays correct (the compiled path flips on automatically on TPU)."""
+    sell = F.convert(hh_small, "sell", C=8)
+    plan = SpMVPlan.compile(sell, backend="pallas")
+    expected = "pallas" if jax.default_backend() == "tpu" else "pallas-interpret"
+    assert plan.report.kernel == expected
+    assert plan.report.chunk_block is not None
+    x = jnp.asarray(_rand_x(hh_small.shape[1]))
+    np.testing.assert_allclose(np.asarray(plan(x)), np.asarray(S.spmv(hh_small, x)),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_plan_all_formats_ranks(hh_small):
+    plans = plan_all_formats(hh_small, formats=("csr", "sell", "hybrid"))
+    assert set(plans) == {"csr", "sell", "hybrid"}
+    best = min(plans, key=lambda k: plans[k].report.predicted_time_s)
+    assert best in plans
+
+
+# --- consumers --------------------------------------------------------------
+
+def test_eigensolver_accepts_containers(hh_exact):
+    from repro.core.eigensolver import ground_state_energy
+    ev = np.linalg.eigvalsh(hh_exact.to_dense())
+    e_plan = ground_state_energy(hh_exact, hh_exact.shape[0], m=60)
+    assert e_plan == pytest.approx(ev[0], abs=5e-4)
+    sell = F.SELL.from_csr(hh_exact, C=8)
+    e_sell = ground_state_energy(SpMVPlan.compile(sell), hh_exact.shape[0], m=60)
+    assert e_sell == pytest.approx(e_plan, abs=1e-5)
+
+
+def test_sparse_operator_server(hh_small):
+    from repro.serve.engine import SparseOperatorServer
+    srv = SparseOperatorServer(backend="auto")
+    rep = srv.register("hh", F.convert(hh_small, "sell", C=8))
+    assert rep.format == "sell"
+    x = jnp.asarray(_rand_x(hh_small.shape[1]))
+    y = np.asarray(srv.spmv("hh", x))
+    np.testing.assert_allclose(y, np.asarray(S.spmv(hh_small, x)), rtol=2e-5, atol=2e-5)
+    X = jnp.asarray(_rand_x(hh_small.shape[1], k=3))
+    Y = np.asarray(srv.spmm("hh", X))
+    assert Y.shape == (hh_small.shape[0], 3)
+    st = srv.stats()["hh"]
+    assert st["calls"] == 4 and st["predicted_gflops"] > 0
+
+
+def test_distributed_plan(hh_small):
+    from repro.core import distributed as D
+    x = jnp.asarray(_rand_x(hh_small.shape[1]))
+    y_ref = np.asarray(S.spmv(hh_small, x))
+    for strategy in ("allgather", "ring"):
+        plan = D.compile_distributed_plan(hh_small, strategy=strategy)
+        assert plan.parts == len(jax.devices())
+        assert plan.imbalance >= 1.0
+        np.testing.assert_allclose(np.asarray(plan(x)), y_ref, rtol=2e-4, atol=1e-4)

@@ -1,0 +1,48 @@
+"""Hypothesis property sweeps over formats and SpMV equivalence.
+
+hypothesis is a *test extra* (pyproject `[test]`); this module skips as a
+whole when it is not installed so the tier-1 suite stays collectable.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need the 'hypothesis' test extra")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import formats as F
+from repro.core import spmv as S
+from repro.core.matrices import holstein_hubbard_surrogate, random_sparse
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(8, 48), nnz=st.integers(1, 8), seed=st.integers(0, 999))
+def test_property_spmv_equivalence(n, nnz, seed):
+    """All formats compute the same y for random matrices (the system's
+    central invariant: storage scheme never changes the math)."""
+    m = random_sparse(n, n, min(nnz, n), seed=seed)
+    x = np.random.default_rng(seed).standard_normal(n).astype(np.float32)
+    ys = {}
+    for fmt, kw in [("csr", {}), ("ell", {}), ("jds", {}), ("sell", dict(C=4))]:
+        ys[fmt] = np.asarray(S.spmv(F.convert(m, fmt, **kw), jnp.asarray(x)))
+    base = ys.pop("csr")
+    for fmt, y in ys.items():
+        np.testing.assert_allclose(y, base, rtol=2e-4, atol=2e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(8, 60), k=st.integers(1, 6), seed=st.integers(0, 1000))
+def test_property_roundtrip_all_formats(n, k, seed):
+    m = random_sparse(n, n, min(k, n), seed=seed)
+    d = m.to_dense()
+    for fmt, kw in [("ell", {}), ("jds", {}), ("sell", dict(C=4))]:
+        obj = F.convert(m, fmt, **kw)
+        np.testing.assert_allclose(obj.to_dense(), d, atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 100))
+def test_property_surrogate_symmetric(seed):
+    m = holstein_hubbard_surrogate(300, seed=seed)
+    d = m.to_dense()
+    np.testing.assert_allclose(d, d.T, atol=1e-6)
