@@ -1,9 +1,13 @@
-"""Fig 8: parallel SpMV scaling vs device count (shard_map row-block SpMV).
+"""Fig 8: parallel SpMV scaling vs device count, per plan variant.
 
 The paper scales OpenMP threads across sockets; the TPU analogue scales
-chips.  We run the allgather and ring variants on 1..8 forced host devices
-(subprocess — device count must be fixed before jax init) and report wall
-time + the model's collective-traffic estimate per variant.
+chips.  With the distributed plan layer the figure becomes a *variant*
+comparison: ``allgather`` (shared input vector, the paper's baseline),
+``ring`` (shard pipeline) and ``overlap`` (local compute concurrent with
+the first exchange, Schubert et al. 1106.5908) on 1..8 forced host devices
+(subprocess — device count must be fixed before jax init).  Per variant we
+report wall time, speedup vs its own 1-device time, and the modelled
+collective traffic.
 """
 from __future__ import annotations
 
@@ -19,25 +23,24 @@ import os, sys, time, json
 os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={sys.argv[1]}"
 import jax, jax.numpy as jnp, numpy as np
 from repro.core.matrices import holstein_hubbard_surrogate
-from repro.core import distributed as D
+from repro.core.distributed_plan import VARIANTS, compile_distributed_spmv_plan
 n = int(sys.argv[2])
 m = holstein_hubbard_surrogate(n, seed=0)
 parts = len(jax.devices())
-mesh = D.make_mesh_1d()
 x = jax.random.normal(jax.random.PRNGKey(0), (n,), jnp.float32)
 out = {}
-for name, build, make in (("allgather", D.build_row_blocks, D.make_allgather_spmv),
-                          ("ring", D.build_ring_blocks, D.make_ring_spmv)):
-    blocks = build(m, parts)
-    run = jax.jit(make(blocks, mesh))
-    jax.block_until_ready(run(x))
+for variant in VARIANTS:
+    plan = compile_distributed_spmv_plan(m, variant=variant)
+    jax.block_until_ready(plan(x))
     best = 1e9
-    for _ in range(5):
-        t0 = time.perf_counter(); jax.block_until_ready(run(x))
+    for _ in range(7):
+        t0 = time.perf_counter(); jax.block_until_ready(plan(x))
         best = min(best, time.perf_counter() - t0)
-    tr = (D.allgather_traffic_bytes(blocks) if name == "allgather"
-          else D.ring_traffic_bytes(blocks))
-    out[name] = {"t": best, "collective": tr["collective"], "x_copy": tr["per_chip_x"]}
+    out[variant] = {"t": best,
+                    "collective": plan.traffic["collective"],
+                    "x_copy": plan.traffic["per_chip_x"],
+                    "slab": plan.slab_format,
+                    "local_fraction": plan.local_fraction}
 print(json.dumps(out))
 """
 
@@ -56,6 +59,7 @@ def run(full: bool = False):
         for d in devs:
             env = dict(os.environ, PYTHONPATH=os.path.join(repo, "src"))
             env.pop("XLA_FLAGS", None)
+            env.pop("REPRO_FORCE_DEVICES", None)
             out = subprocess.run([sys.executable, worker, str(d), str(n)],
                                  capture_output=True, text=True, env=env, timeout=600)
             if out.returncode != 0:
@@ -67,7 +71,7 @@ def run(full: bool = False):
                     base[name] = r["t"]
                 speedup = base.get(name, r["t"]) / r["t"]
                 rows.append(row("fig8", f"{name}_d{d}", r["t"] * 1e3, speedup,
-                                r["collective"] / 1e6))
+                                r["collective"] / 1e6, r["slab"]))
     finally:
         os.unlink(worker)
     return rows

@@ -6,10 +6,17 @@ nnz-balanced cuts (static schedules preserving locality) evaluated by work
 imbalance = the straggler factor of the slowest chip.  Dynamic scheduling
 (which destroyed NUMA locality in the paper) has no SPMD analogue — the
 paper's own conclusion ("static + local wins") is the design baked in here.
+
+With the distributed plan layer the figure gains a second axis: for each
+cut, the ``perfmodel`` roofline picks a slab format *per partition*
+(Kreutzer et al. 1307.6209) and commits to the straggler-optimal one; we
+report the chosen format, the straggler's predicted-time factor, and the
+fraction of nnz that needs no communication (what ``overlap`` can hide).
 """
 from __future__ import annotations
 
 from repro.core import distributed as D
+from repro.core import distributed_plan as DP
 from repro.core.matrices import holstein_hubbard_surrogate, power_law_rows
 
 from .common import row
@@ -22,8 +29,18 @@ def run(full: bool = False):
             ("powerlaw", power_law_rows(n, n, mean_nnz=8, alpha=2.0, seed=0))]
     for parts in ([4, 16, 64, 256] if full else [4, 16]):
         for mname, m in mats:
+            bounds = D.nnz_balanced_partition(m, parts)
             imb_rows = D.partition_imbalance(m, D.row_balanced_partition(m.n_rows, parts))
-            imb_nnz = D.partition_imbalance(m, D.nnz_balanced_partition(m, parts))
+            imb_nnz = D.partition_imbalance(m, bounds)
             rows.append(row("fig9", f"{mname}_p{parts}_rows", imb_rows))
             rows.append(row("fig9", f"{mname}_p{parts}_nnz", imb_nnz))
+            # model-side: per-partition slab choice + straggler factor
+            reports = DP.plan_shard_formats(m, bounds)
+            slab = DP.select_slab_format(reports)
+            times = [r.predicted_time_s for r in reports]
+            straggler = max(times) / max(1e-12, sum(times) / len(times))
+            local = sum(r.local_nnz for r in reports) / max(1, m.nnz)
+            n_sell = sum(1 for r in reports if r.format == "sell")
+            rows.append(row("fig9", f"{mname}_p{parts}_slab", slab, straggler,
+                            local, f"sell_shards={n_sell}/{parts}"))
     return rows

@@ -80,6 +80,33 @@ def measure(n: int = 4000, iters: int = 100, seed: int = 0) -> dict:
     return out
 
 
+def measure_distributed(n: int = 4000, iters: int = 30, seed: int = 0) -> dict:
+    """Per-variant distributed SpMV timings on the session's devices.
+
+    Runs in-process, so the mesh size is whatever the session has (1 on a
+    plain CPU run; 8 under the CI distributed job's forced device count) —
+    the point of the record is the variant *comparison* at a fixed mesh.
+    """
+    from repro.core.distributed_plan import VARIANTS, compile_distributed_spmv_plan
+
+    m = holstein_hubbard_surrogate(n, seed=seed)
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(n).astype(np.float32))
+    flops = 2.0 * m.nnz
+    out = {"devices": len(jax.devices()), "variants": {}}
+    for variant in VARIANTS:
+        plan = compile_distributed_spmv_plan(m, variant=variant)
+        t = _time_iters(plan.run, x, iters)
+        out["variants"][variant] = {
+            "t_s": t,
+            "gflops": flops / t / 1e9,
+            "slab_format": plan.slab_format,
+            "imbalance": plan.imbalance,
+            "local_fraction": plan.local_fraction,
+            "collective_bytes": plan.traffic["collective"],
+        }
+    return out
+
+
 def run(full: bool = False):
     res = measure(n=20_000 if full else 4000, iters=100)
     rows = []
@@ -89,8 +116,14 @@ def run(full: bool = False):
         if "gflops_naive" in e:
             rows.append(row("plan_bench", f"{fmt}_naive", e["gflops_naive"],
                             e["t_naive_s"] * 1e3, e["speedup_plan_vs_naive"]))
+    dist = measure_distributed(n=20_000 if full else 4000)
+    for variant, e in dist["variants"].items():
+        rows.append(row("plan_bench", f"dist_{variant}_d{dist['devices']}",
+                        e["gflops"], e["t_s"] * 1e3, e["slab_format"]))
     return rows
 
 
 def run_json(full: bool = False) -> dict:
-    return measure(n=20_000 if full else 4000, iters=100)
+    payload = measure(n=20_000 if full else 4000, iters=100)
+    payload["distributed"] = measure_distributed(n=20_000 if full else 4000)
+    return payload

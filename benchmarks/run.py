@@ -1,7 +1,7 @@
 """Benchmark driver: one module per paper table/figure.
 
 ``PYTHONPATH=src python -m benchmarks.run [--full] [--only figX]``
-``PYTHONPATH=src python -m benchmarks.run --json BENCH_PR1.json``
+``PYTHONPATH=src python -m benchmarks.run --json BENCH_PR2.json``
 
 Prints ``figure,name,value[,extra...]`` CSV rows.  Default sizes finish in
 minutes on CPU; ``--full`` uses out-of-cache sizes matching the paper's
@@ -51,6 +51,11 @@ def main(argv=None) -> int:
             extra = (f" speedup={e['speedup_plan_vs_naive']:.2f}x"
                      if "speedup_plan_vs_naive" in e else "")
             print(f"# {fmt}: {e['gflops_planned']:.3f} GF/s planned{extra}",
+                  file=sys.stderr)
+        dist = payload.get("distributed", {})
+        for variant, e in dist.get("variants", {}).items():
+            print(f"# dist/{variant} (d={dist['devices']}): "
+                  f"{e['gflops']:.3f} GF/s slab={e['slab_format']}",
                   file=sys.stderr)
         return 0
 

@@ -1,0 +1,61 @@
+"""Distributed SpMV plans: variant comparison on an emulated device mesh.
+
+Run with forced host devices to see a real mesh on CPU:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python examples/distributed_spmv.py
+
+Compiles the Holstein-Hubbard surrogate into all three distributed plan
+variants (allgather / ring / overlap), checks them against the dense
+reference, prints the model's per-partition slab choices and traffic
+accounting, then runs a sharded Lanczos ground-state solve through the
+same plan — the paper's host application, distributed with no solver
+changes.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import spmv as S
+from repro.core.distributed import make_mesh_1d
+from repro.core.distributed_plan import VARIANTS, plan_all_variants
+from repro.core.eigensolver import ground_state_energy
+from repro.core.matrices import holstein_hubbard_surrogate
+
+
+def main(n: int = 6000) -> None:
+    print(f"devices: {len(jax.devices())}  ({jax.default_backend()})")
+    m = holstein_hubbard_surrogate(n, seed=0)
+    mesh = make_mesh_1d()
+    x = jax.random.normal(jax.random.PRNGKey(0), (n,), jnp.float32)
+    y_ref = np.asarray(S.csr_spmv(m, x))
+
+    plans = plan_all_variants(m, mesh)
+    print(f"\n{'variant':<10} {'slab':<5} {'imbal':>6} {'local':>6} "
+          f"{'coll MB':>8} {'ms/SpMV':>8} {'rel err':>9}")
+    for variant in VARIANTS:
+        plan = plans[variant]
+        jax.block_until_ready(plan(x))
+        t0 = time.perf_counter()
+        for _ in range(10):
+            y = plan(x)
+        jax.block_until_ready(y)
+        dt = (time.perf_counter() - t0) / 10
+        err = float(np.max(np.abs(np.asarray(y) - y_ref)) / np.max(np.abs(y_ref)))
+        print(f"{variant:<10} {plan.slab_format:<5} {plan.imbalance:>6.3f} "
+              f"{plan.local_fraction:>6.2f} {plan.traffic['collective'] / 1e6:>8.2f} "
+              f"{dt * 1e3:>8.3f} {err:>9.2e}")
+
+    print("\nper-partition model choices (overlap plan):")
+    for r in plans["overlap"].shard_reports:
+        print(f"  shard {r.part}: rows={r.rows} nnz={r.nnz} "
+              f"local={r.local_nnz / max(1, r.nnz):.2f} -> {r.format}")
+
+    e0 = ground_state_energy(plans["overlap"], n, m=60)
+    print(f"\nsharded Lanczos ground state (overlap plan): {e0:.6f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,4 +1,14 @@
 """The paper's primary contribution: sparse-MVM storage formats, the
 bandwidth/balance performance model, microbenchmarks, and the distributed
 (shard_map) SpMV — plus the Lanczos host application."""
-from . import distributed, eigensolver, formats, matrices, microbench, perfmodel, plan, spmv  # noqa: F401
+from . import (  # noqa: F401
+    distributed,
+    distributed_plan,
+    eigensolver,
+    formats,
+    matrices,
+    microbench,
+    perfmodel,
+    plan,
+    spmv,
+)

@@ -1,26 +1,32 @@
-"""Distributed SpMV via shard_map — the paper's §5 rebuilt for TPU meshes.
+"""Partitioners and legacy shard_map SpMV primitives (the paper's §5 base layer).
 
-The paper's shared-memory parallel SpMV = static row-block partition with
-NUMA-local matrix placement; the input vector is shared and "placement of
-the input vector is imperfect by design as non-local accesses from other
-NUMA domains cannot be avoided".  On a TPU mesh the translation is exact:
+The distributed stack is layered:
 
-* each chip owns a **row block** of the matrix (local HBM = local NUMA
-  domain; first-touch becomes sharded device_put by construction);
-* the non-local invec accesses become an **ICI collective**: either one
-  all-gather of x per SpMV (the simple variant), or a **ring exchange**
-  (collective-permute) of x shards overlapped with the multiplication of
-  the corresponding column block — comm/compute overlap, the
-  distributed-optimization trick the assignment asks for;
-* OpenMP static-vs-dynamic scheduling becomes row-balanced vs
-  **nnz-balanced** partitioning (load balance without losing locality —
-  the paper's conclusion that static+local beats dynamic+remote is the
-  design rule here: partitions are static and locality-preserving, balance
-  is restored by cutting on nnz, not rows).
+1. **This module — partitioning + raw primitives.**  Row cuts
+   (``row_balanced_partition`` = OpenMP ``schedule(static)`` on rows,
+   ``nnz_balanced_partition`` = static scheduling balanced on work while
+   preserving locality, the paper's winning recipe) and the original
+   uniform-ELL shard_map kernels (``make_allgather_spmv``/``make_ring_spmv``
+   over ``RowBlockELL``/``RingBlockELL``), kept as the paper-fidelity
+   baseline and as oracles for the plan layer's tests.
 
-Local blocks are stored as uniform-width ELL slabs so every device runs an
-identical regular kernel (SPMD) — stragglers from ragged work disappear at
-the partitioning stage.
+2. **``core.distributed_plan`` — the compiled plan layer.**
+   ``DistributedSpMVPlan`` splits each device's row block into the local
+   column block (its own x shard) and the remote remainder, lets the
+   ``perfmodel`` roofline pick the slab packing per partition, and offers
+   three executor variants — ``allgather``, ``ring``, and ``overlap``
+   (local compute concurrent with the first shard exchange, Schubert et
+   al. arXiv:1106.5908) — each in SpMV and SpMM form, memoized on the
+   matrix.  ``compile_distributed_plan`` below is the back-compat entry
+   point and simply delegates there.
+
+3. **Consumers.**  ``eigensolver.as_apply`` and
+   ``serve.engine.SparseOperatorServer.register_distributed`` accept
+   distributed plans interchangeably with single-device ``SpMVPlan``s.
+
+The NUMA analogy from the paper holds throughout: each chip owns a row
+block in local HBM (first-touch = sharded device_put by construction), and
+the shared input vector's non-local accesses become ICI collectives.
 """
 from __future__ import annotations
 
@@ -52,7 +58,12 @@ def row_balanced_partition(n_rows: int, parts: int) -> np.ndarray:
 def nnz_balanced_partition(m: CSR, parts: int) -> np.ndarray:
     """Cut rows so each part carries ~nnz/parts non-zeros (static schedule
     balanced on work, preserving locality — the paper's winning recipe).
-    Cuts land on the row boundary *nearest* the ideal split point."""
+    Cuts land on the row boundary *nearest* the ideal split point.
+
+    Guaranteed never worse than ``row_balanced_partition``: if the greedy
+    nnz cut loses on some degenerate pattern, the row-balanced bounds are
+    returned instead (the property tests rely on this invariant).
+    """
     rp = np.asarray(m.row_ptr, dtype=np.int64)
     total = rp[-1]
     targets = np.arange(1, parts, dtype=np.float64) * (total / parts)
@@ -63,7 +74,11 @@ def nnz_balanced_partition(m: CSR, parts: int) -> np.ndarray:
     hi = np.abs(rp[np.minimum(cuts, m.n_rows)] - targets)
     cuts = np.where(lo < hi, cuts - 1, cuts)
     bounds = np.concatenate([[0], cuts, [m.n_rows]]).astype(np.int64)
-    return np.maximum.accumulate(bounds)  # guard monotonicity on degenerate rows
+    bounds = np.maximum.accumulate(bounds)  # guard monotonicity on degenerate rows
+    by_rows = row_balanced_partition(m.n_rows, parts)
+    if partition_imbalance(m, by_rows) < partition_imbalance(m, bounds):
+        return by_rows
+    return bounds
 
 
 def partition_imbalance(m: CSR, bounds: np.ndarray) -> float:
@@ -298,33 +313,8 @@ def make_mesh_1d(axis: str = "data", n_devices: int | None = None) -> Mesh:
 
 
 # ---------------------------------------------------------------------------
-# distributed execution plans (per-shard preprocessing done once)
+# distributed execution plans — now in core.distributed_plan
 # ---------------------------------------------------------------------------
-
-
-@dataclass
-class DistributedSpMVPlan:
-    """A compiled distributed SpMV: partitioning, per-shard slab packing and
-    the shard_map program are all built once; ``plan(x)`` replays the cached
-    jitted executor.  The per-shard ELL slabs *are* the per-shard plans —
-    every device holds its preprocessed row block in device memory for the
-    lifetime of the plan (the paper's NUMA-local first-touch, by
-    construction)."""
-
-    strategy: str          # "allgather" | "ring"
-    parts: int
-    blocks: object         # RowBlockELL | RingBlockELL
-    run: object            # jitted f(x) -> y
-    traffic: dict          # modelled per-SpMV byte movement
-
-    def __call__(self, x: jnp.ndarray) -> jnp.ndarray:
-        return self.run(x)
-
-    @property
-    def imbalance(self) -> float:
-        """max/mean nnz over shards (1.0 = perfect)."""
-        stored = (np.asarray(self.blocks.val) != 0).reshape(self.parts, -1).sum(axis=1)
-        return float(stored.max() / max(1.0, stored.mean()))
 
 
 def compile_distributed_plan(
@@ -334,26 +324,17 @@ def compile_distributed_plan(
     strategy: str = "allgather",
     balance: str = "nnz",
     axis: str = "data",
-) -> DistributedSpMVPlan:
-    """Partition ``m`` over the mesh and return a reusable distributed plan.
-
-    ``strategy="allgather"`` shares the input vector per SpMV (simple, one
-    collective); ``"ring"`` pipelines x shards around the torus with
-    comm/compute overlap and never materializes full x on any chip.
+    **kw,
+):
+    """Back-compat entry point: delegates to
+    ``distributed_plan.compile_distributed_spmv_plan`` (``strategy`` is the
+    plan layer's ``variant``; ``"overlap"`` is accepted here too).  Returns
+    a ``DistributedSpMVPlan`` with SpMV *and* SpMM executors.
     """
-    mesh = mesh if mesh is not None else make_mesh_1d(axis)
-    parts = int(mesh.shape[axis])  # only the sharded axis partitions rows
-    if strategy == "allgather":
-        blocks = build_row_blocks(m, parts, balance=balance)
-        run = jax.jit(make_allgather_spmv(blocks, mesh, axis))
-        traffic = allgather_traffic_bytes(blocks)
-    elif strategy == "ring":
-        blocks = build_ring_blocks(m, parts, balance=balance)
-        run = jax.jit(make_ring_spmv(blocks, mesh, axis))
-        traffic = ring_traffic_bytes(blocks)
-    else:
-        raise ValueError(f"unknown strategy {strategy!r}")
-    return DistributedSpMVPlan(strategy, parts, blocks, run, traffic)
+    from .distributed_plan import compile_distributed_spmv_plan
+
+    return compile_distributed_spmv_plan(m, mesh, variant=strategy,
+                                         balance=balance, axis=axis, **kw)
 
 
 # ---------------------------------------------------------------------------
@@ -389,6 +370,7 @@ def ring_traffic_bytes(blocks: RingBlockELL, value_bytes: int = 4) -> dict:
 if __name__ == "__main__":  # pragma: no cover - exercised via subprocess test
     import sys
 
+    from .distributed_plan import compile_distributed_spmv_plan, VARIANTS
     from .matrices import holstein_hubbard_surrogate
     from .spmv import csr_spmv
 
@@ -398,9 +380,10 @@ if __name__ == "__main__":  # pragma: no cover - exercised via subprocess test
     mesh = make_mesh_1d()
     x = jax.random.normal(jax.random.PRNGKey(0), (n,), jnp.float32)
     y_ref = np.asarray(csr_spmv(m, x))
+    # legacy uniform-ELL primitives (the paper-fidelity baseline)
     for name, build, make in (
-        ("allgather", build_row_blocks, make_allgather_spmv),
-        ("ring", build_ring_blocks, make_ring_spmv),
+        ("allgather-legacy", build_row_blocks, make_allgather_spmv),
+        ("ring-legacy", build_ring_blocks, make_ring_spmv),
     ):
         blocks = build(m, parts)
         run = jax.jit(make(blocks, mesh))
@@ -408,6 +391,16 @@ if __name__ == "__main__":  # pragma: no cover - exercised via subprocess test
         err = float(np.max(np.abs(y - y_ref)) / max(1e-9, np.max(np.abs(y_ref))))
         status = "OK" if err < 1e-4 else "FAIL"
         print(f"{name}: devices={parts} rel_err={err:.2e} {status}")
+        if err >= 1e-4:
+            sys.exit(1)
+    # plan layer: all three variants, model-chosen slab format
+    for variant in VARIANTS:
+        plan = compile_distributed_spmv_plan(m, mesh, variant=variant)
+        err = float(np.max(np.abs(np.asarray(plan(x)) - y_ref))
+                    / max(1e-9, np.max(np.abs(y_ref))))
+        status = "OK" if err < 1e-4 else "FAIL"
+        print(f"{variant}: devices={parts} slab={plan.slab_format} "
+              f"local={plan.local_fraction:.2f} rel_err={err:.2e} {status}")
         if err >= 1e-4:
             sys.exit(1)
     imb_rows = partition_imbalance(m, row_balanced_partition(m.n_rows, parts))

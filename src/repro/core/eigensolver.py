@@ -22,11 +22,21 @@ import numpy as np
 Apply = Callable[[jnp.ndarray], jnp.ndarray]
 
 
-def as_apply(op) -> Apply:
-    """Normalize the injected operator: a callable (closure, jitted fn, or
-    SpMVPlan) passes through; a bare format container is compiled into an
-    SpMVPlan once, so every Lanczos iteration reuses the same cached
-    preprocessing + jitted executor."""
+def as_apply(op, *, mesh=None, variant: str = "overlap") -> Apply:
+    """Normalize the injected operator: a callable (closure, jitted fn,
+    ``SpMVPlan``, or ``DistributedSpMVPlan``) passes through; a bare format
+    container is compiled into a plan once, so every Lanczos iteration
+    reuses the same cached preprocessing + jitted executor.
+
+    Pass ``mesh`` (and optionally ``variant``) to compile a bare container
+    into a comm-overlapped ``DistributedSpMVPlan`` instead — the solver is
+    then sharded across the mesh with no other change.  Callables
+    (including already-compiled plans) still pass through unchanged.
+    """
+    if mesh is not None and not callable(op):
+        from .distributed_plan import compile_distributed_spmv_plan
+
+        return compile_distributed_spmv_plan(op, mesh, variant=variant)
     if callable(op):
         return op
     from .plan import SpMVPlan
@@ -52,6 +62,7 @@ def lanczos(
     reorthogonalize: bool = True,
     seed: int = 0,
     dtype=jnp.float64,
+    mesh=None,
 ) -> LanczosResult:
     """m-step Lanczos on the symmetric operator ``apply_A`` of dimension n.
 
@@ -59,10 +70,12 @@ def lanczos(
     the paper's accounting unit.  With ``reorthogonalize`` the full basis is
     kept and Gram-Schmidt-corrected every step (stable for validation runs).
 
-    ``apply_A`` may be a callable, an ``SpMVPlan``, or a format container
-    (compiled to a plan on entry, so every iteration reuses it).
+    ``apply_A`` may be a callable, an ``SpMVPlan``, a
+    ``DistributedSpMVPlan``, or a format container (compiled to a plan on
+    entry, so every iteration reuses it); with ``mesh`` a CSR container is
+    compiled into a distributed plan and the solve shards across devices.
     """
-    apply_A = as_apply(apply_A)
+    apply_A = as_apply(apply_A, mesh=mesh)
     if v0 is None:
         v0 = jax.random.normal(jax.random.PRNGKey(seed), (n,), dtype)
     v = v0 / jnp.linalg.norm(v0)

@@ -111,6 +111,21 @@ class SparseOperatorServer:
         self._calls.setdefault(name, 0)
         return plan.report
 
+    def register_distributed(self, name: str, matrix, *, mesh=None,
+                             variant: str = "overlap", **plan_kw):
+        """Mesh-aware registration: compile ``matrix`` (CSR) into a
+        ``DistributedSpMVPlan`` sharded over ``mesh`` (default: all local
+        devices).  Queries flow through the same ``spmv``/``spmm`` entry
+        points — the server treats local and distributed plans uniformly.
+        """
+        from ..core.distributed_plan import compile_distributed_spmv_plan
+
+        plan = compile_distributed_spmv_plan(matrix, mesh, variant=variant,
+                                             chip=self.chip, **plan_kw)
+        self._plans[name] = plan
+        self._calls.setdefault(name, 0)
+        return plan.report
+
     def plan(self, name: str) -> SpMVPlan:
         return self._plans[name]
 
@@ -136,4 +151,13 @@ class SparseOperatorServer:
                 "predicted_gflops": r.predicted_gflops,
                 "predicted_bytes_per_call": r.balance_bytes_per_flop * 2.0 * r.nnz,
             }
+            if hasattr(plan, "variant"):  # distributed plans: mesh-level stats
+                out[name].update({
+                    "variant": plan.variant,
+                    "parts": plan.parts,
+                    "slab_format": plan.slab_format,
+                    "imbalance": plan.imbalance,
+                    "local_fraction": plan.local_fraction,
+                    "collective_bytes_per_call": plan.traffic["collective"],
+                })
         return out

@@ -1,9 +1,51 @@
-"""Shared fixtures. NOTE: no XLA_FLAGS here by design — smoke tests and
-benches must see the real single CPU device; only launch/dryrun.py forces
-512 placeholder devices (in its own process)."""
-import jax
-import numpy as np
-import pytest
+"""Shared fixtures + the multi-device test harness.
+
+Device-count control must happen **before jax initializes**, so it lives
+here, at conftest import time (pytest imports conftest before any test
+module).  Two opt-in paths:
+
+* ``REPRO_FORCE_DEVICES=8 pytest -m multi_device`` — this conftest injects
+  ``--xla_force_host_platform_device_count=8`` into ``XLA_FLAGS`` before
+  importing jax, so ``multi_device``-marked tests run *in-process* on a
+  real emulated mesh (the CI distributed job uses this).  Without the env
+  var those tests are skipped (a 1-device session cannot grow devices).
+
+* the ``emulated_devices_run`` fixture — spawns a fresh subprocess with the
+  forced device count and returns its JSON result, so sharded-vs-dense
+  equivalence is asserted on 4- and 8-device meshes even from a default
+  single-device session (nothing silently skips).
+
+By default no flags are set: smoke tests and benches must see the real
+single CPU device; only launch/dryrun.py forces 512 placeholder devices
+(in its own process).
+"""
+import json
+import os
+import subprocess
+import sys
+
+_FORCE = os.environ.get("REPRO_FORCE_DEVICES")
+if _FORCE and "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={int(_FORCE)}"
+    ).strip()
+
+import jax  # noqa: E402  (after the XLA_FLAGS injection, by design)
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def pytest_collection_modifyitems(config, items):
+    if len(jax.devices()) >= 4:
+        return
+    skip = pytest.mark.skip(
+        reason="needs >= 4 devices; opt in with REPRO_FORCE_DEVICES=8")
+    for item in items:
+        if "multi_device" in item.keywords:
+            item.add_marker(skip)
 
 
 @pytest.fixture(scope="session")
@@ -21,3 +63,26 @@ def hh_small():
 def hh_exact():
     from repro.core.matrices import HolsteinHubbardParams, holstein_hubbard_exact
     return holstein_hubbard_exact(HolsteinHubbardParams(L=3, n_up=1, n_dn=1, max_phonon=2))
+
+
+@pytest.fixture(scope="session")
+def emulated_devices_run():
+    """Run a python snippet under N forced host devices (fresh subprocess).
+
+    The snippet must print a JSON object as its last stdout line; the
+    parsed dict is returned.  Use for mesh sizes the current session does
+    not have — device count is fixed at jax init and cannot change later.
+    """
+    def run(n_devices: int, code: str, timeout: int = 600) -> dict:
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={int(n_devices)}"
+        env.pop("REPRO_FORCE_DEVICES", None)  # subprocess count is explicit
+        env["PYTHONPATH"] = os.path.join(REPO_ROOT, "src") + (
+            os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+        out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                             text=True, env=env, cwd=REPO_ROOT, timeout=timeout)
+        assert out.returncode == 0, (
+            f"emulated {n_devices}-device run failed:\n{out.stdout}\n{out.stderr}")
+        return json.loads(out.stdout.strip().splitlines()[-1])
+
+    return run

@@ -1,5 +1,8 @@
-"""Distributed SpMV: partitioners in-process, 8-device equivalence via
-subprocess (device count must be forced before jax init)."""
+"""Distributed SpMV: partitioners + legacy primitives in-process, the plan
+layer's variant/format/partitioner equivalence matrix, and real 4-/8-device
+mesh assertions (in-process when REPRO_FORCE_DEVICES grants the devices,
+via the subprocess harness otherwise — never silently reduced to 1 device).
+"""
 import os
 import subprocess
 import sys
@@ -10,8 +13,17 @@ import numpy as np
 import pytest
 
 from repro.core import distributed as D
+from repro.core import distributed_plan as DP
+from repro.core import formats as F
 from repro.core import spmv as S
 from repro.core.matrices import holstein_hubbard_surrogate, power_law_rows
+
+
+def _rel_err(y, y_ref):
+    return float(np.max(np.abs(np.asarray(y) - y_ref)) / max(1e-9, np.max(np.abs(y_ref))))
+
+
+# --- partitioners -----------------------------------------------------------
 
 
 def test_nnz_balance_beats_row_balance():
@@ -33,6 +45,9 @@ def test_partition_bounds_cover_all_rows(hh_small):
         assert (np.diff(b) >= 0).all()
 
 
+# --- legacy uniform-ELL primitives (paper-fidelity baseline) ----------------
+
+
 def test_row_blocks_reconstruct(hh_small):
     blocks = D.build_row_blocks(hh_small, parts=4)
     # scattering every block entry back must reproduce the dense matrix rows
@@ -49,7 +64,7 @@ def test_row_blocks_reconstruct(hh_small):
 
 
 def test_single_device_shard_map_paths(hh_small):
-    """Both shard_map variants run (1-device mesh) and match the reference."""
+    """Both legacy shard_map variants run on the session mesh and match."""
     mesh = D.make_mesh_1d()
     x = jnp.asarray(np.random.default_rng(0).standard_normal(hh_small.shape[1]).astype(np.float32))
     y_ref = np.asarray(S.csr_spmv(hh_small, x))
@@ -69,11 +84,255 @@ def test_traffic_models(hh_small):
     assert t_ring["per_chip_x"] < t_ag["per_chip_x"]
 
 
+# --- plan layer: shard packing + format selection ---------------------------
+
+
+def test_shard_slabs_reconstruct(hh_small):
+    """Both packings of both layouts scatter back to the dense matrix."""
+    dense = hh_small.to_dense()
+    for pack in DP.SLAB_FORMATS:
+        for local_cols in (False, True):
+            blocks = DP.pack_shard_slabs(hh_small, 4, pack=pack, local_cols=local_cols)
+            d = np.zeros(hh_small.shape)
+            cs = blocks.col_shard
+            for p in range(blocks.parts):
+                for q in range(blocks.q_blocks):
+                    base = q * cs if local_cols else 0
+                    if pack == "ell":
+                        for i in range(blocks.rows_pp):
+                            r = blocks.row_map[p, i]
+                            if r >= hh_small.n_rows:
+                                continue
+                            for w in range(blocks.col.shape[3]):
+                                if blocks.val[p, q, i, w] != 0:
+                                    d[r, base + blocks.col[p, q, i, w]] += blocks.val[p, q, i, w]
+                    else:
+                        for k in range(blocks.col.shape[2]):
+                            i = blocks.rid[p, q, k]
+                            if i >= blocks.rows_pp or blocks.val[p, q, k] == 0:
+                                continue
+                            r = blocks.row_map[p, i]
+                            d[r, base + blocks.col[p, q, k]] += blocks.val[p, q, k]
+            np.testing.assert_allclose(d, dense, atol=1e-5)
+
+
+def test_shard_format_selection(hh_small):
+    bounds = D.nnz_balanced_partition(hh_small, 4)
+    reports = DP.plan_shard_formats(hh_small, bounds)
+    assert len(reports) == 4
+    assert sum(r.rows for r in reports) == hh_small.n_rows
+    assert sum(r.nnz for r in reports) == hh_small.nnz
+    for r in reports:
+        assert r.format in DP.SLAB_FORMATS
+        assert set(r.times) == set(DP.SLAB_FORMATS)
+        assert r.local_nnz + r.remote_nnz == r.nnz
+        assert r.predicted_time_s == min(r.times.values())
+    chosen = DP.select_slab_format(reports)
+    assert chosen in DP.SLAB_FORMATS
+    # straggler rule: chosen format minimizes the max-over-shards time
+    worst = {f: max(r.times[f] for r in reports) for f in DP.SLAB_FORMATS}
+    assert worst[chosen] == min(worst.values())
+
+
+# --- plan layer: equivalence on the session mesh ----------------------------
+
+
+def test_distributed_plan_variants_match_reference(hh_small):
+    """All three variants, model-chosen slab format, SpMV and SpMM."""
+    n = hh_small.shape[1]
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    X = jnp.asarray(rng.standard_normal((n, 8)).astype(np.float32))
+    y_ref = np.asarray(S.csr_spmv(hh_small, x))
+    Y_ref = hh_small.to_dense() @ np.asarray(X)
+    for variant in DP.VARIANTS:
+        plan = DP.compile_distributed_spmv_plan(hh_small, variant=variant)
+        assert plan.parts == len(jax.devices())
+        assert plan.imbalance >= 1.0
+        np.testing.assert_allclose(np.asarray(plan(x)), y_ref, rtol=2e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(plan.spmm(X)), Y_ref, rtol=2e-4, atol=1e-4)
+
+
+def test_distributed_plan_forced_slab_formats(hh_small):
+    n = hh_small.shape[1]
+    x = jnp.asarray(np.random.default_rng(1).standard_normal(n).astype(np.float32))
+    y_ref = np.asarray(S.csr_spmv(hh_small, x))
+    for slab in DP.SLAB_FORMATS:
+        for balance in ("nnz", "rows"):
+            plan = DP.compile_distributed_spmv_plan(
+                hh_small, variant="overlap", slab_format=slab, balance=balance)
+            assert plan.slab_format == slab
+            np.testing.assert_allclose(np.asarray(plan(x)), y_ref, rtol=2e-4, atol=1e-4)
+
+
+def test_distributed_plan_rejects_bad_shapes(hh_small):
+    plan = DP.compile_distributed_spmv_plan(hh_small, variant="allgather")
+    with pytest.raises(ValueError):
+        plan(jnp.zeros(hh_small.shape[1] + 1, jnp.float32))
+    with pytest.raises(ValueError):
+        plan.spmm(jnp.zeros((hh_small.shape[1] + 1, 2), jnp.float32))
+    with pytest.raises(ValueError):
+        DP.compile_distributed_spmv_plan(hh_small, variant="nope")
+
+
+def test_distributed_plan_report_and_traffic(hh_small):
+    ag = DP.compile_distributed_spmv_plan(hh_small, variant="allgather")
+    ov = DP.compile_distributed_spmv_plan(hh_small, variant="overlap")
+    for plan in (ag, ov):
+        r = plan.report
+        assert r.format == f"dist-{plan.slab_format}"
+        assert r.kernel == plan.variant
+        assert r.nnz == hh_small.nnz and r.predicted_gflops > 0
+        assert 0.0 <= plan.local_fraction <= 1.0
+    # ring/overlap hold one x shard; allgather holds the full gathered copy
+    assert ov.traffic["per_chip_x"] <= ag.traffic["per_chip_x"]
+
+
+# --- plan layer: caching regressions (mirrors test_plan's row-id cache) -----
+
+
+def test_distributed_plan_memoized_and_packs_once():
+    """Compile is idempotent and each shard is packed exactly once per key:
+    recompiling and re-executing never re-runs host preprocessing."""
+    m = holstein_hubbard_surrogate(500, seed=9)
+    x = jnp.asarray(np.random.default_rng(2).standard_normal(500).astype(np.float32))
+    parts = len(jax.devices())
+    before = DP.pack_stats()
+    p1 = DP.compile_distributed_spmv_plan(m, variant="overlap")
+    for _ in range(3):
+        p1(x)
+        assert DP.compile_distributed_spmv_plan(m, variant="overlap") is p1
+    after = DP.pack_stats()
+    assert after["shard_packs"] - before["shard_packs"] == parts
+    assert after["format_selections"] - before["format_selections"] == 1
+    # a different layout compiles (and packs) separately ...
+    p2 = DP.compile_distributed_spmv_plan(m, variant="allgather")
+    assert p2 is not p1
+    assert DP.pack_stats()["shard_packs"] - after["shard_packs"] == parts
+    # ... but ring reuses overlap's packing outright (identical layout)
+    before_ring = DP.pack_stats()
+    p3 = DP.compile_distributed_spmv_plan(m, variant="ring")
+    assert p3 is not p1 and p3.blocks is p1.blocks
+    assert DP.pack_stats()["shard_packs"] == before_ring["shard_packs"]
+
+
+# --- consumers ---------------------------------------------------------------
+
+
+def test_eigensolver_with_distributed_plan(hh_small):
+    from repro.core.eigensolver import ground_state_energy, lanczos
+
+    ev0 = float(np.linalg.eigvalsh(hh_small.to_dense())[0])
+    plan = DP.compile_distributed_spmv_plan(hh_small, variant="overlap")
+    e_dist = ground_state_energy(plan, hh_small.shape[0], m=80)
+    assert e_dist == pytest.approx(ev0, abs=5e-3)
+    # mesh kwarg compiles the container into a distributed plan internally
+    r = lanczos(hh_small, hh_small.shape[0], m=80, mesh=D.make_mesh_1d())
+    assert float(r.eigenvalues[0]) == pytest.approx(ev0, abs=5e-3)
+
+
+def test_server_register_distributed(hh_small):
+    from repro.serve.engine import SparseOperatorServer
+
+    srv = SparseOperatorServer()
+    rep = srv.register_distributed("hh", hh_small, variant="overlap")
+    assert rep.kernel == "overlap"
+    x = jnp.asarray(np.random.default_rng(3).standard_normal(hh_small.shape[1]).astype(np.float32))
+    np.testing.assert_allclose(np.asarray(srv.spmv("hh", x)),
+                               np.asarray(S.spmv(hh_small, x)), rtol=2e-4, atol=1e-4)
+    X = jnp.asarray(np.random.default_rng(4).standard_normal((hh_small.shape[1], 3)).astype(np.float32))
+    assert np.asarray(srv.spmm("hh", X)).shape == (hh_small.shape[0], 3)
+    st = srv.stats()["hh"]
+    assert st["calls"] == 4
+    assert st["variant"] == "overlap" and st["parts"] == len(jax.devices())
+    assert st["imbalance"] >= 1.0 and 0.0 <= st["local_fraction"] <= 1.0
+
+
+# --- real multi-device meshes: in-process when the session has them ---------
+
+_EQUIV_WORKER = r"""
+import json
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import formats as F
+from repro.core.distributed_plan import VARIANTS, compile_distributed_spmv_plan
+from repro.core.matrices import holstein_hubbard_surrogate
+
+n = 1200
+m = holstein_hubbard_surrogate(n, seed=2)
+d = m.to_dense()
+rng = np.random.default_rng(0)
+x = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+X = jnp.asarray(rng.standard_normal((n, 8)).astype(np.float32))
+y_ref = d @ np.asarray(x)
+Y_ref = d @ np.asarray(X)
+errs = {"devices": len(jax.devices())}
+for variant in VARIANTS:
+    for balance in ("nnz", "rows"):
+        for slab in ("ell", "sell"):
+            p = compile_distributed_spmv_plan(m, variant=variant,
+                                              balance=balance, slab_format=slab)
+            e1 = float(np.max(np.abs(np.asarray(p(x)) - y_ref)) / np.max(np.abs(y_ref)))
+            e8 = float(np.max(np.abs(np.asarray(p.spmm(X)) - Y_ref)) / np.max(np.abs(Y_ref)))
+            errs[f"{variant}/{balance}/{slab}/nvec1"] = e1
+            errs[f"{variant}/{balance}/{slab}/nvec8"] = e8
+sell_in = F.SELL.from_csr(m, C=8)
+p = compile_distributed_spmv_plan(sell_in, variant="overlap")
+errs["overlap/sell-container"] = float(
+    np.max(np.abs(np.asarray(p(x)) - y_ref)) / np.max(np.abs(y_ref)))
+print(json.dumps(errs))
+"""
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("n_devices", [4, 8])
+def test_mesh_equivalence_matrix(emulated_devices_run, n_devices):
+    """variants x partitioners x slab formats x nvec on a real emulated mesh
+    (fresh subprocess, so it runs even from a 1-device session)."""
+    errs = emulated_devices_run(n_devices, _EQUIV_WORKER)
+    assert errs.pop("devices") == n_devices
+    bad = {k: v for k, v in errs.items() if v >= 2e-4}
+    assert not bad, f"fp32 equivalence failures on {n_devices} devices: {bad}"
+
+
+@pytest.mark.multi_device
+def test_multi_device_in_process_equivalence(hh_small):
+    """When the session itself has >= 4 devices (REPRO_FORCE_DEVICES / CI
+    distributed job), assert on real sub-meshes without a subprocess."""
+    n = hh_small.shape[1]
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    X = jnp.asarray(rng.standard_normal((n, 8)).astype(np.float32))
+    y_ref = np.asarray(S.csr_spmv(hh_small, x))
+    Y_ref = hh_small.to_dense() @ np.asarray(X)
+    sizes = [d for d in (4, 8) if d <= len(jax.devices())]
+    for nd in sizes:
+        mesh = D.make_mesh_1d(n_devices=nd)
+        for variant in DP.VARIANTS:
+            plan = DP.compile_distributed_spmv_plan(hh_small, mesh, variant=variant)
+            assert plan.parts == nd
+            np.testing.assert_allclose(np.asarray(plan(x)), y_ref, rtol=2e-4, atol=1e-4)
+            np.testing.assert_allclose(np.asarray(plan.spmm(X)), Y_ref, rtol=2e-4, atol=1e-4)
+
+
+@pytest.mark.multi_device
+def test_multi_device_nnz_balance_helps(hh_small):
+    """On a real mesh the nnz-balanced cut's stored-work imbalance must not
+    exceed the row-balanced cut's (the paper's load-balance claim)."""
+    mesh = D.make_mesh_1d(n_devices=min(8, len(jax.devices())))
+    imb = {}
+    for balance in ("nnz", "rows"):
+        plan = DP.compile_distributed_spmv_plan(hh_small, mesh, variant="ring",
+                                                balance=balance)
+        imb[balance] = plan.imbalance
+    assert imb["nnz"] <= imb["rows"] * 1.001
+
+
 @pytest.mark.slow
 def test_8device_equivalence_subprocess():
     """Run the module selftest under 8 forced host devices."""
     env = dict(os.environ, XLA_FLAGS="--xla_force_host_platform_device_count=8",
                PYTHONPATH="src")
+    env.pop("REPRO_FORCE_DEVICES", None)
     out = subprocess.run(
         [sys.executable, "-m", "repro.core.distributed", "2000"],
         capture_output=True, text=True, env=env, cwd=os.path.dirname(os.path.dirname(__file__)),

@@ -171,11 +171,18 @@ def test_sparse_operator_server(hh_small):
 
 
 def test_distributed_plan(hh_small):
+    """Back-compat entry point delegates to the distributed plan layer:
+    all three variants, with working SpMM executors."""
     from repro.core import distributed as D
     x = jnp.asarray(_rand_x(hh_small.shape[1]))
+    X = jnp.asarray(_rand_x(hh_small.shape[1], k=4))
     y_ref = np.asarray(S.spmv(hh_small, x))
-    for strategy in ("allgather", "ring"):
+    Y_ref = np.asarray(S.spmm(hh_small, X))
+    for strategy in ("allgather", "ring", "overlap"):
         plan = D.compile_distributed_plan(hh_small, strategy=strategy)
+        assert plan.strategy == strategy  # alias of .variant
         assert plan.parts == len(jax.devices())
         assert plan.imbalance >= 1.0
+        assert plan.slab_format in ("ell", "sell")
         np.testing.assert_allclose(np.asarray(plan(x)), y_ref, rtol=2e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(plan.spmm(X)), Y_ref, rtol=2e-4, atol=1e-4)

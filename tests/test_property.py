@@ -46,3 +46,69 @@ def test_property_surrogate_symmetric(seed):
     m = holstein_hubbard_surrogate(300, seed=seed)
     d = m.to_dense()
     np.testing.assert_allclose(d, d.T, atol=1e-6)
+
+
+# --- partitioners (core.distributed) ----------------------------------------
+
+from repro.core.distributed import (  # noqa: E402
+    nnz_balanced_partition,
+    partition_imbalance,
+    row_balanced_partition,
+)
+
+
+@st.composite
+def _csr_matrices(draw):
+    """Random CSR incl. degenerate shapes: empty rows, empty matrices,
+    single-row matrices, heavily skewed row lengths."""
+    n = draw(st.integers(1, 60))
+    nnz = draw(st.integers(0, 4 * n))
+    seed = draw(st.integers(0, 10_000))
+    rng = np.random.default_rng(seed)
+    if nnz and draw(st.booleans()):
+        # skew: concentrate entries on a few rows (leaves many rows empty)
+        hot = rng.choice(n, size=max(1, n // 8), replace=False)
+        rows = rng.choice(hot, size=nnz).astype(np.int32)
+    else:
+        rows = rng.integers(0, n, size=nnz).astype(np.int32)
+    cols = rng.integers(0, n, size=nnz).astype(np.int32)
+    vals = rng.standard_normal(nnz).astype(np.float32) + 0.1
+    return F.CSR.from_coo(F.COO(rows, cols, vals, (n, n)))
+
+
+@settings(max_examples=60, deadline=None)
+@given(m=_csr_matrices(), parts=st.integers(1, 80))
+def test_property_partition_bounds_valid(m, parts):
+    """Both partitioners: bounds are monotone, start at 0, end at n_rows
+    (every row covered exactly once), length parts+1 — including the
+    degenerate parts > n_rows and all-rows-empty cases."""
+    for bounds in (row_balanced_partition(m.n_rows, parts),
+                   nnz_balanced_partition(m, parts)):
+        assert len(bounds) == parts + 1
+        assert bounds[0] == 0 and bounds[-1] == m.n_rows
+        assert (np.diff(bounds) >= 0).all()
+
+
+@settings(max_examples=60, deadline=None)
+@given(m=_csr_matrices(), parts=st.integers(1, 80))
+def test_property_nnz_cut_never_loses(m, parts):
+    """The nnz-balanced cut's work imbalance never exceeds the row-balanced
+    cut's (guaranteed by the partitioner's fallback), and both imbalance
+    values are well-formed (>= 1 whenever any part holds work)."""
+    imb_rows = partition_imbalance(m, row_balanced_partition(m.n_rows, parts))
+    imb_nnz = partition_imbalance(m, nnz_balanced_partition(m, parts))
+    assert imb_nnz <= imb_rows + 1e-12
+    if m.nnz:
+        assert imb_nnz >= 1.0 - 1e-12
+
+
+@settings(max_examples=30, deadline=None)
+@given(m=_csr_matrices(), parts=st.integers(1, 16))
+def test_property_partition_parts_sum(m, parts):
+    """Per-part nnz computed from the bounds sums back to the matrix nnz."""
+    rp = np.asarray(m.row_ptr, dtype=np.int64)
+    for bounds in (row_balanced_partition(m.n_rows, parts),
+                   nnz_balanced_partition(m, parts)):
+        per_part = rp[bounds[1:]] - rp[bounds[:-1]]
+        assert (per_part >= 0).all()
+        assert int(per_part.sum()) == m.nnz
