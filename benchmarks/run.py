@@ -1,14 +1,16 @@
 """Benchmark driver: one module per paper table/figure.
 
 ``PYTHONPATH=src python -m benchmarks.run [--full] [--only figX]``
-``PYTHONPATH=src python -m benchmarks.run --json BENCH_PR2.json``
+``PYTHONPATH=src python -m benchmarks.run --json BENCH_PR3.json``
 
 Prints ``figure,name,value[,extra...]`` CSV rows.  Default sizes finish in
 minutes on CPU; ``--full`` uses out-of-cache sizes matching the paper's
 methodology ("array lengths ... such that the problem does not fit in any
-cache level").  ``--json PATH`` runs the plan benchmark only and writes the
-per-format GFlop/s + plan-vs-naive speedups as a JSON perf-trajectory
-artifact.
+cache level").  ``--json PATH`` runs the plan + serving benchmarks only and
+writes per-format GFlop/s, plan-vs-naive speedups, distributed variant
+timings, and the serving throughput-vs-batch-width curve as a JSON
+perf-trajectory artifact (see docs/BENCHMARKS.md for the BENCH_PR*.json
+lineage).
 """
 from __future__ import annotations
 
@@ -29,6 +31,7 @@ MODULES = [
     "fig9_partition_balance",
     "perfmodel_validation",
     "plan_bench",
+    "serve_throughput",
 ]
 
 
@@ -43,7 +46,9 @@ def main(argv=None) -> int:
 
     if args.json:
         from benchmarks.plan_bench import run_json
+        from benchmarks.serve_throughput import run_json as serve_json
         payload = run_json(full=args.full)
+        payload["serving"] = serve_json(full=args.full)
         with open(args.json, "w") as fh:
             json.dump(payload, fh, indent=2, sort_keys=True)
         print(f"# wrote {args.json}", file=sys.stderr)
@@ -57,6 +62,11 @@ def main(argv=None) -> int:
             print(f"# dist/{variant} (d={dist['devices']}): "
                   f"{e['gflops']:.3f} GF/s slab={e['slab_format']}",
                   file=sys.stderr)
+        srv = payload["serving"]
+        print(f"# serving: {srv['speedup_at_width8']:.2f}x at width 8 "
+              f"(policy width {srv['policy']['selected_width']}, "
+              f"direction_match={srv['model_direction_match']})",
+              file=sys.stderr)
         return 0
 
     failures = 0

@@ -100,6 +100,17 @@ def plan_shard_formats(
     SPMD executor can express, evaluated per partition: ELL pays the
     partition's padding ratio, flat SELL pays only per-chunk padding but
     adds the row-index stream of a segment-sum.
+
+    Args:
+        m: the full CSR matrix being partitioned.
+        bounds: (P+1,) row partition bounds from a partitioner.
+        C: SELL chunk height used for the padding estimate.
+        am / chip: access model + roofline parameters.
+        formats: candidate slab packings to evaluate.
+
+    Returns:
+        One ``ShardReport`` per partition, carrying the per-format
+        predicted times and the per-shard best choice.
     """
     _PACK_STATS["format_selections"] += 1
     parts = len(bounds) - 1
@@ -493,12 +504,25 @@ class DistributedSpMVPlan:
         return self.spmv(x)
 
     def spmv(self, x: jnp.ndarray) -> jnp.ndarray:
+        """One distributed SpMV through the cached shard_map executor.
+
+        Args:
+            x: input vector of shape (N,); it is padded to the shard grid
+                and scattered over the mesh per the plan's variant.
+
+        Returns:
+            y = A @ x of shape (M,), gathered back to the caller.
+        """
         if x.shape != (self.blocks.n_cols,):
             raise ValueError(f"x has shape {x.shape}, expected ({self.blocks.n_cols},)")
         return self.run(x)
 
     def spmm(self, X: jnp.ndarray) -> jnp.ndarray:
-        """Multi-vector SpMV: X (N, K) -> Y (M, K), one distributed pass."""
+        """Multi-vector SpMV: X (N, K) -> Y (M, K), one distributed pass.
+
+        Both the HBM matrix stream *and* the collective x-shard exchange
+        are paid once for all K columns — batching amortizes the
+        communication too."""
         if X.ndim != 2 or X.shape[0] != self.blocks.n_cols:
             raise ValueError(f"X has shape {X.shape}, expected ({self.blocks.n_cols}, K)")
         return self.run_mm(X)

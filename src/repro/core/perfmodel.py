@@ -157,7 +157,20 @@ def predict(
     chip: ChipSpec = TPU_V5E,
     clock_hz: float | None = None,
 ) -> Prediction:
-    """perf = min(peak, BW / balance); times for one SpMV of 2*nnz Flops."""
+    """perf = min(peak, BW / balance); times for one SpMV of 2*nnz Flops.
+
+    Args:
+        fmt: format label carried into the Prediction (reporting only).
+        balance: bytes per Flop from one of the ``balance_*`` functions.
+        nnz: stored elements of the operation (2 Flops each).
+        chip: bandwidth/peak parameters of the target machine.
+        clock_hz: clock for the cycles-per-element column (default: 1 GHz,
+            i.e. the column reads as cycles-per-GHz).
+
+    Returns:
+        A ``Prediction`` with the modelled time, GFlop/s and the binding
+        resource ("memory" | "compute").
+    """
     flops = 2.0 * nnz
     bytes_streamed = balance * flops
     t_mem = bytes_streamed / chip.hbm_bytes_per_s
@@ -182,6 +195,8 @@ def predict(
 
 
 def ell_pad_ratio(row_lengths: np.ndarray) -> float:
+    """ELL padding ratio (stored / nnz) from the row-length profile:
+    every row is padded to the longest row's length."""
     ml = row_lengths.max() if row_lengths.size else 0
     mean = row_lengths.mean() if row_lengths.size else 1
     return float(ml / max(1e-9, mean))
@@ -358,6 +373,140 @@ def select_pallas_blocks(
         claim = _vmem_claim(1, wb, C, n_cols, value_bytes, index_bytes, value_bytes)
         best = BlockChoice(1, wb, -(-width // wb) * wb, int(claim), False)
     return best
+
+
+# ---------------------------------------------------------------------------
+# SpMM batching model (micro-batched serving)
+# ---------------------------------------------------------------------------
+
+
+def matrix_stream_bytes(fmt_obj, am: AccessModel = TPU_FP32) -> float:
+    """Bytes of the *matrix* stream alone (values + indices, padding included).
+
+    This is the traffic component that batching amortizes: an SpMM with k
+    right-hand sides streams the matrix once, not k times.  Vector traffic
+    (input gathers + result write-back) still scales with k.
+
+    Args:
+        fmt_obj: a concrete converted container from ``core.formats``.
+        am: byte-width parameterization of the access model.
+
+    Returns:
+        Modelled bytes of one pass over the stored matrix.
+    """
+    from . import formats as F
+
+    if isinstance(fmt_obj, (F.CSR, F.JDS)):
+        return float((am.value_bytes + am.index_bytes) * fmt_obj.nnz)
+    if isinstance(fmt_obj, F.COO):
+        return float((am.value_bytes + 2 * am.index_bytes) * fmt_obj.nnz)
+    if isinstance(fmt_obj, F.ELL):
+        stored = int(np.prod(np.asarray(fmt_obj.val).shape))
+        return float((am.value_bytes + am.index_bytes) * stored)
+    if isinstance(fmt_obj, F.SELL):
+        stored = int(np.asarray(fmt_obj.val).shape[0])
+        return float((am.value_bytes + am.index_bytes) * stored)
+    if isinstance(fmt_obj, F.BSR):
+        bm, bn = fmt_obj.block_shape
+        return float((am.value_bytes * bm * bn + am.index_bytes) * fmt_obj.n_blocks)
+    if isinstance(fmt_obj, F.DIA):
+        nd, n = np.asarray(fmt_obj.data).shape
+        return float(am.value_bytes * nd * n)
+    if isinstance(fmt_obj, F.HybridDIA):
+        return matrix_stream_bytes(fmt_obj.dia, am) + matrix_stream_bytes(fmt_obj.rest, am)
+    raise TypeError(type(fmt_obj))
+
+
+def spmm_balance_of(fmt_obj, k: int, am: AccessModel = TPU_FP32) -> float:
+    """Algorithmic balance (bytes per Flop) of an SpMM at batch width ``k``.
+
+    One SpMM of width k does ``2 * nnz * k`` Flops while streaming the matrix
+    once and the vector traffic k times:
+
+        balance(k) = (matrix_bytes + k * vector_bytes) / (2 * nnz * k)
+
+    ``k == 1`` reproduces ``balance_of`` exactly; as k grows, balance falls
+    toward ``vector_bytes / (2 * nnz)`` — the paper's memory-bound ceiling
+    lifts by up to the matrix-to-vector traffic ratio.
+
+    Args:
+        fmt_obj: a concrete converted container from ``core.formats``.
+        k: batch width (number of simultaneous right-hand sides), >= 1.
+        am: byte-width parameterization of the access model.
+
+    Returns:
+        Modelled bytes moved per useful Flop at width k.
+    """
+    k = max(1, int(k))
+    total1 = balance_of(fmt_obj, am) * 2.0 * fmt_obj.nnz   # one SpMV, modelled
+    mat = matrix_stream_bytes(fmt_obj, am)
+    vec = max(0.0, total1 - mat)                           # invec + resvec share
+    return (mat + k * vec) / (2.0 * fmt_obj.nnz * k)
+
+
+@dataclass(frozen=True)
+class BatchWidthChoice:
+    """Outcome of ``select_batch_width``: the policy width + the curve behind it.
+
+    Attributes:
+        width: selected batch width (the serving layer's flush width).
+        widths: candidate widths that were evaluated (powers of two).
+        throughput: {k: predicted queries/s} over the candidates.
+        balance: {k: predicted bytes/Flop} over the candidates.
+        saturation: throughput(width) / max throughput over candidates —
+            how close the chosen width sits to the model's asymptote.
+    """
+
+    width: int
+    widths: tuple
+    throughput: dict
+    balance: dict
+    saturation: float
+
+
+def select_batch_width(
+    fmt_obj,
+    *,
+    am: AccessModel = TPU_FP32,
+    chip: ChipSpec = TPU_V5E,
+    k_max: int = 64,
+    efficiency: float = 0.9,
+) -> BatchWidthChoice:
+    """Pick the serving batch width from the SpMM roofline.
+
+    Predicted throughput at width k is ``k / time(SpMM_k)`` with
+    ``time = max(bytes / BW, flops / peak)``.  Throughput rises while the
+    matrix stream dominates and saturates once vector traffic (or the
+    compute roof) takes over; the policy picks the *smallest* power-of-two
+    width reaching ``efficiency`` of the best candidate's throughput —
+    larger batches would only add queueing latency for no modelled gain.
+
+    Args:
+        fmt_obj: a concrete converted container from ``core.formats``.
+        am: byte-width parameterization of the access model.
+        chip: roofline parameters (HBM bandwidth, peak Flop/s).
+        k_max: largest candidate width (rounded up to a power of two).
+        efficiency: fraction of the asymptotic throughput to settle for.
+
+    Returns:
+        A ``BatchWidthChoice``; ``choice.width`` is the flush width.
+    """
+    ks = []
+    k = 1
+    while k < k_max:
+        ks.append(k)
+        k *= 2
+    ks.append(k)  # first power of two >= k_max
+    qps, bal = {}, {}
+    for k in ks:
+        b = spmm_balance_of(fmt_obj, k, am)
+        pred = predict("spmm", b, fmt_obj.nnz * k, chip=chip)
+        bal[k] = b
+        qps[k] = k / pred.time_s
+    best = max(qps.values())
+    width = next(k for k in ks if qps[k] >= efficiency * best)
+    return BatchWidthChoice(width=width, widths=tuple(ks), throughput=qps,
+                            balance=bal, saturation=qps[width] / best)
 
 
 def spmv_streamed_bytes(fmt_obj, am: AccessModel) -> float:

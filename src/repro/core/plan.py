@@ -78,12 +78,25 @@ class SpMVPlan:
         return self.spmv(x)
 
     def spmv(self, x: jnp.ndarray) -> jnp.ndarray:
+        """One SpMV through the cached jitted executor.
+
+        Args:
+            x: input vector of shape (N,) for an (M, N) operator.
+
+        Returns:
+            y = A @ x of shape (M,).  Raises ValueError on a shape
+            mismatch (the XLA gather would clamp indices silently).
+        """
         if x.shape != (self.report.shape[1],):  # XLA gather would clamp, silently
             raise ValueError(f"x has shape {x.shape}, expected ({self.report.shape[1]},)")
         return self.apply(x)
 
     def spmm(self, X: jnp.ndarray) -> jnp.ndarray:
-        """Multi-vector SpMV: X (N, K) -> Y (M, K), one fused pass."""
+        """Multi-vector SpMV: X (N, K) -> Y (M, K), one fused pass.
+
+        The matrix is streamed once for all K columns — the serving
+        layer's batching lever (see ``perfmodel.spmm_balance_of``).
+        """
         if X.ndim != 2 or X.shape[0] != self.report.shape[1]:
             raise ValueError(f"X has shape {X.shape}, expected ({self.report.shape[1]}, K)")
         return self.apply_multi(X)
@@ -107,8 +120,17 @@ class SpMVPlan:
     ) -> "SpMVPlan":
         """Build (or fetch the memoized) plan for ``matrix``.
 
-        ``chunk_block`` / ``width_block`` override the model's Pallas tiling
-        choice; leave None for ``perfmodel.select_pallas_blocks``.
+        Args:
+            matrix: any ``core.formats`` container.
+            chip: roofline parameters (bandwidth, peak, VMEM budget).
+            am: access-model byte widths for the balance computation.
+            backend: "auto" | "xla" | "pallas" ("ref" aliases "xla").
+            chunk_block / width_block: override the model's Pallas tiling
+                choice; leave None for ``perfmodel.select_pallas_blocks``.
+
+        Returns:
+            The compiled (memoized) ``SpMVPlan``; ``plan.report`` records
+            what was decided and what the roofline predicts for it.
         """
         fmt = _FMT_NAMES.get(type(matrix))
         if fmt is None:

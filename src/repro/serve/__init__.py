@@ -1,1 +1,3 @@
-from . import engine, kv_cache  # noqa: F401
+from . import batching, engine, kv_cache  # noqa: F401
+from .batching import BackpressureError, BatchPolicy, SpMVFuture  # noqa: F401
+from .engine import BatchingSpMVServer, SparseOperatorServer  # noqa: F401

@@ -1,0 +1,239 @@
+"""Micro-batching primitives: futures, per-operator queues, the coalescer.
+
+The paper's bound (Secs. 3-5) is per-*pass*: one SpMV streams the whole
+matrix and saturates at BW / balance no matter how many cores push on it.
+The only way a serving layer beats that ceiling is to stop paying the
+matrix stream once per request — gather k concurrent ``y = A @ x`` requests
+for the same operator and execute them as a single ``plan.spmm(X)``, which
+streams the matrix once for all k (``perfmodel.spmm_balance_of``).
+
+This module holds the mechanism; the policy (which width, which deadline)
+and the operator registry live in ``serve.engine.BatchingSpMVServer``.
+Everything is cooperative and single-threaded: batches are flushed by
+``submit`` (width reached / deadline elapsed), by ``pump()``, or by a
+consumer demanding a ``result()`` — deterministic by construction, which is
+what the tests and the injectable ``clock`` rely on.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+class BackpressureError(RuntimeError):
+    """Raised when an operator's pending queue is at its ``max_pending`` cap.
+
+    The cap bounds queue memory under open-loop overload: shedding the
+    request at submission time is the only backpressure signal a cooperative
+    (thread-free) batcher can give its callers.
+    """
+
+
+class SpMVFuture:
+    """Handle for one submitted request; resolves when its batch executes.
+
+    ``result()`` never deadlocks: if the batch is still pending (width not
+    reached, deadline not elapsed), it forces a flush of the owning
+    operator queue — a consumer demanding an answer outranks the policy.
+    """
+
+    __slots__ = ("_queue", "_value", "_done")
+
+    def __init__(self, queue: "OperatorQueue"):
+        self._queue = queue
+        self._value = None
+        self._done = False
+
+    def done(self) -> bool:
+        """True once the owning batch has executed."""
+        return self._done
+
+    def result(self) -> jnp.ndarray:
+        """The request's ``y = A @ x`` column, flushing its batch if needed."""
+        if not self._done:
+            self._queue.flush()
+        return self._value
+
+    def _resolve(self, value: jnp.ndarray) -> None:
+        self._value = value
+        self._done = True
+        self._queue = None  # drop the back-reference once resolved
+
+
+@dataclass(frozen=True)
+class BatchPolicy:
+    """When to flush an operator's queue, and how to shape partial batches.
+
+    Attributes:
+        width: flush as soon as this many requests are queued.  The serving
+            layer derives it from the SpMM roofline
+            (``perfmodel.select_batch_width``) unless overridden.
+        deadline_s: flush when the *oldest* queued request has waited this
+            long — bounds latency when traffic is too thin to fill a batch.
+        pad_to_width: execute partial batches padded with zero columns up to
+            ``width`` so the jitted ``spmm`` only ever sees one shape (no
+            per-width retrace); the padding is accounted in the stats.
+        max_pending: queue-length cap; ``submit`` raises
+            ``BackpressureError`` beyond it.
+    """
+
+    width: int
+    deadline_s: float = 1e-3
+    pad_to_width: bool = True
+    max_pending: int = 256
+
+
+@dataclass
+class QueueStats:
+    """Per-operator serving counters (the ``stats()`` satellite).
+
+    ``calls`` counts *queries answered* (batched requests + direct
+    spmv/spmm calls); padding columns are streamed work, not queries, so
+    they appear only in ``padding_ratio``.
+    """
+
+    requests: int = 0          # submitted through the batcher
+    calls: int = 0             # queries answered (batched + direct paths)
+    batches: int = 0           # spmm flushes executed
+    batched_columns: int = 0   # real columns across all flushes
+    padded_columns: int = 0    # zero columns streamed for shape stability
+    fast_path_calls: int = 0   # width-1 submits executed as plan(x)
+
+    def record_batch(self, k: int, n_pad: int = 0) -> None:
+        """Account one executed batch of k real columns (+ n_pad zeros) —
+        the single bookkeeping point for batcher flushes and direct spmm."""
+        self.batches += 1
+        self.batched_columns += k
+        self.padded_columns += n_pad
+        self.calls += k
+
+    @property
+    def mean_batch_width(self) -> float:
+        """Mean *real* (unpadded) width over executed batches."""
+        return self.batched_columns / self.batches if self.batches else 0.0
+
+    @property
+    def padding_ratio(self) -> float:
+        """Padded columns / streamed columns (0.0 = every column was real)."""
+        streamed = self.batched_columns + self.padded_columns
+        return self.padded_columns / streamed if streamed else 0.0
+
+
+def coalesce(xs: list, width: int, pad_to_width: bool) -> tuple[jnp.ndarray, int]:
+    """Stack k request vectors into one SpMM operand.
+
+    Args:
+        xs: k vectors of shape (n,), the queued requests in arrival order.
+        width: the policy width to pad up to.
+        pad_to_width: whether partial batches get zero columns appended.
+
+    Returns:
+        (X, n_pad): X of shape (n, k + n_pad) with requests as columns.
+    """
+    X = jnp.stack(xs, axis=1)
+    n_pad = width - len(xs) if (pad_to_width and len(xs) < width) else 0
+    if n_pad:
+        X = jnp.pad(X, ((0, 0), (0, n_pad)))
+    return X, n_pad
+
+
+class OperatorQueue:
+    """Pending requests for one registered operator + its flush machinery.
+
+    Holds the compiled plan (``SpMVPlan`` or ``DistributedSpMVPlan`` — both
+    expose ``spmv``/``spmm``), the flush policy, and the stats counters.
+    """
+
+    def __init__(self, plan, policy: BatchPolicy, clock):
+        self.plan = plan
+        self.policy = policy
+        self._clock = clock
+        self._n_cols = int(plan.report.shape[1])
+        self._pending: deque = deque()  # (x, future, t_enqueue)
+        self._executors: dict = {}      # real width k -> jitted batch fn
+        self.stats = QueueStats()
+
+    def __len__(self) -> int:
+        return len(self._pending)
+
+    # -- submission ---------------------------------------------------------
+
+    def submit(self, x: jnp.ndarray) -> SpMVFuture:
+        """Enqueue one request; flush if the policy says the batch is due."""
+        if x.shape != (self._n_cols,):
+            # reject at the offending caller — a bad shape reaching flush
+            # would fail the whole batch and strand its valid futures
+            raise ValueError(
+                f"x has shape {x.shape}, expected ({self._n_cols},)")
+        self.stats.requests += 1
+        if self.policy.width <= 1:
+            # fast path: a width-1 policy means batching cannot amortize
+            # anything — execute exactly what plan(x) would, synchronously
+            fut = SpMVFuture(self)
+            fut._resolve(self.plan.spmv(x))
+            self.stats.fast_path_calls += 1
+            self.stats.calls += 1
+            return fut
+        if len(self._pending) >= self.policy.max_pending:
+            self.stats.requests -= 1  # shed: the request was not admitted
+            raise BackpressureError(
+                f"{len(self._pending)} pending requests at the "
+                f"max_pending={self.policy.max_pending} cap; drain with "
+                f"pump()/flush() or raise the cap")
+        fut = SpMVFuture(self)
+        self._pending.append((x, fut, self._clock()))
+        if len(self._pending) >= self.policy.width or self._deadline_elapsed():
+            self.flush()
+        return fut
+
+    # -- flushing -----------------------------------------------------------
+
+    def _deadline_elapsed(self) -> bool:
+        if not self._pending:
+            return False
+        return self._clock() - self._pending[0][2] >= self.policy.deadline_s
+
+    def due(self) -> bool:
+        """True when the policy wants a flush (width reached or deadline)."""
+        return (len(self._pending) >= self.policy.width
+                or self._deadline_elapsed())
+
+    def _splitter(self, k: int):
+        """Jitted Y -> (Y[:,0], ..., Y[:,k-1]) column split, cached per k.
+
+        One dispatch to hand each future its column, instead of k eager
+        slice ops (which cost more than the SpMM itself at paper scale).
+        At most ``policy.width`` distinct k's exist, so the cache is
+        bounded.  The stack/pad stays *eager* on purpose: fusing it into
+        the spmm graph makes XLA re-materialize the stacked operand inside
+        the gather and roughly doubles the batch time.
+        """
+        fn = self._executors.get(k)
+        if fn is None:
+            fn = self._executors[k] = jax.jit(
+                lambda Y: tuple(Y[:, i] for i in range(k)))
+        return fn
+
+    def flush(self) -> int:
+        """Execute all pending requests as one (padded) SpMM; resolve futures.
+
+        Returns:
+            The number of real requests answered (0 if the queue was empty).
+        """
+        if not self._pending:
+            return 0
+        xs, futs = [], []
+        while self._pending:
+            x, fut, _ = self._pending.popleft()
+            xs.append(x)
+            futs.append(fut)
+        k = len(futs)
+        X, n_pad = coalesce(xs, self.policy.width, self.policy.pad_to_width)
+        cols = self._splitter(k)(self.plan.spmm(X))
+        for fut, y in zip(futs, cols):
+            fut._resolve(y)
+        self.stats.record_batch(k, n_pad)
+        return k

@@ -1,28 +1,42 @@
-"""Batched serving engine: prefill + decode waves over a fixed slot batch.
+"""Serving engines: token decode waves + micro-batched SpMV operators.
 
-Decode is the paper's regime: every step streams all active weights (and the
-KV cache) against one activation vector per slot — a bandwidth-bound MVM
-pipeline.  The engine runs *synchronized waves*: requests in a wave share
-positions (prompts padded to the wave's max), new requests are admitted at
-wave boundaries into freed slots (continuous batching at wave granularity;
-per-token slot admission would need per-slot cache positions, a documented
-extension).
+Two serving surfaces share this module because they are the same regime at
+two granularities:
+
+* ``Engine`` — prefill + decode waves over a fixed slot batch.  Decode is
+  the paper's regime: every step streams all active weights (and the KV
+  cache) against one activation vector per slot — a bandwidth-bound MVM
+  pipeline.  Requests in a wave share positions (prompts padded to the
+  wave's max); new requests are admitted at wave boundaries into freed
+  slots (continuous batching at wave granularity).
+
+* ``BatchingSpMVServer`` — the operator-level analogue: concurrent
+  ``y = A @ x`` requests against a registered matrix are coalesced into a
+  single ``plan.spmm(X)`` so the matrix is streamed once per *batch*
+  instead of once per *request* (see ``serve.batching`` for the queue
+  machinery and ``perfmodel.select_batch_width`` for the width policy).
+  ``SparseOperatorServer`` remains as the direct-call compatibility name.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core import perfmodel as PM
 from ..core.plan import SpMVPlan
 from ..models.registry import Model
+from .batching import BatchPolicy, OperatorQueue, SpMVFuture  # noqa: F401
 from .kv_cache import SlotManager, zeros_like_shapes
 
 
 @dataclass
 class GenerationConfig:
+    """Sampling knobs for one ``Engine.generate`` wave."""
+
     max_new_tokens: int = 32
     temperature: float = 0.0         # 0 => greedy
     eos_id: int = -1                 # -1 => never stops early
@@ -30,6 +44,9 @@ class GenerationConfig:
 
 
 class Engine:
+    """Token serving engine: one jitted prefill + decode step over a fixed
+    slot batch (the decode-MVM regime the paper's roofline maps onto)."""
+
     def __init__(self, model: Model, params, *, batch_size: int, max_len: int):
         self.model = model
         self.params = params
@@ -45,8 +62,16 @@ class Engine:
         return jax.random.categorical(key, logits / cfg.temperature, axis=-1).astype(jnp.int32)
 
     def generate(self, prompts: np.ndarray, cfg: GenerationConfig = GenerationConfig()):
-        """prompts: (n, prompt_len) int32 — one wave (n <= batch_size).
-        Returns list of generated-token lists."""
+        """Run one synchronized prefill + decode wave.
+
+        Args:
+            prompts: (n, prompt_len) int32 token ids, n <= batch_size;
+                prompts share positions (pad to the wave's max upstream).
+            cfg: sampling configuration for the wave.
+
+        Returns:
+            A list of n generated-token lists (ints), one per prompt.
+        """
         n, plen = prompts.shape
         assert n <= self.batch_size
         B = self.batch_size
@@ -86,71 +111,198 @@ class Engine:
         return w + c / max(1, self.batch_size)
 
 
-class SparseOperatorServer:
-    """Plan-backed SpMV serving: register a matrix once, answer many queries.
+class BatchingSpMVServer:
+    """Micro-batching SpMV serving: coalesce concurrent requests into SpMM.
 
-    The operator-level analogue of the token engine above: each registered
-    matrix is compiled into an ``SpMVPlan`` exactly once (preprocessing +
-    kernel selection + jit), then every query hits the cached executor —
-    single vectors via ``spmv``, same-matrix batches via one fused ``spmm``
-    wave (the continuous-batching trick applied to SpMV traffic).
+    The operator-level continuation of the token engine above, built on the
+    paper's bound: a single SpMV re-streams the whole matrix per call, so
+    single-request throughput saturates at BW / balance.  Batching k
+    concurrent ``y = A @ x`` requests into one ``plan.spmm(X)`` streams the
+    matrix once for all k (``perfmodel.spmm_balance_of``) — the only lever
+    that lifts the ceiling.
+
+    Each registered operator gets a compiled plan (``SpMVPlan``, or
+    ``DistributedSpMVPlan`` via ``register_distributed`` — both are served
+    uniformly) plus an ``OperatorQueue`` whose flush width comes from the
+    SpMM roofline (``perfmodel.select_batch_width``) unless overridden.
+    Requests enter through ``submit``/``submit_many`` and resolve as
+    ``SpMVFuture``s when the batch flushes: width reached, deadline elapsed
+    (checked at submission and by ``pump()``), or a consumer forcing
+    ``result()``.  Partial batches are zero-padded to the policy width so
+    the jitted executor sees one shape.  ``max_pending`` caps each queue;
+    beyond it ``submit`` sheds load with ``BackpressureError``.
+
+    The batcher is cooperative and single-threaded; ``clock`` is injectable
+    so deadline behavior is testable without sleeping.
     """
 
-    def __init__(self, *, backend: str = "auto", chip=None):
+    def __init__(self, *, backend: str = "auto", chip=None,
+                 am: PM.AccessModel = PM.TPU_FP32,
+                 max_batch: int | None = None, deadline_s: float = 1e-3,
+                 max_pending: int = 256, pad_partial: bool = True,
+                 clock=time.monotonic):
+        """Args:
+            backend: plan backend ("auto" | "xla" | "pallas").
+            chip: roofline parameters; defaults to TPU v5e.
+            am: access model (byte widths) for the batching policy.
+            max_batch: server-wide flush-width override; None lets
+                ``perfmodel.select_batch_width`` decide per operator.
+            deadline_s: default latency bound for partial batches.
+            max_pending: default per-operator queue cap (backpressure).
+            pad_partial: zero-pad partial batches to the policy width.
+            clock: monotonic time source (injectable for tests).
+        """
         from ..utils.hw import TPU_V5E
         self.backend = backend
         self.chip = chip or TPU_V5E
-        self._plans: dict = {}
-        self._calls: dict = {}
+        self.am = am
+        self.max_batch = max_batch
+        self.deadline_s = deadline_s
+        self.max_pending = max_pending
+        self.pad_partial = pad_partial
+        self._clock = clock
+        self._queues: dict[str, OperatorQueue] = {}
 
-    def register(self, name: str, matrix, **plan_kw):
-        """Compile (idempotently) and returns the plan's report."""
+    # -- registration -------------------------------------------------------
+
+    def _policy(self, policy_matrix, max_batch, deadline_s,
+                max_pending) -> BatchPolicy:
+        width = max_batch if max_batch is not None else self.max_batch
+        if width is None:
+            width = PM.select_batch_width(policy_matrix, am=self.am,
+                                          chip=self.chip).width
+        return BatchPolicy(
+            width=int(width),
+            deadline_s=self.deadline_s if deadline_s is None else deadline_s,
+            pad_to_width=self.pad_partial,
+            max_pending=self.max_pending if max_pending is None else max_pending,
+        )
+
+    def register(self, name: str, matrix, *, max_batch: int | None = None,
+                 deadline_s: float | None = None,
+                 max_pending: int | None = None, **plan_kw):
+        """Compile ``matrix`` into a plan + batching queue; returns the report.
+
+        Compilation is idempotent (plans are memoized on the container);
+        re-registering a name replaces its queue and resets its stats.
+
+        Args:
+            name: operator key used by ``submit``/``spmv``/``stats``.
+            matrix: any ``core.formats`` container.
+            max_batch: flush-width override for this operator.
+            deadline_s / max_pending: per-operator policy overrides.
+            **plan_kw: forwarded to ``SpMVPlan.compile``.
+        """
         plan = SpMVPlan.compile(matrix, backend=self.backend, chip=self.chip,
                                 **plan_kw)
-        self._plans[name] = plan
-        self._calls.setdefault(name, 0)
+        policy = self._policy(matrix, max_batch, deadline_s, max_pending)
+        self._queues[name] = OperatorQueue(plan, policy, self._clock)
         return plan.report
 
     def register_distributed(self, name: str, matrix, *, mesh=None,
-                             variant: str = "overlap", **plan_kw):
-        """Mesh-aware registration: compile ``matrix`` (CSR) into a
+                             variant: str = "overlap",
+                             max_batch: int | None = None,
+                             deadline_s: float | None = None,
+                             max_pending: int | None = None, **plan_kw):
+        """Mesh-aware registration: compile ``matrix`` into a
         ``DistributedSpMVPlan`` sharded over ``mesh`` (default: all local
-        devices).  Queries flow through the same ``spmv``/``spmm`` entry
-        points — the server treats local and distributed plans uniformly.
+        devices).  Batching applies unchanged — ``plan.spmm`` is one
+        *distributed* pass, so coalescing also amortizes the collective
+        x-shard exchange across the batch, not just the HBM matrix stream.
         """
-        from ..core.distributed_plan import compile_distributed_spmv_plan
+        from ..core.distributed_plan import _as_csr, compile_distributed_spmv_plan
 
         plan = compile_distributed_spmv_plan(matrix, mesh, variant=variant,
                                              chip=self.chip, **plan_kw)
-        self._plans[name] = plan
-        self._calls.setdefault(name, 0)
+        policy = self._policy(_as_csr(matrix), max_batch, deadline_s, max_pending)
+        self._queues[name] = OperatorQueue(plan, policy, self._clock)
         return plan.report
 
+    # -- batched submission -------------------------------------------------
+
+    def submit(self, name: str, x: jnp.ndarray) -> SpMVFuture:
+        """Enqueue one ``y = A @ x`` request; returns its future.
+
+        Flushes the operator's batch when the policy width is reached or
+        its deadline has elapsed; width-1 policies execute synchronously
+        (exactly ``plan(x)``).  Raises ``BackpressureError`` at the
+        ``max_pending`` cap.
+        """
+        return self._queues[name].submit(x)
+
+    def submit_many(self, name: str, xs) -> list[SpMVFuture]:
+        """Submit a burst of requests in order; returns their futures."""
+        return [self.submit(name, x) for x in xs]
+
+    def pump(self) -> int:
+        """Flush every operator queue whose deadline has elapsed.
+
+        The cooperative stand-in for a background flusher thread: an
+        open-loop driver calls this between arrivals.  Returns the number
+        of requests answered.
+        """
+        return sum(q.flush() for q in self._queues.values()
+                   if q.due())
+
+    def flush(self, name: str | None = None) -> int:
+        """Force-flush one operator (or all); returns requests answered."""
+        if name is not None:
+            return self._queues[name].flush()
+        return sum(q.flush() for q in self._queues.values())
+
+    def pending(self, name: str) -> int:
+        """Queued (not yet executed) request count for one operator."""
+        return len(self._queues[name])
+
+    # -- direct (unbatched) paths ------------------------------------------
+
     def plan(self, name: str) -> SpMVPlan:
-        return self._plans[name]
+        """The compiled plan behind a registered operator."""
+        return self._queues[name].plan
 
     def spmv(self, name: str, x: jnp.ndarray) -> jnp.ndarray:
-        self._calls[name] += 1
-        return self._plans[name](x)
+        """One synchronous query, bypassing the batcher (counted in stats)."""
+        self._queues[name].stats.calls += 1
+        return self._queues[name].plan(x)
 
     def spmm(self, name: str, X: jnp.ndarray) -> jnp.ndarray:
-        """One batched wave: X (N, K) -> Y (M, K), counted as K queries."""
-        self._calls[name] += int(X.shape[1])
-        return self._plans[name].spmm(X)
+        """One caller-assembled batch: X (N, K) -> Y (M, K), counted as K
+        queries and one batch (the caller did the coalescing)."""
+        self._queues[name].stats.record_batch(int(X.shape[1]))
+        return self._queues[name].plan.spmm(X)
+
+    # -- accounting ---------------------------------------------------------
 
     def stats(self) -> dict:
-        """Per-matrix serving stats for the roofline discussion."""
+        """Per-operator serving stats for the roofline discussion.
+
+        Beyond the plan report fields, each entry carries the batching
+        counters: ``requests`` (submitted), ``calls`` (queries answered),
+        ``batches``, ``mean_batch_width`` (real columns per flush),
+        ``padding_ratio`` (zero columns / streamed columns), and the
+        policy's ``batch_width``/``deadline_s``.
+        """
         out = {}
-        for name, plan in self._plans.items():
-            r = plan.report
+        for name, q in self._queues.items():
+            r = q.plan.report
+            st = q.stats
             out[name] = {
-                "calls": self._calls[name],
+                "calls": st.calls,
+                "requests": st.requests,
+                "batches": st.batches,
+                "mean_batch_width": st.mean_batch_width,
+                "padding_ratio": st.padding_ratio,
+                "fast_path_calls": st.fast_path_calls,
+                "pending": len(q),
+                "batch_width": q.policy.width,
+                "deadline_s": q.policy.deadline_s,
                 "format": r.format,
                 "kernel": r.kernel,
                 "nnz": r.nnz,
                 "predicted_gflops": r.predicted_gflops,
                 "predicted_bytes_per_call": r.balance_bytes_per_flop * 2.0 * r.nnz,
             }
+            plan = q.plan
             if hasattr(plan, "variant"):  # distributed plans: mesh-level stats
                 out[name].update({
                     "variant": plan.variant,
@@ -161,3 +313,13 @@ class SparseOperatorServer:
                     "collective_bytes_per_call": plan.traffic["collective"],
                 })
         return out
+
+
+class SparseOperatorServer(BatchingSpMVServer):
+    """Back-compat name for the direct-call serving surface.
+
+    Pre-batching code registered operators and called ``spmv``/``spmm``
+    synchronously; that surface is unchanged on ``BatchingSpMVServer``, so
+    this subclass only keeps the old name importable.  New code should use
+    ``BatchingSpMVServer`` and the ``submit`` path.
+    """

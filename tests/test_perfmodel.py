@@ -100,3 +100,55 @@ def test_streamed_bytes_concrete_vs_model(hh_small):
     assert sell_bytes >= csr_bytes * 0.9  # padding can only add traffic
     hyb = F.split_dia(hh_small)
     assert PM.spmv_streamed_bytes(hyb, am) < sell_bytes  # the hybrid's win
+
+
+# --- SpMM batching model (micro-batched serving) ----------------------------
+
+def test_spmm_balance_width1_is_spmv_balance(hh_small):
+    """The batching model must degenerate to the paper's per-call balance."""
+    for obj in (hh_small, F.SELL.from_csr(hh_small, C=8)):
+        assert PM.spmm_balance_of(obj, 1) == pytest.approx(PM.balance_of(obj))
+
+
+def test_spmm_balance_falls_with_width(hh_small):
+    """Wider batches amortize the matrix stream: balance is monotone
+    non-increasing in k and bounded below by the per-vector traffic."""
+    sell = F.SELL.from_csr(hh_small, C=8)
+    am = PM.TPU_FP32
+    bals = [PM.spmm_balance_of(sell, k, am) for k in (1, 2, 4, 8, 16, 64)]
+    assert all(b1 >= b2 - 1e-12 for b1, b2 in zip(bals, bals[1:]))
+    vec_floor = (PM.balance_of(sell, am) * 2.0 * sell.nnz
+                 - PM.matrix_stream_bytes(sell, am)) / (2.0 * sell.nnz)
+    assert bals[-1] >= vec_floor - 1e-12
+
+
+def test_matrix_stream_bytes_padding_counts(hh_small):
+    """SELL streams its padded slots; CSR streams exactly nnz entries."""
+    am = PM.TPU_FP32
+    csr_bytes = PM.matrix_stream_bytes(hh_small, am)
+    assert csr_bytes == (am.value_bytes + am.index_bytes) * hh_small.nnz
+    sell = F.SELL.from_csr(hh_small, C=8, sigma=8)
+    assert PM.matrix_stream_bytes(sell, am) >= csr_bytes
+
+
+def test_select_batch_width_roofline_direction(hh_small):
+    """Predicted throughput must be non-decreasing in width (the curve the
+    serve_throughput benchmark validates), and the chosen width must sit at
+    the efficiency knee."""
+    sell = F.SELL.from_csr(hh_small, C=8)
+    choice = PM.select_batch_width(sell, efficiency=0.9)
+    qps = [choice.throughput[k] for k in choice.widths]
+    assert all(a <= b + 1e-9 for a, b in zip(qps, qps[1:]))
+    assert choice.width > 1                        # batching must help
+    best = max(qps)
+    assert choice.throughput[choice.width] >= 0.9 * best
+    smaller = [k for k in choice.widths if k < choice.width]
+    assert all(choice.throughput[k] < 0.9 * best for k in smaller)
+
+
+def test_select_batch_width_efficiency_monotone(hh_small):
+    """Demanding more of the asymptote can only widen the batch."""
+    sell = F.SELL.from_csr(hh_small, C=8)
+    w_lo = PM.select_batch_width(sell, efficiency=0.5).width
+    w_hi = PM.select_batch_width(sell, efficiency=0.99).width
+    assert w_lo <= w_hi

@@ -1,0 +1,253 @@
+"""Micro-batching serving subsystem: edge cases the policy must get right.
+
+Covers the batcher's contract: partial-batch padding correctness, deadline
+flush (via an injected fake clock — no sleeping), the backpressure cap,
+single-request fast-path equivalence with ``plan(x)``, distributed-operator
+batching on an emulated 4-device mesh, and the stats counters.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import formats as F
+from repro.core import perfmodel as PM
+from repro.core import spmv as S
+from repro.serve import BackpressureError, BatchingSpMVServer
+
+
+class FakeClock:
+    """Deterministic monotonic clock the tests advance by hand."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+    def __call__(self) -> float:
+        return self.t
+
+
+def _xs(n, k, seed=0):
+    rng = np.random.default_rng(seed)
+    return [jnp.asarray(rng.standard_normal(n).astype(np.float32))
+            for _ in range(k)]
+
+
+@pytest.fixture()
+def served(hh_small):
+    """A server with one SELL operator at a fixed width-4 policy and a
+    far-away deadline (flushes in these tests are explicit or width-driven)."""
+    clock = FakeClock()
+    srv = BatchingSpMVServer(backend="auto", max_batch=4, deadline_s=60.0,
+                             clock=clock)
+    srv.register("hh", F.convert(hh_small, "sell", C=8))
+    return srv, clock, hh_small
+
+
+# --- width-driven flush + padding -------------------------------------------
+
+def test_full_batch_flushes_and_matches_reference(served):
+    srv, _, m = served
+    xs = _xs(m.shape[1], 4)
+    futs = srv.submit_many("hh", xs)
+    assert all(f.done() for f in futs)          # width 4 reached -> flushed
+    for x, f in zip(xs, futs):
+        np.testing.assert_allclose(np.asarray(f.result()),
+                                   np.asarray(S.spmv(m, x)),
+                                   rtol=2e-5, atol=2e-5)
+    st = srv.stats()["hh"]
+    assert st["batches"] == 1 and st["mean_batch_width"] == 4.0
+    assert st["padding_ratio"] == 0.0
+
+
+def test_partial_batch_padding_correctness(served):
+    """A flushed partial batch is padded with zero columns; the padding must
+    not perturb the real columns and must be visible in the stats."""
+    srv, _, m = served
+    xs = _xs(m.shape[1], 3, seed=1)             # 3 of width-4: one pad column
+    futs = srv.submit_many("hh", xs)
+    assert not any(f.done() for f in futs)
+    assert srv.flush("hh") == 3
+    for x, f in zip(xs, futs):
+        np.testing.assert_allclose(np.asarray(f.result()),
+                                   np.asarray(S.spmv(m, x)),
+                                   rtol=2e-5, atol=2e-5)
+    st = srv.stats()["hh"]
+    assert st["batches"] == 1 and st["mean_batch_width"] == 3.0
+    assert st["padding_ratio"] == pytest.approx(1.0 / 4.0)
+
+
+def test_result_forces_flush(served):
+    """A consumer demanding a pending result outranks the flush policy."""
+    srv, _, m = served
+    futs = srv.submit_many("hh", _xs(m.shape[1], 2, seed=2))
+    assert not futs[0].done()
+    y = futs[0].result()                        # forces the flush
+    assert y.shape == (m.shape[0],)
+    assert all(f.done() for f in futs)
+    assert srv.pending("hh") == 0
+
+
+# --- deadline flush ----------------------------------------------------------
+
+def test_deadline_flush_via_pump(served):
+    srv, clock, m = served
+    futs = srv.submit_many("hh", _xs(m.shape[1], 2, seed=3))
+    assert srv.pump() == 0                      # deadline not elapsed: no-op
+    assert not futs[0].done()
+    clock.advance(61.0)
+    assert srv.pump() == 2                      # oldest request is now overdue
+    assert all(f.done() for f in futs)
+    st = srv.stats()["hh"]
+    assert st["batches"] == 1 and st["padding_ratio"] == pytest.approx(0.5)
+
+
+def test_deadline_flush_on_submit(served):
+    """An overdue queue flushes as soon as the next submission arrives —
+    the newcomer rides along in the same batch."""
+    srv, clock, m = served
+    xs = _xs(m.shape[1], 2, seed=4)
+    f0 = srv.submit("hh", xs[0])
+    clock.advance(61.0)
+    f1 = srv.submit("hh", xs[1])
+    assert f0.done() and f1.done()
+    assert srv.stats()["hh"]["mean_batch_width"] == 2.0
+
+
+# --- backpressure ------------------------------------------------------------
+
+def test_backpressure_cap(served):
+    srv, _, m = served
+    srv.register("capped", F.convert(m, "sell", C=8), max_batch=8,
+                 max_pending=3)
+    xs = _xs(m.shape[1], 4, seed=5)
+    for x in xs[:3]:
+        srv.submit("capped", x)
+    with pytest.raises(BackpressureError):
+        srv.submit("capped", xs[3])
+    st = srv.stats()["capped"]
+    assert st["requests"] == 3 and st["pending"] == 3  # shed request not counted
+    assert srv.flush("capped") == 3                    # drain recovers the queue
+    srv.submit("capped", xs[3])
+    assert srv.stats()["capped"]["requests"] == 4
+
+
+def test_bad_shape_rejected_at_submit(served):
+    """A wrong-shaped request must fail at its own caller, not poison the
+    batch it would have joined (stranding valid futures unresolved)."""
+    srv, _, m = served
+    xs = _xs(m.shape[1], 2, seed=9)
+    futs = srv.submit_many("hh", xs)
+    bad = jnp.zeros(m.shape[1] + 1, jnp.float32)
+    with pytest.raises(ValueError, match="expected"):
+        srv.submit("hh", bad)
+    assert srv.pending("hh") == 2               # queue untouched by the reject
+    assert srv.stats()["hh"]["requests"] == 2
+    assert srv.flush("hh") == 2                 # valid futures still resolve
+    assert all(f.done() for f in futs)
+
+
+# --- fast path ---------------------------------------------------------------
+
+def test_width1_fast_path_is_exactly_plan(served):
+    """A width-1 policy must execute the identical jitted callable as
+    ``plan(x)`` — bitwise, not approximately."""
+    srv, _, m = served
+    srv.register("solo", F.convert(m, "sell", C=8), max_batch=1)
+    x = _xs(m.shape[1], 1, seed=6)[0]
+    fut = srv.submit("solo", x)
+    assert fut.done()                          # synchronous: no queueing
+    np.testing.assert_array_equal(np.asarray(fut.result()),
+                                  np.asarray(srv.plan("solo")(x)))
+    st = srv.stats()["solo"]
+    assert st["fast_path_calls"] == 1 and st["batches"] == 0
+
+
+# --- policy + stats ----------------------------------------------------------
+
+def test_default_width_comes_from_perfmodel(hh_small):
+    srv = BatchingSpMVServer(backend="auto")
+    sell = F.convert(hh_small, "sell", C=8)
+    srv.register("hh", sell)
+    choice = PM.select_batch_width(sell, chip=srv.chip, am=srv.am)
+    st = srv.stats()["hh"]
+    assert st["batch_width"] == choice.width > 1
+    assert choice.width in choice.widths and choice.saturation >= 0.9
+
+
+def test_stats_count_direct_and_batched_paths(served):
+    srv, _, m = served
+    xs = _xs(m.shape[1], 4, seed=7)
+    srv.spmv("hh", xs[0])                       # direct single query
+    srv.spmm("hh", jnp.stack(xs[:3], axis=1))   # caller-assembled batch of 3
+    srv.submit_many("hh", xs)                   # one width-4 batched flush
+    st = srv.stats()["hh"]
+    assert st["requests"] == 4                  # only submits are requests
+    assert st["calls"] == 1 + 3 + 4
+    assert st["batches"] == 2                   # caller spmm + batcher flush
+    assert st["mean_batch_width"] == pytest.approx((3 + 4) / 2)
+
+
+# --- distributed operators ---------------------------------------------------
+
+def test_distributed_operator_batching(hh_small):
+    """Batching composes with mesh-sharded plans on the session's devices."""
+    srv = BatchingSpMVServer(max_batch=4, deadline_s=60.0, clock=FakeClock())
+    srv.register_distributed("hh", hh_small, variant="overlap")
+    xs = _xs(hh_small.shape[1], 4, seed=8)
+    futs = srv.submit_many("hh", xs)
+    assert all(f.done() for f in futs)
+    for x, f in zip(xs, futs):
+        np.testing.assert_allclose(np.asarray(f.result()),
+                                   np.asarray(S.spmv(hh_small, x)),
+                                   rtol=2e-4, atol=1e-4)
+    st = srv.stats()["hh"]
+    assert st["variant"] == "overlap" and st["parts"] == len(jax.devices())
+    assert st["batches"] == 1 and st["mean_batch_width"] == 4.0
+
+
+_DIST_BATCH_WORKER = r"""
+import json
+import numpy as np, jax, jax.numpy as jnp
+from repro.core.matrices import holstein_hubbard_surrogate
+from repro.serve import BatchingSpMVServer
+
+n = 800
+m = holstein_hubbard_surrogate(n, seed=3)
+d = m.to_dense()
+srv = BatchingSpMVServer(max_batch=4, deadline_s=60.0)
+srv.register_distributed("hh", m, variant="overlap")
+rng = np.random.default_rng(0)
+xs = [jnp.asarray(rng.standard_normal(n).astype(np.float32)) for _ in range(6)]
+futs = srv.submit_many("hh", xs)       # 4 flush at width; 2 stay pending
+flushed_at_width = all(f.done() for f in futs[:4]) and not futs[4].done()
+srv.flush("hh")                        # partial batch of 2, padded to 4
+err = 0.0
+for x, f in zip(xs, futs):
+    y_ref = d @ np.asarray(x)
+    err = max(err, float(np.max(np.abs(np.asarray(f.result()) - y_ref))
+                         / np.max(np.abs(y_ref))))
+st = srv.stats()["hh"]
+print(json.dumps({
+    "devices": len(jax.devices()), "err": err,
+    "flushed_at_width": flushed_at_width,
+    "parts": st["parts"], "batches": st["batches"],
+    "mean_batch_width": st["mean_batch_width"],
+    "padding_ratio": st["padding_ratio"],
+}))
+"""
+
+
+@pytest.mark.slow
+def test_distributed_batching_on_emulated_4_device_mesh(emulated_devices_run):
+    """Full batched-serving path over a real (emulated) 4-device mesh in a
+    fresh subprocess: width flush, padded partial flush, stats, accuracy."""
+    res = emulated_devices_run(4, _DIST_BATCH_WORKER)
+    assert res["devices"] == 4 and res["parts"] == 4
+    assert res["flushed_at_width"]
+    assert res["err"] < 2e-4
+    assert res["batches"] == 2
+    assert res["mean_batch_width"] == pytest.approx(3.0)   # (4 + 2) / 2
+    assert res["padding_ratio"] == pytest.approx(2.0 / 8.0)

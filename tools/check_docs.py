@@ -1,0 +1,76 @@
+"""Docs gate for CI: markdown link check + doctest over doc code snippets.
+
+Two failure modes docs rot into, both cheap to machine-check:
+
+* **dead relative links/paths** — every ``[text](target)`` whose target is
+  not an URL or a pure anchor must resolve to a file or directory in the
+  repo (anchors are stripped before the existence check);
+* **stale code snippets** — every ``>>>`` example in the checked files is
+  executed with doctest (run with ``PYTHONPATH=src`` so snippets can
+  import ``repro``).
+
+Usage::
+
+    PYTHONPATH=src python tools/check_docs.py README.md docs/*.md
+"""
+from __future__ import annotations
+
+import doctest
+import re
+import sys
+from pathlib import Path
+
+# [text](target) excluding images' inner part handled identically; ignore
+# targets with a scheme (http:, https:, mailto:) and pure #anchors
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def check_links(path: Path, repo_root: Path) -> list[str]:
+    """Return human-readable errors for dead relative links in ``path``."""
+    errors = []
+    for target in _LINK_RE.findall(path.read_text()):
+        if re.match(r"^[a-zA-Z][a-zA-Z0-9+.-]*:", target) or target.startswith("#"):
+            continue
+        rel = target.split("#", 1)[0]
+        resolved = (path.parent / rel).resolve()
+        if not resolved.exists():
+            errors.append(f"{path}: dead link -> {target}")
+        elif repo_root not in resolved.parents and resolved != repo_root:
+            errors.append(f"{path}: link escapes the repo -> {target}")
+    return errors
+
+
+def check_doctests(path: Path) -> list[str]:
+    """Run every ``>>>`` snippet in ``path``; return failure summaries."""
+    try:
+        results = doctest.testfile(
+            str(path), module_relative=False, verbose=False,
+            optionflags=doctest.ELLIPSIS | doctest.NORMALIZE_WHITESPACE)
+    except Exception as e:  # snippet raised outside an expected-output check
+        return [f"{path}: doctest crashed: {type(e).__name__}: {e}"]
+    if results.failed:
+        return [f"{path}: {results.failed}/{results.attempted} doctest(s) failed"]
+    return []
+
+
+def main(argv: list[str]) -> int:
+    files = [Path(a) for a in argv] or [Path("README.md")]
+    repo_root = Path(__file__).resolve().parent.parent
+    errors = []
+    attempted = 0
+    for f in files:
+        if not f.exists():
+            errors.append(f"{f}: file does not exist")
+            continue
+        errors += check_links(f, repo_root)
+        errors += check_doctests(f)
+        attempted += 1
+    for e in errors:
+        print(f"FAIL {e}", file=sys.stderr)
+    print(f"checked {attempted} file(s): "
+          f"{'OK' if not errors else f'{len(errors)} error(s)'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
