@@ -11,13 +11,12 @@ nominal one.
 from __future__ import annotations
 
 import time
-from dataclasses import replace
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.utils.hw import ChipSpec, TPU_V5E
+from repro.utils.hw import ChipSpec
 
 _CAL: dict = {}
 

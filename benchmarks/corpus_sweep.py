@@ -1,0 +1,182 @@
+"""Corpus-wide plan autotune sweep — the perfmodel's validation receipt.
+
+The paper's claim is that the right storage scheme depends on the matrix;
+``perfmodel.select_format`` operationalizes that claim, and this module
+*measures* it across the whole ``core.corpus`` registry: every registered
+matrix is compiled under every candidate format, timed in the repeated-SpMV
+setting, and compared against the model's pick.
+
+Per matrix, the record carries:
+
+* measured + predicted seconds per format (prediction at this host's
+  calibrated STREAM bandwidth, through the execution-aware roofline);
+* ``chosen`` (the model's pick) vs ``best_measured`` and the slowdown the
+  pick costs when they disagree — the honest error bar on ``format="auto"``;
+* the SpMM serving batch width ``perfmodel.select_batch_width`` would run
+  this matrix at;
+* the distributed partition view (nnz-balanced 4-way cut): per-partition
+  slab choices and the straggler factor — partition quality is
+  matrix-shape-dependent (Schubert et al., arXiv:1106.5908).
+
+``run()`` emits the standard CSV rows; ``run_json()`` feeds the
+``benchmarks.run --json`` perf-trajectory artifact (BENCH_PR4.json), which
+``tools/check_bench.py`` gates CI on.
+"""
+from __future__ import annotations
+
+import math
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import corpus
+from repro.core import formats as F
+from repro.core import perfmodel as PM
+from repro.core.distributed import nnz_balanced_partition
+from repro.core.distributed_plan import plan_shard_formats, select_slab_format
+from repro.core.plan import SpMVPlan
+
+from .common import host_chip, row
+
+
+def _time_iters(fn, x, iters: int, repeats: int = 3) -> float:
+    """Best-of-``repeats`` steady-state seconds/call (warmup excluded)."""
+    jax.block_until_ready(fn(x))
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        y = None
+        for _ in range(iters):
+            y = fn(x)
+        jax.block_until_ready(y)
+        best = min(best, (time.perf_counter() - t0) / iters)
+    return best
+
+
+def _convert_kwargs(spec: corpus.MatrixSpec, fmt: str) -> dict:
+    kw = {}
+    if fmt in ("sell", "hybrid"):
+        kw = spec.sell_kwargs()
+    elif fmt == "bsr":
+        kw = {"block_shape": (8, 128)}
+    kw.update(spec.convert_kwargs.get(fmt, {}))   # per-spec overrides win
+    return kw
+
+
+def sweep_matrix(spec: corpus.MatrixSpec, *, iters: int = 20, chip=None,
+                 parts: int = 4) -> dict:
+    """Time one corpus matrix under every candidate format + the auto pick."""
+    chip = chip or host_chip()
+    m = corpus.build(spec.name)
+    stats = corpus.corpus_stats(m, C=spec.sell_C, sigma=spec.sell_sigma)
+    choice = PM.select_format(m, chip=chip, C=spec.sell_C,
+                              sigma=spec.sell_sigma, allowed=spec.formats)
+    x = jnp.asarray(np.random.default_rng(0)
+                    .standard_normal(m.shape[1]).astype(np.asarray(m.val).dtype))
+    flops = 2.0 * m.nnz
+
+    formats = {}
+    converted = {}
+    for fmt in spec.formats:
+        obj = m if fmt == "csr" else F.convert(m, fmt, **_convert_kwargs(spec, fmt))
+        converted[fmt] = obj
+        plan = SpMVPlan.compile(obj, chip=chip)
+        t = _time_iters(plan.apply, x, iters)
+        pred_t = PM.predict_exec(fmt, plan.report.balance_bytes_per_flop,
+                                 m.nnz, chip=chip).time_s
+        formats[fmt] = {
+            "t_measured_s": t,
+            "gflops": flops / t / 1e9,
+            "t_predicted_s": pred_t,
+            "prediction_ratio": pred_t / t,   # 1.0 = the model nailed it
+            "balance_bytes_per_flop": plan.report.balance_bytes_per_flop,
+            "kernel": plan.report.kernel,
+        }
+
+    best = min(formats, key=lambda f: formats[f]["t_measured_s"])
+    chosen = choice.format
+    slowdown = formats[chosen]["t_measured_s"] / formats[best]["t_measured_s"]
+
+    # serving: the batch width the SpMM roofline would flush this matrix at
+    width = PM.select_batch_width(converted[chosen], chip=chip).width
+
+    # distributed: per-partition slab choices on the nnz-balanced cut
+    bounds = nnz_balanced_partition(m, parts)
+    reports = plan_shard_formats(m, bounds, C=spec.sell_C, chip=chip)
+    shard_nnz = [r.nnz for r in reports]
+    straggler = (max(shard_nnz) / (sum(shard_nnz) / len(shard_nnz))
+                 if sum(shard_nnz) else 1.0)
+
+    return {
+        "family": spec.family,
+        "n": m.shape[0],
+        "nnz": m.nnz,
+        "source": getattr(m, "_source", None),
+        "stats": {k: stats[k] for k in
+                  ("nnz_per_row_mean", "nnz_per_row_max", "bandwidth",
+                   "n_populated_diags", "ell_occupancy", "sell_occupancy",
+                   "nnz_per_row_hist")},
+        "formats": formats,
+        "chosen": chosen,
+        "best_measured": best,
+        "chosen_matches_best": chosen == best,
+        "chosen_slowdown_vs_best": slowdown,
+        "chosen_prediction_ratio": formats[chosen]["prediction_ratio"],
+        "serve_batch_width": width,
+        "distributed": {
+            "parts": parts,
+            "slab_format": select_slab_format(reports),
+            "per_partition": [r.format for r in reports],
+            "straggler_nnz_factor": straggler,
+        },
+    }
+
+
+def measure(*, iters: int = 20, only=None) -> dict:
+    """Sweep the whole registry; returns the BENCH_PR4 ``corpus`` payload."""
+    chip = host_chip()
+    matrices = {}
+    for name in corpus.names():
+        if only and only not in name:
+            continue
+        matrices[name] = sweep_matrix(corpus.get(name), iters=iters, chip=chip)
+    matched = [e["chosen_matches_best"] for e in matrices.values()]
+    slowdowns = [e["chosen_slowdown_vs_best"] for e in matrices.values()]
+    n_formats = {f for e in matrices.values() for f in e["formats"]}
+    return {
+        "backend": jax.default_backend(),
+        "calibrated_bw_bytes_per_s": chip.hbm_bytes_per_s,
+        "iters": iters,
+        "matrices": matrices,
+        "summary": {
+            "n_matrices": len(matrices),
+            "formats_covered": sorted(n_formats),
+            "chosen_match_rate": (sum(matched) / len(matched)) if matched else 0.0,
+            "geomean_chosen_slowdown": (math.exp(
+                sum(math.log(s) for s in slowdowns) / len(slowdowns))
+                if slowdowns else 1.0),
+        },
+    }
+
+
+def run(full: bool = False):
+    """CSV rows: per matrix the chosen/best formats and the pick's cost."""
+    res = measure(iters=30 if full else 20)
+    rows = []
+    for name, e in res["matrices"].items():
+        rows.append(row("corpus_sweep", name,
+                        e["formats"][e["best_measured"]]["gflops"],
+                        f"chosen={e['chosen']}",
+                        f"best={e['best_measured']}",
+                        e["chosen_slowdown_vs_best"]))
+    s = res["summary"]
+    rows.append(row("corpus_sweep", "summary", s["chosen_match_rate"],
+                    s["n_matrices"], s["geomean_chosen_slowdown"]))
+    return rows
+
+
+def run_json(full: bool = False) -> dict:
+    """The ``corpus`` section of the BENCH_PR4.json artifact."""
+    return measure(iters=30 if full else 20)

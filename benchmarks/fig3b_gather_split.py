@@ -8,7 +8,6 @@ and report per-element costs + the model's traffic split.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

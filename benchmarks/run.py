@@ -1,16 +1,19 @@
 """Benchmark driver: one module per paper table/figure.
 
 ``PYTHONPATH=src python -m benchmarks.run [--full] [--only figX]``
-``PYTHONPATH=src python -m benchmarks.run --json BENCH_PR3.json``
+``PYTHONPATH=src python -m benchmarks.run --json [PATH] [--bench-tag PR4]``
 
 Prints ``figure,name,value[,extra...]`` CSV rows.  Default sizes finish in
 minutes on CPU; ``--full`` uses out-of-cache sizes matching the paper's
 methodology ("array lengths ... such that the problem does not fit in any
-cache level").  ``--json PATH`` runs the plan + serving benchmarks only and
-writes per-format GFlop/s, plan-vs-naive speedups, distributed variant
-timings, and the serving throughput-vs-batch-width curve as a JSON
-perf-trajectory artifact (see docs/BENCHMARKS.md for the BENCH_PR*.json
-lineage).
+cache level").  ``--json [PATH]`` runs the plan + serving + corpus
+benchmarks only and writes per-format GFlop/s, plan-vs-naive speedups,
+distributed variant timings, the serving throughput-vs-batch-width curve,
+and the corpus-wide format sweep as a JSON perf-trajectory artifact; when
+PATH is omitted it derives ``BENCH_<tag>.json`` from ``--bench-tag``
+(parent directories are created either way).  See docs/BENCHMARKS.md for
+the BENCH_PR*.json lineage; ``tools/check_bench.py`` gates CI on the
+artifact.
 """
 from __future__ import annotations
 
@@ -18,6 +21,7 @@ import argparse
 import json
 import sys
 import time
+from pathlib import Path
 
 MODULES = [
     "fig2_basic_ops",
@@ -32,26 +36,37 @@ MODULES = [
     "perfmodel_validation",
     "plan_bench",
     "serve_throughput",
+    "corpus_sweep",
 ]
+
+#: current perf-trajectory tag; --json with no PATH writes BENCH_<tag>.json
+DEFAULT_BENCH_TAG = "PR4"
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None)
-    ap.add_argument("--json", default=None, metavar="PATH",
-                    help="write the plan benchmark (per-format GFlop/s, "
-                         "plan-vs-naive speedup) as JSON and exit")
+    ap.add_argument("--bench-tag", default=DEFAULT_BENCH_TAG,
+                    help="perf-trajectory tag; the default --json artifact "
+                         f"name is BENCH_<tag>.json (default: {DEFAULT_BENCH_TAG})")
+    ap.add_argument("--json", nargs="?", const="", default=None, metavar="PATH",
+                    help="write the plan/serving/corpus benchmarks as a JSON "
+                         "artifact and exit; PATH defaults to BENCH_<tag>.json")
     args = ap.parse_args(argv)
 
-    if args.json:
+    if args.json is not None:
+        from benchmarks.corpus_sweep import run_json as corpus_json
         from benchmarks.plan_bench import run_json
         from benchmarks.serve_throughput import run_json as serve_json
+        out_path = Path(args.json or f"BENCH_{args.bench_tag}.json")
         payload = run_json(full=args.full)
         payload["serving"] = serve_json(full=args.full)
-        with open(args.json, "w") as fh:
+        payload["corpus"] = corpus_json(full=args.full)
+        out_path.parent.mkdir(parents=True, exist_ok=True)
+        with open(out_path, "w") as fh:
             json.dump(payload, fh, indent=2, sort_keys=True)
-        print(f"# wrote {args.json}", file=sys.stderr)
+        print(f"# wrote {out_path}", file=sys.stderr)
         for fmt, e in payload["formats"].items():
             extra = (f" speedup={e['speedup_plan_vs_naive']:.2f}x"
                      if "speedup_plan_vs_naive" in e else "")
@@ -67,6 +82,11 @@ def main(argv=None) -> int:
               f"(policy width {srv['policy']['selected_width']}, "
               f"direction_match={srv['model_direction_match']})",
               file=sys.stderr)
+        cs = payload["corpus"]["summary"]
+        print(f"# corpus: {cs['n_matrices']} matrices, "
+              f"chosen-format match rate {cs['chosen_match_rate']:.2f}, "
+              f"geomean chosen-vs-best slowdown "
+              f"{cs['geomean_chosen_slowdown']:.2f}x", file=sys.stderr)
         return 0
 
     failures = 0

@@ -1,11 +1,14 @@
 """The paper's primary contribution: sparse-MVM storage formats, the
 bandwidth/balance performance model, microbenchmarks, and the distributed
-(shard_map) SpMV — plus the Lanczos host application."""
+(shard_map) SpMV — plus the Lanczos host application and the matrix corpus
+the model is validated on."""
 from . import (  # noqa: F401
+    corpus,
     distributed,
     distributed_plan,
     eigensolver,
     formats,
+    io,
     matrices,
     microbench,
     perfmodel,

@@ -35,14 +35,14 @@ from dataclasses import dataclass
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 try:  # jax >= 0.6 exposes shard_map at top level
     from jax import shard_map as _shard_map
 except ImportError:  # pragma: no cover
     from jax.experimental.shard_map import shard_map as _shard_map
 
-from .formats import CSR, ELL
+from .formats import CSR
 
 # ---------------------------------------------------------------------------
 # partitioning (paper §5.2: scheduling / load balance)

@@ -22,7 +22,8 @@ import numpy as np
 Apply = Callable[[jnp.ndarray], jnp.ndarray]
 
 
-def as_apply(op, *, mesh=None, variant: str = "overlap") -> Apply:
+def as_apply(op, *, mesh=None, variant: str = "overlap",
+             format: str | None = None) -> Apply:
     """Normalize the injected operator: a callable (closure, jitted fn,
     ``SpMVPlan``, or ``DistributedSpMVPlan``) passes through; a bare format
     container is compiled into a plan once, so every Lanczos iteration
@@ -32,8 +33,17 @@ def as_apply(op, *, mesh=None, variant: str = "overlap") -> Apply:
     into a comm-overlapped ``DistributedSpMVPlan`` instead — the solver is
     then sharded across the mesh with no other change.  Callables
     (including already-compiled plans) still pass through unchanged.
+
+    ``format`` is forwarded to ``SpMVPlan.compile`` for bare containers:
+    ``format="auto"`` lets ``perfmodel.select_format`` choose the storage
+    scheme from the Hamiltonian's own structure before planning.
     """
     if mesh is not None and not callable(op):
+        if format is not None:
+            raise ValueError(
+                "format= applies to local plans only; distributed compiles "
+                "pick their slab packing per partition (see "
+                "compile_distributed_spmv_plan's slab_format)")
         from .distributed_plan import compile_distributed_spmv_plan
 
         return compile_distributed_spmv_plan(op, mesh, variant=variant)
@@ -41,7 +51,7 @@ def as_apply(op, *, mesh=None, variant: str = "overlap") -> Apply:
         return op
     from .plan import SpMVPlan
 
-    return SpMVPlan.compile(op)
+    return SpMVPlan.compile(op, format=format)
 
 
 @dataclass
@@ -63,6 +73,7 @@ def lanczos(
     seed: int = 0,
     dtype=jnp.float64,
     mesh=None,
+    format: str | None = None,
 ) -> LanczosResult:
     """m-step Lanczos on the symmetric operator ``apply_A`` of dimension n.
 
@@ -74,8 +85,10 @@ def lanczos(
     ``DistributedSpMVPlan``, or a format container (compiled to a plan on
     entry, so every iteration reuses it); with ``mesh`` a CSR container is
     compiled into a distributed plan and the solve shards across devices.
+    ``format`` (e.g. ``"auto"``) picks the storage scheme for bare
+    containers before planning.
     """
-    apply_A = as_apply(apply_A, mesh=mesh)
+    apply_A = as_apply(apply_A, mesh=mesh, format=format)
     if v0 is None:
         v0 = jax.random.normal(jax.random.PRNGKey(seed), (n,), dtype)
     v = v0 / jnp.linalg.norm(v0)

@@ -28,7 +28,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
-from typing import Any, Sequence
+from typing import Any
 
 import numpy as np
 
@@ -479,6 +479,29 @@ class DIA:
     def nnz(self) -> int:
         return int((np.asarray(self.data) != 0).sum())
 
+    @staticmethod
+    def from_csr(m: "CSR", max_diags: int | None = None) -> "DIA":
+        """Pure diagonal storage of every populated (sub)diagonal.
+
+        Only sensible when the matrix concentrates on few offsets (banded /
+        stencil patterns); ``max_diags`` guards against accidentally
+        materializing thousands of near-empty diagonals.
+        """
+        coo = m.to_coo()
+        rows = _as_np(coo.rows).astype(np.int64)
+        cols = _as_np(coo.cols).astype(np.int64)
+        vals = _as_np(coo.vals)
+        offs = cols - rows
+        uniq = np.unique(offs)
+        if max_diags is not None and len(uniq) > max_diags:
+            raise ValueError(
+                f"matrix has {len(uniq)} populated diagonals > max_diags={max_diags}; "
+                "use split_dia (hybrid) instead")
+        data = np.zeros((len(uniq), m.shape[0]), dtype=vals.dtype)
+        k = np.searchsorted(uniq, offs)
+        np.add.at(data, (k, rows), vals)
+        return DIA(uniq.astype(np.int32), data, m.shape)
+
     def to_dense(self) -> np.ndarray:
         n, m = self.shape
         d = np.zeros(self.shape, dtype=_as_np(self.data).dtype)
@@ -558,6 +581,8 @@ def convert(m: CSR, fmt: str, **kw):
         return SELL.from_csr(m, **kw)
     if fmt == "bsr":
         return BSR.from_dense(m.to_dense(), **kw)
+    if fmt == "dia":
+        return DIA.from_csr(m, **kw)
     if fmt == "hybrid":
         return split_dia(m, **kw)
     raise ValueError(f"unknown format {fmt!r}")

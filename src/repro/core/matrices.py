@@ -279,13 +279,71 @@ def laplacian_2d(nx: int, ny: int, dtype=np.float64) -> CSR:
                             np.asarray(vals, dtype), (n, n)))
 
 
-def power_law_rows(n: int, n_cols: int, mean_nnz: float = 8.0, alpha: float = 1.5,
-                   seed: int = 0, dtype=np.float32) -> CSR:
-    """Strongly imbalanced row lengths (Zipf-ish) — the load-balancing stressor
-    for partitioners (paper §5.2 scheduling discussion)."""
+def laplacian_3d(nx: int, ny: int, nz: int, dtype=np.float64) -> CSR:
+    """Standard 7-point stencil on an nx×ny×nz grid.
+
+    The 3-D analogue of ``laplacian_2d``: same well-known oracle, but the
+    ±nx·ny couplings put the outer diagonals much further out — the
+    bandwidth grows with the *plane* size, so the input-vector working set
+    no longer fits a cache line window (the regime the paper's stride
+    penalties model).
+    """
+    n = nx * ny * nz
+    idx = np.arange(n, dtype=np.int64)
+    x = idx % nx
+    y = (idx // nx) % ny
+    z = idx // (nx * ny)
+    rows_list = [idx]
+    cols_list = [idx]
+    vals_list = [np.full(n, 6.0)]
+    for axis, coord, extent, stride in (
+            (0, x, nx, 1), (1, y, ny, nx), (2, z, nz, nx * ny)):
+        for sgn in (+1, -1):
+            ok = (coord + sgn >= 0) & (coord + sgn < extent)
+            rows_list.append(idx[ok])
+            cols_list.append(idx[ok] + sgn * stride)
+            vals_list.append(np.full(int(ok.sum()), -1.0))
+    rows = np.concatenate(rows_list)
+    cols = np.concatenate(cols_list)
+    vals = np.concatenate(vals_list).astype(dtype)
+    return CSR.from_coo(COO(rows.astype(np.int32), cols.astype(np.int32), vals, (n, n)))
+
+
+def dense_stripe(n: int, stripe_width: int, stripe_start: int | None = None,
+                 seed: int = 0, dtype=np.float32) -> CSR:
+    """Near-dense vertical stripe + full main diagonal.
+
+    Every row touches the same ``stripe_width`` contiguous columns, so row
+    lengths are constant (zero padding in any jagged format) and the
+    input-vector gather hits one small, fully reused window — the opposite
+    corner of the corpus from the power-law pattern.  Offsets ``col - row``
+    differ on every row, so diagonal storage is the *worst* choice here.
+    """
     rng = np.random.default_rng(seed)
+    c0 = (n - stripe_width) // 2 if stripe_start is None else stripe_start
+    assert 0 <= c0 and c0 + stripe_width <= n
+    i = np.arange(n, dtype=np.int64)
+    # diagonal entries only where the stripe doesn't already cover column i
+    diag = i[(i < c0) | (i >= c0 + stripe_width)]
+    rows = np.concatenate([diag, np.repeat(i, stripe_width)])
+    cols = np.concatenate([diag, np.tile(np.arange(c0, c0 + stripe_width, dtype=np.int64), n)])
+    vals = rng.standard_normal(len(rows)).astype(dtype)
+    vals[: len(diag)] += 4.0  # keep the diagonal dominant-ish
+    return CSR.from_coo(COO(rows.astype(np.int32), cols.astype(np.int32), vals, (n, n)))
+
+
+def power_law_rows(n: int, n_cols: int, mean_nnz: float = 8.0, alpha: float = 1.5,
+                   seed: int = 0, dtype=np.float32, max_nnz: int | None = None) -> CSR:
+    """Strongly imbalanced row lengths (Zipf-ish) — the load-balancing stressor
+    for partitioners (paper §5.2 scheduling discussion).
+
+    ``max_nnz`` caps the heaviest rows (Zipf at alpha<=2 has unbounded mean,
+    so without a cap single rows can swallow the whole column range and any
+    padded format degenerates to dense)."""
+    rng = np.random.default_rng(seed)
+    cap = n_cols if max_nnz is None else min(n_cols, max_nnz)
     raw = rng.zipf(alpha, size=n).astype(np.float64)
-    lens = np.minimum(n_cols, np.maximum(1, (raw * mean_nnz / max(1e-9, raw.mean())).astype(np.int64)))
+    lens = np.minimum(cap, np.maximum(1, (raw * mean_nnz / max(1e-9, raw.mean())).astype(np.int64)))
     rows = np.repeat(np.arange(n, dtype=np.int64), lens)
     cols = rng.integers(0, n_cols, size=int(lens.sum()))
     # dedup within row not required for benchmarks; sum dups via CSR.from_coo path

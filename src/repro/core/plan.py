@@ -112,6 +112,7 @@ class SpMVPlan:
     def compile(
         matrix,
         *,
+        format: str | None = None,
         chip: ChipSpec = TPU_V5E,
         am: PM.AccessModel = PM.TPU_FP32,
         backend: str = "auto",
@@ -122,6 +123,12 @@ class SpMVPlan:
 
         Args:
             matrix: any ``core.formats`` container.
+            format: target storage format.  ``None`` plans the container
+                as-is; a concrete name ("sell", "dia", ...) converts a
+                CSR/COO container first; ``"auto"`` lets
+                ``perfmodel.select_format`` pick from the matrix's own
+                structure.  Conversions (and the auto choice) are cached
+                on the source container, so repeated compiles are free.
             chip: roofline parameters (bandwidth, peak, VMEM budget).
             am: access-model byte widths for the balance computation.
             backend: "auto" | "xla" | "pallas" ("ref" aliases "xla").
@@ -132,6 +139,8 @@ class SpMVPlan:
             The compiled (memoized) ``SpMVPlan``; ``plan.report`` records
             what was decided and what the roofline predicts for it.
         """
+        if format is not None:
+            matrix = resolve_format(matrix, format, chip=chip, am=am)
         fmt = _FMT_NAMES.get(type(matrix))
         if fmt is None:
             raise TypeError(f"no plan for {type(matrix).__name__}")
@@ -147,6 +156,61 @@ class SpMVPlan:
             plan = _compile(matrix, fmt, chip, am, backend, chunk_block, width_block)
             cache[key] = plan
         return plan
+
+
+# ---------------------------------------------------------------------------
+# format resolution (the "auto" end of the corpus-validated selector)
+# ---------------------------------------------------------------------------
+
+
+def resolve_format(matrix, format: str, *, chip: ChipSpec = TPU_V5E,
+                   am: PM.AccessModel = PM.TPU_FP32, **select_kw):
+    """Return ``matrix`` converted to ``format`` (``"auto"`` = model's pick).
+
+    A CSR/COO container is converted (and the converted container cached on
+    it, so every consumer — eigensolver, server, benchmarks — shares one
+    conversion per format); a container already in a concrete format passes
+    through when it matches, and is rejected otherwise (silently re-packing
+    a hand-chosen format would hide a bug).  For ``"auto"`` on an already
+    concrete container the upstream choice stands.
+    """
+    fmt = _FMT_NAMES.get(type(matrix))
+    if fmt is None:
+        raise TypeError(f"no plan for {type(matrix).__name__}")
+    if format == "auto":
+        if fmt not in ("csr", "coo"):
+            return matrix
+        choice = PM.select_format(_as_csr_container(matrix), am=am, chip=chip,
+                                  **select_kw)
+        return _convert_cached(matrix, choice.format, choice.convert_kwargs)
+    if format == fmt:
+        return matrix
+    if fmt not in ("csr", "coo"):
+        raise ValueError(f"cannot convert a {fmt} container to {format!r}; "
+                         "pass the CSR/COO source instead")
+    return _convert_cached(matrix, format, {})
+
+
+def _as_csr_container(matrix):
+    from .formats import CSR
+    if isinstance(matrix, CSR):
+        return matrix
+    return _convert_cached(matrix, "csr", {})
+
+
+def _convert_cached(matrix, fmt: str, kw: dict):
+    from .formats import COO, CSR, convert
+    cache = getattr(matrix, "_fmt_cache", None)
+    if cache is None:
+        cache = {}
+        object.__setattr__(matrix, "_fmt_cache", cache)
+    key = (fmt, tuple(sorted(kw.items())))
+    obj = cache.get(key)
+    if obj is None:
+        src = CSR.from_coo(matrix) if isinstance(matrix, COO) else matrix
+        obj = src if fmt == "csr" else convert(src, fmt, **kw)
+        cache[key] = obj
+    return obj
 
 
 # ---------------------------------------------------------------------------

@@ -10,7 +10,6 @@ through here, so a single flag flips the whole framework between paths.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

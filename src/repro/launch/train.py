@@ -8,7 +8,6 @@ from __future__ import annotations
 import argparse
 
 import jax
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..configs import reduced

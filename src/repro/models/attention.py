@@ -24,7 +24,7 @@ from dataclasses import dataclass
 import jax
 import jax.numpy as jnp
 
-from .layers import NEG_INF, apply_rope, dense_init, dense_shape, qk_norm_apply
+from .layers import NEG_INF, apply_rope, dense_init, qk_norm_apply
 
 # ---------------------------------------------------------------------------
 # config

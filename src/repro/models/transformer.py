@@ -16,7 +16,7 @@ The attention flavour is GQA by default, MLA when ``cfg.mla`` is set.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any
 
 import jax

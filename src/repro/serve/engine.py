@@ -191,11 +191,15 @@ class BatchingSpMVServer:
             matrix: any ``core.formats`` container.
             max_batch: flush-width override for this operator.
             deadline_s / max_pending: per-operator policy overrides.
-            **plan_kw: forwarded to ``SpMVPlan.compile``.
+            **plan_kw: forwarded to ``SpMVPlan.compile`` — in particular
+                ``format="auto"`` registers a CSR under the perfmodel's
+                chosen storage scheme (``perfmodel.select_format``).
         """
         plan = SpMVPlan.compile(matrix, backend=self.backend, chip=self.chip,
                                 **plan_kw)
-        policy = self._policy(matrix, max_batch, deadline_s, max_pending)
+        # batch-width policy from the container the plan actually executes
+        # (after any format="auto" conversion), not the registered source
+        policy = self._policy(plan.matrix, max_batch, deadline_s, max_pending)
         self._queues[name] = OperatorQueue(plan, policy, self._clock)
         return plan.report
 

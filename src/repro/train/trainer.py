@@ -20,7 +20,6 @@ from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..models.registry import Model
 from . import checkpoint as ckpt_lib

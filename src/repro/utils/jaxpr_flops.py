@@ -22,11 +22,9 @@ fori_loops inside steps lower to scans when lengths are static).
 from __future__ import annotations
 
 import math
-from functools import lru_cache
 
 import jax
 import numpy as np
-from jax import core as jcore
 
 _ELEMWISE_1 = {
     "add", "sub", "mul", "div", "max", "min", "pow", "rem", "and", "or", "xor",

@@ -1,0 +1,130 @@
+"""tools/check_bench.py comparator: the CI perf-regression gate must catch
+an injected >=25% regression and tolerate noise below the threshold."""
+import copy
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "tools"))
+import check_bench  # noqa: E402
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+
+@pytest.fixture()
+def baseline():
+    """A miniature BENCH-shaped artifact covering every gated section."""
+    return {
+        "backend": "cpu",
+        "formats": {
+            "csr": {"gflops_planned": 0.10, "t_planned_s": 1e-3,
+                    "speedup_plan_vs_naive": 1.5},
+            "sell": {"gflops_planned": 0.30, "t_planned_s": 4e-4},
+        },
+        "distributed": {"devices": 8, "variants": {
+            "overlap": {"gflops": 0.20, "t_s": 2e-3},
+            "ring": {"gflops": 0.18, "t_s": 2e-3},
+        }},
+        "serving": {"speedup_at_width8": 3.0,
+                    "sequential": {"qps": 200.0, "t_query_s": 5e-3}},
+        "corpus": {"matrices": {"banded": {"formats": {
+            "dia": {"gflops": 0.5, "t_measured_s": 1e-4}}}}},
+    }
+
+
+def test_extract_metrics_keeps_only_higher_is_better(baseline):
+    m = check_bench.extract_metrics(baseline)
+    assert m["formats/csr/gflops_planned"] == 0.10
+    assert m["serving/speedup_at_width8"] == 3.0
+    assert m["corpus/matrices/banded/formats/dia/gflops"] == 0.5
+    # timings and counters must never enter the gate
+    assert not any(k.endswith(("t_planned_s", "t_s", "t_query_s",
+                               "t_measured_s", "devices")) for k in m)
+
+
+def test_identical_artifacts_pass(baseline):
+    cmp = check_bench.compare(baseline, baseline, tolerance=0.25)
+    assert cmp.ok and cmp.geomean_ratio == pytest.approx(1.0)
+    assert cmp.n_shared == len(check_bench.extract_metrics(baseline))
+
+
+def _scaled(payload, factor):
+    out = copy.deepcopy(payload)
+
+    def walk(d):
+        for k, v in d.items():
+            if isinstance(v, dict):
+                walk(v)
+            elif k in check_bench.HIGHER_BETTER_KEYS:
+                d[k] = v * factor
+    walk(out)
+    return out
+
+
+def test_injected_25pct_regression_fails(baseline):
+    """The acceptance case: a synthetic fleet-wide >=25% drop must fail."""
+    cmp = check_bench.compare(_scaled(baseline, 0.70), baseline, tolerance=0.25)
+    assert not cmp.ok
+    assert cmp.geomean_ratio == pytest.approx(0.70, rel=1e-6)
+    assert len(cmp.regressions) == cmp.n_shared
+
+
+def test_noise_below_tolerance_passes(baseline):
+    cmp = check_bench.compare(_scaled(baseline, 0.85), baseline, tolerance=0.25)
+    assert cmp.ok
+
+
+def test_single_metric_drop_warns_but_passes(baseline):
+    new = copy.deepcopy(baseline)
+    new["formats"]["csr"]["gflops_planned"] = 0.02  # one 5x regression
+    cmp = check_bench.compare(new, baseline, tolerance=0.25)
+    assert "formats/csr/gflops_planned" in cmp.regressions
+    assert cmp.ok  # geomean over the fleet absorbs one noisy metric
+
+
+def test_disjoint_schemas_pass_vacuously(baseline):
+    cmp = check_bench.compare({"totally": {"new": 1.0}}, baseline)
+    assert cmp.ok and cmp.n_shared == 0
+
+
+def test_improvements_pass(baseline):
+    cmp = check_bench.compare(_scaled(baseline, 1.8), baseline, tolerance=0.25)
+    assert cmp.ok and cmp.geomean_ratio > 1.7
+
+
+def test_cli_exit_codes_and_summary(tmp_path, baseline):
+    """End-to-end through the CLI, exactly as the CI step invokes it."""
+    base_p = tmp_path / "base.json"
+    base_p.write_text(json.dumps(baseline))
+    bad_p = tmp_path / "bad.json"
+    bad_p.write_text(json.dumps(_scaled(baseline, 0.6)))
+    summary = tmp_path / "summary.md"
+
+    ok = subprocess.run(
+        [sys.executable, str(REPO_ROOT / "tools" / "check_bench.py"),
+         "--new", str(base_p), "--baseline", str(base_p),
+         "--summary-file", str(summary)],
+        capture_output=True, text=True)
+    assert ok.returncode == 0, ok.stdout + ok.stderr
+    assert "perf gate OK" in summary.read_text()
+
+    bad = subprocess.run(
+        [sys.executable, str(REPO_ROOT / "tools" / "check_bench.py"),
+         "--new", str(bad_p), "--baseline", str(base_p), "--tolerance", "0.25"],
+        capture_output=True, text=True)
+    assert bad.returncode == 1
+    assert "REGRESSION" in bad.stdout
+
+
+def test_committed_artifacts_are_gate_compatible():
+    """The real committed trajectory must share metrics (the CI gate's
+    comparison is not vacuous) and the PR3 artifact must pass against
+    itself."""
+    with open(REPO_ROOT / "BENCH_PR3.json") as fh:
+        pr3 = json.load(fh)
+    assert check_bench.compare(pr3, pr3).ok
+    m = check_bench.extract_metrics(pr3)
+    assert len(m) >= 10

@@ -14,7 +14,6 @@ import pytest
 
 from repro.core import distributed as D
 from repro.core import distributed_plan as DP
-from repro.core import formats as F
 from repro.core import spmv as S
 from repro.core.matrices import holstein_hubbard_surrogate, power_law_rows
 

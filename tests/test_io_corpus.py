@@ -1,0 +1,225 @@
+"""MatrixMarket I/O round-trips, corpus registry completeness, and the
+format=auto end-to-end path (select_format -> plan -> eigensolver/server)."""
+import gzip
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import corpus
+from repro.core import formats as F
+from repro.core import io as mio
+from repro.core import perfmodel as PM
+from repro.core.eigensolver import as_apply, lanczos
+from repro.core.matrices import (
+    block_sparse_dense,
+    laplacian_2d,
+    power_law_rows,
+    random_banded,
+    random_sparse,
+)
+from repro.core.plan import SpMVPlan, resolve_format
+from repro.serve import BatchingSpMVServer
+
+
+def _dense(m):
+    return np.asarray(m.to_dense(), np.float64)
+
+
+# --- MatrixMarket round-trips ----------------------------------------------
+
+@pytest.mark.parametrize("suffix", [".mtx", ".mtx.gz"])
+def test_mtx_roundtrip_general_real(tmp_path, suffix):
+    m = random_sparse(40, 31, 5, seed=0)
+    p = mio.write_mtx(tmp_path / f"g{suffix}", m)
+    back = mio.read_mtx(p)
+    assert back.shape == m.shape
+    np.testing.assert_allclose(_dense(back), _dense(m), rtol=1e-6)
+
+
+def test_mtx_roundtrip_symmetric(tmp_path):
+    m = laplacian_2d(6, 6)
+    p = mio.write_mtx(tmp_path / "sym.mtx", m, symmetry="symmetric")
+    # only the lower triangle is stored on disk...
+    header = (tmp_path / "sym.mtx").read_text().splitlines()[0]
+    assert "symmetric" in header
+    # ...but the read expands it back to the full pattern
+    np.testing.assert_allclose(_dense(mio.read_mtx(p)), _dense(m))
+
+
+def test_mtx_roundtrip_pattern_and_integer(tmp_path):
+    m = random_sparse(20, 20, 3, seed=1)
+    pat = mio.read_mtx(mio.write_mtx(tmp_path / "p.mtx", m, field="pattern"))
+    assert np.all(np.asarray(pat.vals) == 1.0)
+    assert pat.nnz == m.nnz
+    ints = F.CSR.from_coo(F.COO(
+        np.asarray(m.to_coo().rows), np.asarray(m.to_coo().cols),
+        np.sign(np.asarray(m.to_coo().vals)) + 2, m.shape))
+    back = mio.read_mtx(mio.write_mtx(tmp_path / "i.mtx", ints, field="integer"))
+    np.testing.assert_allclose(_dense(back), _dense(ints))
+
+
+def test_mtx_skew_symmetric_expansion(tmp_path):
+    text = "\n".join([
+        "%%MatrixMarket matrix coordinate real skew-symmetric",
+        "% lower triangle only",
+        "3 3 2",
+        "2 1 5.0",
+        "3 2 -1.5",
+        "",
+    ])
+    (tmp_path / "skew.mtx").write_text(text)
+    d = _dense(mio.read_mtx(tmp_path / "skew.mtx"))
+    assert d[1, 0] == 5.0 and d[0, 1] == -5.0
+    assert d[2, 1] == -1.5 and d[1, 2] == 1.5
+
+
+def test_mtx_rejects_malformed(tmp_path):
+    bad = tmp_path / "bad.mtx"
+    bad.write_text("%%MatrixMarket matrix array real general\n2 2\n1.0\n")
+    with pytest.raises(ValueError, match="coordinate"):
+        mio.read_mtx(bad)
+    bad.write_text("not a banner\n1 1 0\n")
+    with pytest.raises(ValueError, match="banner"):
+        mio.read_mtx(bad)
+    bad.write_text("%%MatrixMarket matrix coordinate real general\n2 2 1\n3 1 1.0\n")
+    with pytest.raises(ValueError, match="out of range"):
+        mio.read_mtx(bad)
+
+
+def test_gzip_file_is_actually_compressed(tmp_path):
+    m = random_sparse(30, 30, 4, seed=2)
+    p = mio.write_mtx(tmp_path / "c.mtx.gz", m)
+    with gzip.open(p, "rt") as fh:
+        assert fh.readline().startswith("%%MatrixMarket")
+
+
+def test_load_matrix_prefers_disk_and_records_source(tmp_path):
+    m = random_sparse(16, 16, 3, seed=3)
+    mio.write_mtx(tmp_path / "present.mtx", m)
+    got = mio.load_matrix("present", search_dirs=[tmp_path])
+    assert got._source.endswith("present.mtx")
+    np.testing.assert_allclose(_dense(got), _dense(m), rtol=1e-6)
+
+
+def test_load_matrix_synthetic_fallback_is_deterministic(tmp_path):
+    a = mio.load_matrix("no_such_matrix_xyz", search_dirs=[tmp_path], fallback_n=64)
+    b = mio.load_matrix("no_such_matrix_xyz", search_dirs=[tmp_path], fallback_n=64)
+    assert a._source == "synthetic:no_such_matrix_xyz"
+    np.testing.assert_array_equal(_dense(a), _dense(b))
+    c = mio.load_matrix("another_name", search_dirs=[tmp_path], fallback_n=64)
+    assert not np.array_equal(_dense(a), _dense(c))  # name seeds the pattern
+
+
+# --- corpus registry completeness ------------------------------------------
+
+def test_registry_has_the_required_spectrum():
+    got = corpus.names()
+    assert len(got) >= 8
+    families = {corpus.get(n).family for n in got}
+    assert {"physics", "stencil", "banded", "scalefree", "blocked", "mtx"} <= families
+
+
+@pytest.mark.parametrize("name", corpus.names())
+def test_every_spec_builds_and_stats_match(name):
+    spec = corpus.get(name)
+    m = corpus.build(name)
+    assert isinstance(m, F.CSR) and m.nnz > 0
+    st = corpus.stats(name)
+    assert st["nnz"] == m.nnz
+    assert st["n_rows"] == m.shape[0]
+    lens = m.row_lengths()
+    assert st["nnz_per_row_max"] == int(lens.max())
+    hist = st["nnz_per_row_hist"]
+    assert sum(hist["counts"]) == m.shape[0]          # every row binned
+    assert 0.0 < st["sell_occupancy"] <= 1.0 + 1e-9   # chunk occupancy sane
+    assert spec.formats and all(f in F.FORMATS for f in spec.formats)
+    assert corpus.build(name) is m                    # builds are cached
+
+
+def test_committed_mtx_entry_loads_from_disk_not_fallback():
+    m = corpus.build("mtx_demo_lap")
+    assert getattr(m, "_source", "").endswith("demo_lap2d_24.mtx.gz")
+    # the committed file is the 24x24 5-point Laplacian
+    np.testing.assert_allclose(_dense(m), _dense(laplacian_2d(24, 24)))
+
+
+def test_fallback_mtx_entry_is_synthetic():
+    m = corpus.build("mtx_fallback_band")
+    assert getattr(m, "_source", "").startswith("synthetic:")
+
+
+# --- select_format sanity ---------------------------------------------------
+
+def test_select_format_banded_prefers_diagonal_storage():
+    m = random_banded(512, 4, 1.0, seed=0)
+    choice = PM.select_format(m)
+    assert choice.format in ("dia", "sell", "hybrid")
+    assert choice.predicted_time_s  # the curve behind the pick is reported
+
+
+def test_select_format_power_law_prefers_sell():
+    m = power_law_rows(1024, 1024, mean_nnz=8.0, seed=1, max_nnz=128)
+    assert PM.select_format(m).format == "sell"
+
+
+def test_select_format_dense_blocks_never_crashes():
+    d = block_sparse_dense(256, 256, (8, 128), 0.5, seed=2)
+    m = F.CSR.from_dense(d)
+    choice = PM.select_format(m)   # bsr is a candidate (shape tiles exactly)
+    plan = SpMVPlan.compile(m, format="auto")
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(256).astype(np.float32))
+    np.testing.assert_allclose(np.asarray(plan(x)), d @ np.asarray(x),
+                               rtol=2e-4, atol=2e-4)
+    assert choice.format in choice.predicted_time_s
+
+
+def test_select_format_allowed_restricts_candidates():
+    m = random_banded(256, 4, 1.0, seed=3)
+    choice = PM.select_format(m, allowed=("csr", "jds"))
+    assert choice.format in ("csr", "jds")
+    with pytest.raises(ValueError, match="no candidate"):
+        PM.select_format(m, allowed=("nope",))
+
+
+def test_resolve_format_caches_conversions():
+    m = random_sparse(128, 128, 6, seed=4)
+    a = resolve_format(m, "auto")
+    b = resolve_format(m, "auto")
+    assert a is b                       # conversion cached on the container
+    s1 = resolve_format(m, "sell")
+    assert resolve_format(m, "sell") is s1
+    sell = F.SELL.from_csr(m, C=8)
+    assert resolve_format(sell, "auto") is sell   # concrete formats pass through
+    with pytest.raises(ValueError, match="cannot convert"):
+        resolve_format(sell, "ell")
+
+
+# --- format="auto" end-to-end: eigensolver + server -------------------------
+
+def test_lanczos_with_auto_format_matches_dense(hh_small):
+    res = lanczos(hh_small, hh_small.shape[0], m=48, format="auto", seed=1)
+    evals = np.linalg.eigvalsh(_dense(hh_small))
+    assert abs(res.eigenvalues[0] - evals[0]) < 1e-4
+
+
+def test_as_apply_rejects_format_with_mesh(hh_small):
+    # format= picks a *local* storage scheme; silently dropping it on the
+    # distributed branch would hide the user's request
+    with pytest.raises(ValueError, match="local plans"):
+        as_apply(hh_small, mesh=object(), format="auto")
+
+
+def test_server_register_auto_format(hh_small):
+    srv = BatchingSpMVServer(max_batch=4, deadline_s=60.0)
+    report = srv.register("hh", hh_small, format="auto")
+    assert report.format != "coo"
+    choice = PM.select_format(hh_small, chip=srv.chip)
+    assert report.format == choice.format   # server serves the model's pick
+    xs = [jnp.asarray(np.random.default_rng(i).standard_normal(
+        hh_small.shape[1]).astype(np.float32)) for i in range(4)]
+    futs = srv.submit_many("hh", xs)
+    assert all(f.done() for f in futs)
+    ref = _dense(hh_small) @ np.asarray(xs[0], np.float64)
+    np.testing.assert_allclose(np.asarray(futs[0].result(), np.float64),
+                               ref, rtol=2e-3, atol=2e-3)

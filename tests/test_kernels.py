@@ -1,5 +1,4 @@
 """Pallas kernels (interpret mode) vs ref.py oracles: shape/dtype sweeps."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -10,7 +9,7 @@ from repro.kernels import ops, ref as R
 from repro.kernels.bsr_spmm import bell_spmm_arrays, bsr_to_bell
 from repro.kernels.dia_spmv import dia_spmv
 from repro.kernels.gather_bench import gather_scp, stream_triad, traffic_model
-from repro.kernels.moe_gemm import grouped_gemm, grouped_gemm_arrays, plan_groups
+from repro.kernels.moe_gemm import grouped_gemm, plan_groups
 from repro.kernels.sell_spmv import sell_spmv_arrays, vmem_bytes
 
 

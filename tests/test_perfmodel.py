@@ -1,5 +1,4 @@
 """The balance model must reproduce the paper's numbers exactly."""
-import numpy as np
 import pytest
 
 from repro.core import formats as F

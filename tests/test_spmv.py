@@ -2,7 +2,6 @@
 
 Hypothesis property sweeps live in test_property.py (optional test extra).
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

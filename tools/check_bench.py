@@ -1,0 +1,159 @@
+"""Perf-regression gate for CI: fresh BENCH artifact vs committed baseline.
+
+The BENCH_PR*.json trajectory (see docs/BENCHMARKS.md) was write-only until
+PR 4; this tool makes it an enforced contract.  It extracts every
+higher-is-better metric that the fresh artifact and the committed baseline
+*share* (plan-bench per-format GFlop/s, distributed variant GFlop/s,
+serving throughput + speedups, corpus sweep GFlop/s — artifacts from
+different PRs overlap only where their schemas do), forms the per-metric
+ratio new/old, and fails when the **geometric mean** ratio drops below
+``1 - tolerance``.
+
+Geomean-with-tolerance is deliberate: single metrics on shared CPU runners
+are noisy (the committed baseline was produced on different hardware), but
+a fleet-wide geomean sliding more than 25% is a real regression, not
+scheduler jitter.  Individual metric drops are reported but only warn.
+
+Known limitation: most gated metrics are *absolute* throughputs, so the
+comparison is only meaningful between machines of the same class — the
+tolerance absorbs runner-to-runner spread, not a hardware generation gap.
+Regenerate and commit the baseline from the same runner class as CI (the
+lineage in docs/BENCHMARKS.md does exactly this), or widen --tolerance
+when the runner fleet changes.
+
+Usage::
+
+    PYTHONPATH=src python tools/check_bench.py \
+        --new BENCH_PR4.json --baseline BENCH_PR3.json --tolerance 0.25 \
+        --summary-file "$GITHUB_STEP_SUMMARY"
+
+Exit code 1 = regression (build fails), 0 = within tolerance.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+from dataclasses import dataclass, field
+
+#: leaf-key names that are throughput-like (higher is better).  Timings,
+#: balances and ratios-to-model are deliberately absent: lower-is-better
+#: and diagnostic fields must not enter the gate.
+HIGHER_BETTER_KEYS = frozenset({
+    "gflops",
+    "gflops_planned",
+    "gflops_naive",
+    "qps",
+    "speedup_plan_vs_naive",
+    "speedup_vs_sequential",
+    "speedup_at_width8",
+    "kernel_speedup_at_width8",
+})
+
+
+def extract_metrics(payload: dict, prefix: str = "") -> dict[str, float]:
+    """Flatten an artifact to {path: value} over the gated metric keys.
+
+    Walks nested dicts; a leaf enters the result when its key is in
+    ``HIGHER_BETTER_KEYS`` and its value is a positive finite number
+    (zero/negative/NaN values cannot form a meaningful ratio).
+    """
+    out: dict[str, float] = {}
+    for key, value in payload.items():
+        path = f"{prefix}/{key}" if prefix else str(key)
+        if isinstance(value, dict):
+            out.update(extract_metrics(value, path))
+        elif key in HIGHER_BETTER_KEYS and isinstance(value, (int, float)):
+            v = float(value)
+            if math.isfinite(v) and v > 0:
+                out[path] = v
+    return out
+
+
+@dataclass
+class Comparison:
+    """Outcome of ``compare``: the verdict plus everything behind it."""
+
+    ok: bool
+    geomean_ratio: float          # new/baseline over the shared metrics
+    tolerance: float
+    n_shared: int
+    ratios: dict = field(default_factory=dict)      # {metric: new/old}
+    regressions: dict = field(default_factory=dict)  # metrics below 1 - tol
+
+    def summary_line(self) -> str:
+        verdict = "OK" if self.ok else "REGRESSION"
+        return (f"perf gate {verdict}: geomean {self.geomean_ratio:.3f}x "
+                f"vs baseline over {self.n_shared} shared metrics "
+                f"(tolerance {self.tolerance:.0%}, "
+                f"{len(self.regressions)} metric(s) individually below)")
+
+
+def compare(new: dict, baseline: dict, tolerance: float = 0.25) -> Comparison:
+    """Gate a fresh artifact payload against a baseline payload.
+
+    Args:
+        new: parsed fresh artifact (e.g. BENCH_PR4.json just produced).
+        baseline: parsed committed baseline (e.g. BENCH_PR3.json).
+        tolerance: allowed fractional drop of the geomean ratio (0.25 =
+            fail below 0.75x) — headroom for CPU-runner noise.
+
+    Returns:
+        A ``Comparison``; ``ok`` is False when the geomean of new/old over
+        the shared higher-is-better metrics falls below ``1 - tolerance``.
+        With no shared metrics the gate passes vacuously (a schema change
+        should not block the build) but reports ``n_shared == 0``.
+    """
+    m_new = extract_metrics(new)
+    m_old = extract_metrics(baseline)
+    shared = sorted(set(m_new) & set(m_old))
+    ratios = {k: m_new[k] / m_old[k] for k in shared}
+    if ratios:
+        geomean = math.exp(sum(math.log(r) for r in ratios.values()) / len(ratios))
+    else:
+        geomean = 1.0
+    floor = 1.0 - tolerance
+    regressions = {k: r for k, r in ratios.items() if r < floor}
+    return Comparison(
+        ok=geomean >= floor,
+        geomean_ratio=geomean,
+        tolerance=tolerance,
+        n_shared=len(shared),
+        ratios=ratios,
+        regressions=regressions,
+    )
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--new", required=True, help="fresh artifact JSON path")
+    ap.add_argument("--baseline", required=True, help="committed baseline JSON path")
+    ap.add_argument("--tolerance", type=float, default=0.25,
+                    help="allowed geomean drop (default 0.25 for CPU noise)")
+    ap.add_argument("--summary-file", default=None,
+                    help="append the one-line verdict here (e.g. "
+                         "$GITHUB_STEP_SUMMARY)")
+    args = ap.parse_args(argv)
+
+    with open(args.new) as fh:
+        new = json.load(fh)
+    with open(args.baseline) as fh:
+        baseline = json.load(fh)
+    cmp = compare(new, baseline, tolerance=args.tolerance)
+
+    print(cmp.summary_line())
+    if cmp.n_shared == 0:
+        print("note: artifacts share no metrics; nothing to gate on")
+    worst = sorted(cmp.ratios.items(), key=lambda kv: kv[1])[:8]
+    for k, r in worst:
+        marker = "REGRESSED" if k in cmp.regressions else "ok"
+        print(f"  {r:6.2f}x  {marker:9s} {k}")
+    if args.summary_file:
+        with open(args.summary_file, "a") as fh:
+            fh.write(cmp.summary_line() + "\n")
+    return 0 if cmp.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
