@@ -1,0 +1,133 @@
+"""Per-backend kernel sweep — the registry's measured receipt.
+
+The unified kernel registry (``repro.kernels.registry``) claims that
+``backend="auto"`` picks a sensible entry per (format, op) from capability
+probes + the roofline ranking.  This module measures that claim: for a
+small corpus subset, the auto-chosen format's SpMV is timed under **every
+registered backend whose probe passes** (XLA formulation, Pallas —
+interpreter off-TPU — and the loop-reference oracle), alongside the
+backend auto actually selected.
+
+Feeds the ``backends`` section of the BENCH_PR5.json artifact; keys are
+``backend_sweep/<matrix>/<format>/<backend>`` GFlop/s, which
+``tools/check_bench.py`` folds into the geomean gate once two artifacts
+share them.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import corpus
+from repro.core.plan import _FMT_NAMES, resolve_format
+from repro.kernels import registry as R
+
+from .common import host_chip, row
+
+#: small, structurally diverse subset (interpret + loop entries are slow;
+#: a full-corpus sweep belongs to corpus_sweep.py, which times formats)
+MATRICES = ("holstein_exact", "laplace2d", "powerlaw", "blocksparse")
+
+#: loop_reference on big matrices traces O(chunks) segments; cap the clock
+LOOP_NNZ_CAP = 50_000
+
+
+def _time_call(fn, x, iters: int, repeats: int = 3) -> float:
+    jax.block_until_ready(fn(x))
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        y = None
+        for _ in range(iters):
+            y = fn(x)
+        jax.block_until_ready(y)
+        best = min(best, (time.perf_counter() - t0) / iters)
+    return best
+
+
+def sweep_matrix(name: str, *, iters: int = 10, chip=None) -> dict:
+    chip = chip or host_chip()
+    spec = corpus.get(name)
+    m = corpus.build(name)
+    obj = resolve_format(m, "auto", chip=chip)
+    fmt = _FMT_NAMES[type(obj)]
+    flops = 2.0 * m.nnz
+    dtype = np.asarray(getattr(obj, "val", m.val)).dtype
+    x = jnp.asarray(np.random.default_rng(0)
+                    .standard_normal(m.shape[1]).astype(dtype))
+
+    ctx = R.KernelContext(chip=chip)
+    auto_be, costs = R.select_backend(obj, fmt, "spmv", ctx)
+    backends = {}
+    for entry in R.entries(fmt, "spmv"):
+        cap = entry.probe(obj, ctx)
+        if not cap.ok:
+            backends[entry.backend] = {"skipped": cap.reason}
+            continue
+        if entry.backend == "loop_reference" and m.nnz > LOOP_NNZ_CAP:
+            backends[entry.backend] = {"skipped": f"nnz {m.nnz} > loop cap"}
+            continue
+        fn = jax.jit(entry.build(obj, ctx).fn)
+        t = _time_call(fn, x, iters)
+        backends[entry.backend] = {
+            "t_measured_s": t,
+            "gflops": flops / t / 1e9,
+            "predicted_s": costs.get(entry.backend),
+        }
+    return {
+        "family": spec.family,
+        "format": fmt,
+        "nnz": m.nnz,
+        "auto_backend": auto_be,
+        "backends": backends,
+    }
+
+
+def measure(*, iters: int = 10, only=None) -> dict:
+    chip = host_chip()
+    out = {}
+    for name in MATRICES:
+        if only and only not in name:
+            continue
+        out[name] = sweep_matrix(name, iters=iters, chip=chip)
+    auto_ok = [e for e in out.values()
+               if "gflops" in e["backends"].get(e["auto_backend"], {})]
+    # did auto pick the measured-fastest of its survivors?
+    matches = []
+    for e in auto_ok:
+        timed = {b: v["t_measured_s"] for b, v in e["backends"].items()
+                 if "t_measured_s" in v and b != "loop_reference"}
+        if timed:
+            matches.append(min(timed, key=timed.get) == e["auto_backend"])
+    return {
+        "backend": jax.default_backend(),
+        "registered_entries": len(R.entries()),
+        "matrices": out,
+        "summary": {
+            "n_matrices": len(out),
+            "auto_match_rate": (sum(matches) / len(matches)) if matches else 1.0,
+        },
+    }
+
+
+def run(full: bool = False):
+    res = measure(iters=20 if full else 10)
+    rows = []
+    for name, e in res["matrices"].items():
+        for be, v in e["backends"].items():
+            if "gflops" in v:
+                rows.append(row("backend_sweep", f"{name}/{e['format']}/{be}",
+                                v["gflops"],
+                                "auto" if be == e["auto_backend"] else ""))
+    rows.append(row("backend_sweep", "summary",
+                    res["summary"]["auto_match_rate"],
+                    res["registered_entries"]))
+    return rows
+
+
+def run_json(full: bool = False) -> dict:
+    """The ``backends`` section of the BENCH_PR5.json artifact."""
+    return measure(iters=20 if full else 10)

@@ -37,10 +37,11 @@ MODULES = [
     "plan_bench",
     "serve_throughput",
     "corpus_sweep",
+    "backend_sweep",
 ]
 
 #: current perf-trajectory tag; --json with no PATH writes BENCH_<tag>.json
-DEFAULT_BENCH_TAG = "PR4"
+DEFAULT_BENCH_TAG = "PR5"
 
 
 def main(argv=None) -> int:
@@ -56,6 +57,7 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     if args.json is not None:
+        from benchmarks.backend_sweep import run_json as backend_json
         from benchmarks.corpus_sweep import run_json as corpus_json
         from benchmarks.plan_bench import run_json
         from benchmarks.serve_throughput import run_json as serve_json
@@ -63,6 +65,7 @@ def main(argv=None) -> int:
         payload = run_json(full=args.full)
         payload["serving"] = serve_json(full=args.full)
         payload["corpus"] = corpus_json(full=args.full)
+        payload["backends"] = backend_json(full=args.full)
         out_path.parent.mkdir(parents=True, exist_ok=True)
         with open(out_path, "w") as fh:
             json.dump(payload, fh, indent=2, sort_keys=True)
@@ -87,6 +90,11 @@ def main(argv=None) -> int:
               f"chosen-format match rate {cs['chosen_match_rate']:.2f}, "
               f"geomean chosen-vs-best slowdown "
               f"{cs['geomean_chosen_slowdown']:.2f}x", file=sys.stderr)
+        bs = payload["backends"]["summary"]
+        print(f"# backends: {payload['backends']['registered_entries']} "
+              f"registry entries, auto-backend match rate "
+              f"{bs['auto_match_rate']:.2f} over {bs['n_matrices']} matrices",
+              file=sys.stderr)
         return 0
 
     failures = 0

@@ -128,21 +128,17 @@ def plan_shard_formats(
         local = int(((seg >= p * cs) & (seg < (p + 1) * cs)).sum())
         times = {}
         for fmt in formats:
+            # the pad-ratio/balance accounting is perfmodel.balance_slab —
+            # one implementation shared with the kernel registry's slab
+            # entries (this loop used to rebuild the flat-SELL access model
+            # inline)
             if fmt == "ell":
-                bal = PM.balance_ell(am, PM.ell_pad_ratio(lens_p), npr)
+                pad = PM.ell_pad_ratio(lens_p)
             elif fmt == "sell":
-                # flat SELL streams one extra row id per stored element
-                am_sell = PM.AccessModel(
-                    value_bytes=am.value_bytes,
-                    index_bytes=2 * am.index_bytes,
-                    line_elems=am.line_elems,
-                    invec_waste=am.invec_waste,
-                    invec_reuse=am.invec_reuse,
-                )
                 pad = PM.sell_pad_ratio(lens_p, C, max(1, len(lens_p)))
-                bal = PM.balance_sell(am_sell, pad, npr)
             else:
                 raise ValueError(f"unknown slab format {fmt!r}")
+            bal = PM.balance_slab(fmt, am, pad, npr)
             times[fmt] = PM.predict(fmt, bal, max(1, nnz_p), chip).time_s
         best = min(times, key=times.get)
         reports.append(ShardReport(
@@ -325,26 +321,19 @@ def pack_shard_slabs(
 # ---------------------------------------------------------------------------
 
 
-def _slab_mult(pack: str, rows_pp: int):
-    """One (rows_pp-sized) partial product of a single column slab.
+def _slab_mult(pack: str, rows_pp: int, backend: str = "xla",
+               op: str = "spmv"):
+    """One (rows_pp-sized) partial product of a single column slab,
+    dispatched through the kernel registry (``slab_ell`` / ``slab_sell``
+    entries in ``repro.kernels.slab``).
 
     ell: 2-D gather + width reduction.  sell: flat gather + segment-sum over
     partition-local row ids (padding rows land in segment ``rows_pp`` and
-    are dropped).  ``x`` may be (n,) or (n, K); the same closure serves the
-    SpMV and SpMM executors.
+    are dropped).  ``x`` may be (n,) or (n, K); today's registered builders
+    serve both ops, but the executor requests the op it actually runs.
     """
-    if pack == "ell":
-        def mult(colb, valb, ridb, x):
-            g = jnp.take(x, colb, axis=0)          # (rows_pp, W[, K])
-            if x.ndim == 1:
-                return jnp.sum(valb * g, axis=1)
-            return jnp.sum(valb[..., None] * g, axis=1)
-    else:
-        def mult(colb, valb, ridb, x):
-            g = jnp.take(x, colb, axis=0)          # (L[, K])
-            prod = valb * g if x.ndim == 1 else valb[:, None] * g
-            return jax.ops.segment_sum(prod, ridb, num_segments=rows_pp + 1)[:rows_pp]
-    return mult
+    from ..kernels.slab import slab_mult
+    return slab_mult(pack, rows_pp, backend, op=op)
 
 
 def _device_arrays(blocks: ShardSlabs) -> tuple:
@@ -358,19 +347,22 @@ def _device_arrays(blocks: ShardSlabs) -> tuple:
 
 
 def _make_executor(blocks: ShardSlabs, mesh: Mesh, axis: str, variant: str,
-                   multi: bool, arrays: tuple | None = None):
+                   multi: bool, arrays: tuple | None = None,
+                   backend: str = "xla"):
     """Build the jitted distributed executor for one variant.
 
     Returns ``run(x) -> y`` (``multi=False``) or ``run(X) -> Y``.  All slabs
     are device_put once (closed over as jnp constants); only x moves per
-    call.
+    call.  ``backend`` picks the registry entry for the inner slab multiply
+    (``xla`` is the only entry expressible inside ``shard_map`` today;
+    ``loop_reference`` exists for parity testing).
     """
     parts = blocks.parts
     pack = blocks.pack
     col, val, rid, rmap = arrays if arrays is not None else _device_arrays(blocks)
     n, rows_pp = blocks.n_rows, blocks.rows_pp
     cs = blocks.col_shard
-    mult = _slab_mult(pack, rows_pp)
+    mult = _slab_mult(pack, rows_pp, backend, op="spmm" if multi else "spmv")
     perm = [(j, (j - 1) % parts) for j in range(parts)]
 
     def _mark_varying(y):
@@ -624,6 +616,22 @@ def _as_csr(matrix) -> CSR:
     return cached
 
 
+def _resolve_slab_backend(backend: str) -> str:
+    """Normalize the distributed ``backend=`` to a slab registry entry.
+
+    The inner multiplies run inside ``shard_map``, where only the XLA slab
+    entries are expressible today — ``auto``/``xla``/``ref`` (and the
+    Pallas names, which degrade gracefully like the local plan layer does
+    for formats without a Pallas kernel) all resolve to ``xla``;
+    ``loop_reference`` selects the slab loop oracles for parity debugging.
+    """
+    if backend in ("auto", "xla", "ref", "pallas", "pallas_interpret"):
+        return "xla"
+    if backend == "loop_reference":
+        return backend
+    raise ValueError(f"unknown backend {backend!r}")
+
+
 def compile_distributed_spmv_plan(
     m,
     mesh: Mesh | None = None,
@@ -635,6 +643,7 @@ def compile_distributed_spmv_plan(
     C: int = 8,
     chip: ChipSpec = TPU_V5E,
     am: PM.AccessModel = PM.TPU_FP32,
+    backend: str = "auto",
 ) -> DistributedSpMVPlan:
     """Partition ``m`` over the mesh and return a memoized distributed plan.
 
@@ -642,29 +651,34 @@ def compile_distributed_spmv_plan(
     view).  ``slab_format="auto"`` lets the roofline choose between the
     stacked packings per shard (``plan_shard_formats``) and commits to the
     one that minimizes the straggler's predicted time; pass
-    ``"ell"``/``"sell"`` to force.  Compiling twice with the same key
-    returns the same object — each shard is packed exactly once per key
-    (``pack_stats`` counts).
+    ``"ell"``/``"sell"`` to force.  ``backend`` selects the registry entry
+    for the inner slab multiplies (see ``_resolve_slab_backend``).
+    Compiling twice with the same key returns the same object — each shard
+    is packed exactly once per key (``pack_stats`` counts).
     """
     if variant not in VARIANTS:
         raise ValueError(f"unknown variant {variant!r}; expected one of {VARIANTS}")
+    be = _resolve_slab_backend(backend)
     m = _as_csr(m)
     mesh = mesh if mesh is not None else make_mesh_1d(axis)
     parts = int(mesh.shape[axis])
     dev_ids = tuple(int(d.id) for d in np.asarray(mesh.devices).flat)
-    key = (variant, balance, slab_format, axis, parts, C, chip.name, am, dev_ids)
+    key = (variant, balance, slab_format, axis, parts, C, chip.name, am,
+           dev_ids, be)
     cache = getattr(m, "_dist_plans", None)
     if cache is None:
         cache = {}
         object.__setattr__(m, "_dist_plans", cache)
     plan = cache.get(key)
     if plan is None:
-        plan = _compile(m, mesh, variant, balance, slab_format, axis, C, chip, am)
+        plan = _compile(m, mesh, variant, balance, slab_format, axis, C,
+                        chip, am, be)
         cache[key] = plan
     return plan
 
 
-def _compile(m, mesh, variant, balance, slab_format, axis, C, chip, am):
+def _compile(m, mesh, variant, balance, slab_format, axis, C, chip, am,
+             backend: str = "xla"):
     parts = int(mesh.shape[axis])
     bounds = (nnz_balanced_partition(m, parts) if balance == "nnz"
               else row_balanced_partition(m.n_rows, parts))
@@ -682,8 +696,10 @@ def _compile(m, mesh, variant, balance, slab_format, axis, C, chip, am):
         hit = (blocks, _device_arrays(blocks))
         cache[skey] = hit
     blocks, arrays = hit
-    run = _make_executor(blocks, mesh, axis, variant, multi=False, arrays=arrays)
-    run_mm = _make_executor(blocks, mesh, axis, variant, multi=True, arrays=arrays)
+    run = _make_executor(blocks, mesh, axis, variant, multi=False,
+                         arrays=arrays, backend=backend)
+    run_mm = _make_executor(blocks, mesh, axis, variant, multi=True,
+                            arrays=arrays, backend=backend)
     traffic = slab_traffic_bytes(blocks, variant,
                                  np.dtype(np.asarray(m.val).dtype).itemsize)
     return DistributedSpMVPlan(variant, parts, axis, pack, balance, blocks,

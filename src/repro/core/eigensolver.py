@@ -23,7 +23,7 @@ Apply = Callable[[jnp.ndarray], jnp.ndarray]
 
 
 def as_apply(op, *, mesh=None, variant: str = "overlap",
-             format: str | None = None) -> Apply:
+             format: str | None = None, backend: str = "auto") -> Apply:
     """Normalize the injected operator: a callable (closure, jitted fn,
     ``SpMVPlan``, or ``DistributedSpMVPlan``) passes through; a bare format
     container is compiled into a plan once, so every Lanczos iteration
@@ -37,6 +37,9 @@ def as_apply(op, *, mesh=None, variant: str = "overlap",
     ``format`` is forwarded to ``SpMVPlan.compile`` for bare containers:
     ``format="auto"`` lets ``perfmodel.select_format`` choose the storage
     scheme from the Hamiltonian's own structure before planning.
+    ``backend`` (default ``"auto"``: capability probes + the roofline
+    ranking through ``kernels.registry``) is forwarded to both the local
+    and the distributed compile.
     """
     if mesh is not None and not callable(op):
         if format is not None:
@@ -46,12 +49,13 @@ def as_apply(op, *, mesh=None, variant: str = "overlap",
                 "compile_distributed_spmv_plan's slab_format)")
         from .distributed_plan import compile_distributed_spmv_plan
 
-        return compile_distributed_spmv_plan(op, mesh, variant=variant)
+        return compile_distributed_spmv_plan(op, mesh, variant=variant,
+                                             backend=backend)
     if callable(op):
         return op
     from .plan import SpMVPlan
 
-    return SpMVPlan.compile(op, format=format)
+    return SpMVPlan.compile(op, format=format, backend=backend)
 
 
 @dataclass
@@ -74,6 +78,7 @@ def lanczos(
     dtype=jnp.float64,
     mesh=None,
     format: str | None = None,
+    backend: str = "auto",
 ) -> LanczosResult:
     """m-step Lanczos on the symmetric operator ``apply_A`` of dimension n.
 
@@ -86,9 +91,10 @@ def lanczos(
     entry, so every iteration reuses it); with ``mesh`` a CSR container is
     compiled into a distributed plan and the solve shards across devices.
     ``format`` (e.g. ``"auto"``) picks the storage scheme for bare
-    containers before planning.
+    containers before planning; ``backend`` picks the kernel-registry
+    entry (``"auto"`` probes + ranks).
     """
-    apply_A = as_apply(apply_A, mesh=mesh, format=format)
+    apply_A = as_apply(apply_A, mesh=mesh, format=format, backend=backend)
     if v0 is None:
         v0 = jax.random.normal(jax.random.PRNGKey(seed), (n,), dtype)
     v = v0 / jnp.linalg.norm(v0)

@@ -97,6 +97,26 @@ def balance_sell(am: AccessModel, pad_ratio: float, nnz_per_row: float) -> float
     return balance_blocked_jds(am, 0, nnz_per_row) * pad_ratio
 
 
+def flat_sell_access_model(am: AccessModel) -> AccessModel:
+    """Flat SELL-C streams one extra row id per stored element (the
+    segment-sum's index stream) on top of the column index.  Shared by the
+    distributed slab planner and the registry cost hooks — this doubling
+    used to be constructed inline in ``distributed_plan``."""
+    return replace(am, index_bytes=2 * am.index_bytes)
+
+
+def balance_slab(pack: str, am: AccessModel, pad_ratio: float,
+                 nnz_per_row: float) -> float:
+    """Balance of one distributed slab pack: padded-ELL pays the partition's
+    padding ratio; flat SELL pays only per-chunk padding but adds the
+    row-index stream of a segment-sum."""
+    if pack == "ell":
+        return balance_ell(am, pad_ratio, nnz_per_row)
+    if pack == "sell":
+        return balance_sell(flat_sell_access_model(am), pad_ratio, nnz_per_row)
+    raise ValueError(f"unknown slab format {pack!r}")
+
+
 def balance_bsr(am: AccessModel, block_shape: tuple[int, int], fill_ratio: float) -> float:
     """BSR: index traffic amortized over bm*bn, invec reuse factor bm inside a
     block (each x element feeds bm rows).  ``fill_ratio`` = stored elements /
@@ -204,6 +224,37 @@ def ell_pad_ratio(row_lengths: np.ndarray) -> float:
     return float(ml / max(1e-9, mean))
 
 
+#: registry backends whose SELL execution streams the *flat* chunk-local
+#: layout (sum_c w_c * C elements).  The XLA formulation instead consumes
+#: the globally padded (nc, W_max, C) views — W_max = the longest row — so
+#: its matrix stream inflates by the global padding ratio.  This is the
+#: BENCH_PR4 honest miss: the power-law matrix measured far below the
+#: flat-SELL model under XLA precisely because of these extra bytes.
+FLAT_SELL_BACKENDS = ("pallas", "pallas_interpret", "loop_reference")
+
+
+def sell_streamed_elements(m, backend: str = "xla") -> int:
+    """Stored elements one SpMV actually streams for a concrete ``SELL``
+    container under ``backend`` (flat chunk-local vs globally padded)."""
+    flat = int(np.asarray(m.val).shape[0])
+    if backend in FLAT_SELL_BACKENDS:
+        return flat
+    cw = np.asarray(m.chunk_width)
+    wmax = int(cw.max()) if cw.size else 1
+    return int(m.n_chunks * wmax * m.C)
+
+
+def sell_padded_view_ratio(row_lengths: np.ndarray, C: int) -> float:
+    """Padding ratio (streamed / nnz) of the globally padded SELL views the
+    XLA backend consumes: every chunk is padded to the longest row."""
+    n = len(row_lengths)
+    if n == 0:
+        return 1.0
+    n_pad = -(-n // C) * C
+    wmax = int(row_lengths.max())
+    return n_pad * wmax / max(1, int(row_lengths.sum()))
+
+
 def sell_pad_ratio(row_lengths: np.ndarray, C: int, sigma: int) -> float:
     """Exact padding ratio of SELL-C-sigma for the given row lengths."""
     n = len(row_lengths)
@@ -261,10 +312,15 @@ def advise(
     return out
 
 
-def balance_of(fmt_obj, am: AccessModel = TPU_FP32) -> float:
+def balance_of(fmt_obj, am: AccessModel = TPU_FP32, backend: str = "xla") -> float:
     """Algorithmic balance (bytes/Flop) for a *concrete* converted matrix —
     the post-conversion analogue of ``advise``'s pattern-only estimates.
-    Pad/fill ratios are exact because the container is in hand."""
+    Pad/fill ratios are exact because the container is in hand.
+
+    ``backend`` selects the stream-byte regime where formats differ per
+    executor — today that is SELL (flat chunk-local layout for the Pallas
+    kernels and the loop oracle vs globally padded views for XLA; see
+    ``sell_streamed_elements``)."""
     from . import formats as F
 
     if isinstance(fmt_obj, F.CSR):
@@ -283,7 +339,7 @@ def balance_of(fmt_obj, am: AccessModel = TPU_FP32) -> float:
     if isinstance(fmt_obj, F.JDS):
         return balance_jds(am)
     if isinstance(fmt_obj, F.SELL):
-        stored = int(np.asarray(fmt_obj.val).shape[0])
+        stored = sell_streamed_elements(fmt_obj, backend)
         npr = fmt_obj.nnz / max(1, fmt_obj.shape[0])
         return balance_sell(am, stored / max(1, fmt_obj.nnz), npr)
     if isinstance(fmt_obj, F.BSR):
@@ -297,7 +353,7 @@ def balance_of(fmt_obj, am: AccessModel = TPU_FP32) -> float:
         n_dia, n_rest = fmt_obj.dia.nnz, fmt_obj.rest.nnz
         total = max(1, n_dia + n_rest)
         return (n_dia * balance_of(fmt_obj.dia, am)
-                + n_rest * balance_of(fmt_obj.rest, am)) / total
+                + n_rest * balance_of(fmt_obj.rest, am, backend)) / total
     raise TypeError(type(fmt_obj))
 
 
@@ -364,6 +420,15 @@ def predict_exec(fmt: str, balance: float, nnz: int, chip: ChipSpec = TPU_V5E,
     return predict(fmt, balance, nnz, chip=derated)
 
 
+def resolve_stream_backend(backend: str = "auto") -> str:
+    """The stream-byte regime the default executor would use here: the
+    Pallas kernels on TPU, the XLA formulations elsewhere."""
+    if backend != "auto":
+        return backend
+    import jax
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
 def select_format(
     m,
     *,
@@ -375,6 +440,7 @@ def select_format(
     efficiency: dict | None = None,
     max_dia_diags: int = 256,
     bsr_block: tuple[int, int] = (8, 128),
+    backend: str = "auto",
 ) -> FormatChoice:
     """Pick the storage format for a concrete CSR/COO container.
 
@@ -405,6 +471,12 @@ def select_format(
             most this many distinct (sub)diagonals.
         bsr_block: BSR is only considered when the shape divides this
             block and the populated blocks are reasonably full.
+        backend: stream-byte regime for backend-dependent formats
+            (``"auto"`` = the executor this host would pick).  The XLA
+            SELL formulation streams globally padded views, so under
+            ``backend="xla"`` the SELL candidate is charged
+            ``sell_padded_view_ratio`` instead of the flat chunk-local
+            ratio — this closes the BENCH_PR4 power-law misprediction.
 
     Returns:
         A ``FormatChoice``; compile the pick with
@@ -426,12 +498,15 @@ def select_format(
     nnz = max(1, m.nnz)
     npr = float(stats["nnz_per_row_mean"])
     sig = sigma if sigma is not None else m.shape[0]
+    be = resolve_stream_backend(backend)
+    sell_ratio = (sell_pad_ratio(lens, C, sig) if be in FLAT_SELL_BACKENDS
+                  else sell_padded_view_ratio(lens, C))
 
     balances = {
         "csr": balance_csr(am, npr),
         "jds": balance_jds(am),
         "ell": balance_ell(am, ell_pad_ratio(lens), npr),
-        "sell": balance_sell(am, sell_pad_ratio(lens, C, sig), npr),
+        "sell": balance_sell(am, sell_ratio, npr),
     }
     kwargs = {
         "csr": {}, "jds": {},
@@ -448,7 +523,7 @@ def select_format(
     frac_diag = float(stats.get("frac_nnz_top12_diags", 0.0))
     if frac_diag > 0.3:
         b_dia = balance_dia(am, 12, occupancy=0.9)
-        b_rest = balance_sell(am, sell_pad_ratio(lens, C, sig), npr * (1 - frac_diag))
+        b_rest = balance_sell(am, sell_ratio, npr * (1 - frac_diag))
         balances["hybrid"] = frac_diag * b_dia + (1 - frac_diag) * b_rest
         kwargs["hybrid"] = {"C": C, "sigma": sigma}
 
@@ -565,7 +640,8 @@ def select_pallas_blocks(
 # ---------------------------------------------------------------------------
 
 
-def matrix_stream_bytes(fmt_obj, am: AccessModel = TPU_FP32) -> float:
+def matrix_stream_bytes(fmt_obj, am: AccessModel = TPU_FP32,
+                        backend: str = "xla") -> float:
     """Bytes of the *matrix* stream alone (values + indices, padding included).
 
     This is the traffic component that batching amortizes: an SpMM with k
@@ -575,6 +651,7 @@ def matrix_stream_bytes(fmt_obj, am: AccessModel = TPU_FP32) -> float:
     Args:
         fmt_obj: a concrete converted container from ``core.formats``.
         am: byte-width parameterization of the access model.
+        backend: stream-byte regime (see ``balance_of``); affects SELL.
 
     Returns:
         Modelled bytes of one pass over the stored matrix.
@@ -589,7 +666,7 @@ def matrix_stream_bytes(fmt_obj, am: AccessModel = TPU_FP32) -> float:
         stored = int(np.prod(np.asarray(fmt_obj.val).shape))
         return float((am.value_bytes + am.index_bytes) * stored)
     if isinstance(fmt_obj, F.SELL):
-        stored = int(np.asarray(fmt_obj.val).shape[0])
+        stored = sell_streamed_elements(fmt_obj, backend)
         return float((am.value_bytes + am.index_bytes) * stored)
     if isinstance(fmt_obj, F.BSR):
         bm, bn = fmt_obj.block_shape
@@ -598,11 +675,13 @@ def matrix_stream_bytes(fmt_obj, am: AccessModel = TPU_FP32) -> float:
         nd, n = np.asarray(fmt_obj.data).shape
         return float(am.value_bytes * nd * n)
     if isinstance(fmt_obj, F.HybridDIA):
-        return matrix_stream_bytes(fmt_obj.dia, am) + matrix_stream_bytes(fmt_obj.rest, am)
+        return (matrix_stream_bytes(fmt_obj.dia, am)
+                + matrix_stream_bytes(fmt_obj.rest, am, backend))
     raise TypeError(type(fmt_obj))
 
 
-def spmm_balance_of(fmt_obj, k: int, am: AccessModel = TPU_FP32) -> float:
+def spmm_balance_of(fmt_obj, k: int, am: AccessModel = TPU_FP32,
+                    backend: str = "xla") -> float:
     """Algorithmic balance (bytes per Flop) of an SpMM at batch width ``k``.
 
     One SpMM of width k does ``2 * nnz * k`` Flops while streaming the matrix
@@ -623,8 +702,8 @@ def spmm_balance_of(fmt_obj, k: int, am: AccessModel = TPU_FP32) -> float:
         Modelled bytes moved per useful Flop at width k.
     """
     k = max(1, int(k))
-    total1 = balance_of(fmt_obj, am) * 2.0 * fmt_obj.nnz   # one SpMV, modelled
-    mat = matrix_stream_bytes(fmt_obj, am)
+    total1 = balance_of(fmt_obj, am, backend) * 2.0 * fmt_obj.nnz  # one SpMV
+    mat = matrix_stream_bytes(fmt_obj, am, backend)
     vec = max(0.0, total1 - mat)                           # invec + resvec share
     return (mat + k * vec) / (2.0 * fmt_obj.nnz * k)
 
@@ -656,6 +735,7 @@ def select_batch_width(
     chip: ChipSpec = TPU_V5E,
     k_max: int = 64,
     efficiency: float = 0.9,
+    backend: str = "xla",
 ) -> BatchWidthChoice:
     """Pick the serving batch width from the SpMM roofline.
 
@@ -672,6 +752,10 @@ def select_batch_width(
         chip: roofline parameters (HBM bandwidth, peak Flop/s).
         k_max: largest candidate width (rounded up to a power of two).
         efficiency: fraction of the asymptotic throughput to settle for.
+        backend: stream-byte regime of the executor that will run the
+            flushes (see ``balance_of``) — the width knee moves with the
+            matrix-stream size, so a flat-streaming Pallas SELL SpMM must
+            not be policied with padded XLA bytes.
 
     Returns:
         A ``BatchWidthChoice``; ``choice.width`` is the flush width.
@@ -684,7 +768,7 @@ def select_batch_width(
     ks.append(k)  # first power of two >= k_max
     qps, bal = {}, {}
     for k in ks:
-        b = spmm_balance_of(fmt_obj, k, am)
+        b = spmm_balance_of(fmt_obj, k, am, backend)
         pred = predict("spmm", b, fmt_obj.nnz * k, chip=chip)
         bal[k] = b
         qps[k] = k / pred.time_s
@@ -694,7 +778,7 @@ def select_batch_width(
                             balance=bal, saturation=qps[width] / best)
 
 
-def spmv_streamed_bytes(fmt_obj, am: AccessModel) -> float:
+def spmv_streamed_bytes(fmt_obj, am: AccessModel, backend: str = "xla") -> float:
     """Model-side byte count for a *concrete* converted matrix (used to
     validate predictions against measured/compiled traffic)."""
     from . import formats as F
@@ -710,7 +794,7 @@ def spmv_streamed_bytes(fmt_obj, am: AccessModel) -> float:
         return (am.value_bytes + am.index_bytes + am.invec_bytes_per_access()
                 + 2 * am.value_bytes) * fmt_obj.nnz
     if isinstance(fmt_obj, F.SELL):
-        stored = int(np.asarray(fmt_obj.val).shape[0])
+        stored = sell_streamed_elements(fmt_obj, backend)
         return (am.value_bytes + am.index_bytes + am.invec_bytes_per_access()) * stored \
             + 2 * am.value_bytes * fmt_obj.shape[0]
     if isinstance(fmt_obj, F.BSR):
@@ -722,5 +806,6 @@ def spmv_streamed_bytes(fmt_obj, am: AccessModel) -> float:
         nd, n = np.asarray(fmt_obj.data).shape
         return am.value_bytes * nd * n + am.value_bytes * n + 2 * am.value_bytes * n
     if isinstance(fmt_obj, F.HybridDIA):
-        return spmv_streamed_bytes(fmt_obj.dia, am) + spmv_streamed_bytes(fmt_obj.rest, am)
+        return (spmv_streamed_bytes(fmt_obj.dia, am)
+                + spmv_streamed_bytes(fmt_obj.rest, am, backend))
     raise TypeError(type(fmt_obj))

@@ -12,18 +12,25 @@ format container into a reusable executor:
 2. **Vectorized kernels** — every format executes as O(1) traced ops
    (gather + segment-sum / einsum), never an O(n_chunks) host-unrolled
    scatter chain.
-3. **Model-driven kernel selection** — the §perfmodel roofline picks the
-   execution path: the Pallas SELL kernel (compiled on TPU, interpret as the
-   test fallback) with ``(chunk_block, width_block)`` chosen by
-   ``perfmodel.select_pallas_blocks`` from predicted bytes/flop and the
-   chip's ``vmem_bytes``, or the fused XLA formulation elsewhere.
+3. **Registry-backed kernel selection** — every executor comes from
+   ``repro.kernels.registry``, the one table of ``(format, op, backend)``
+   entries.  ``backend="auto"`` runs the registered capability probes
+   (platform, dtype, VMEM-fit tiling) and ranks the survivors with the
+   execution-aware roofline (``perfmodel.predict_exec`` through each
+   entry's cost hook), memoizing the choice on the container; an explicit
+   backend name compiles that entry (falling back to the XLA formulation
+   when the format has no such entry or its probe rejects the operand —
+   e.g. ``backend="pallas"`` for a SELL whose tiling cannot fit VMEM).
+   Pallas tiling choices come from the entries' autotune hooks
+   (``kernels.sell.sell_autotune`` via ``perfmodel.select_pallas_blocks``).
 4. **Cached jitted executors** — ``plan(x)`` (SpMV) and ``plan.spmm(X)``
    (multi-vector) are jitted once; plans themselves are memoized on the
    container, so ``compile`` is idempotent and free after the first call.
 
 ``chip`` parameterizes the roofline (prediction + VMEM budget); ``backend``
-chooses ``"auto" | "xla" | "pallas"`` (``"ref"`` is accepted as an alias of
-``"xla"`` for symmetry with ``kernels.ops``).
+is ``"auto" | "xla" | "pallas" | "pallas_interpret" | "loop_reference"``
+(``"ref"`` aliases ``"xla"``; ``"pallas"`` off-TPU resolves to the
+interpreter entry, exactly as before).
 """
 from __future__ import annotations
 
@@ -31,11 +38,10 @@ from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
+from ..kernels import registry as R
 from ..utils.hw import ChipSpec, TPU_V5E
 from . import perfmodel as PM
-from . import spmv as S
 from .formats import BSR, COO, CSR, DIA, ELL, JDS, SELL, HybridDIA
 
 _FMT_NAMES = {
@@ -140,7 +146,8 @@ class SpMVPlan:
             what was decided and what the roofline predicts for it.
         """
         if format is not None:
-            matrix = resolve_format(matrix, format, chip=chip, am=am)
+            matrix = resolve_format(matrix, format, chip=chip, am=am,
+                                    backend=backend)
         fmt = _FMT_NAMES.get(type(matrix))
         if fmt is None:
             raise TypeError(f"no plan for {type(matrix).__name__}")
@@ -164,7 +171,8 @@ class SpMVPlan:
 
 
 def resolve_format(matrix, format: str, *, chip: ChipSpec = TPU_V5E,
-                   am: PM.AccessModel = PM.TPU_FP32, **select_kw):
+                   am: PM.AccessModel = PM.TPU_FP32, backend: str = "auto",
+                   **select_kw):
     """Return ``matrix`` converted to ``format`` (``"auto"`` = model's pick).
 
     A CSR/COO container is converted (and the converted container cached on
@@ -181,7 +189,7 @@ def resolve_format(matrix, format: str, *, chip: ChipSpec = TPU_V5E,
         if fmt not in ("csr", "coo"):
             return matrix
         choice = PM.select_format(_as_csr_container(matrix), am=am, chip=chip,
-                                  **select_kw)
+                                  backend=_resolve_backend(backend), **select_kw)
         return _convert_cached(matrix, choice.format, choice.convert_kwargs)
     if format == fmt:
         return matrix
@@ -219,18 +227,34 @@ def _convert_cached(matrix, fmt: str, kw: dict):
 
 
 def _resolve_backend(backend: str) -> str:
+    """Normalize a plan-level backend name to a registry backend.
+
+    ``"pallas"`` keeps its historical meaning — the Pallas kernels, compiled
+    on TPU and through the interpreter elsewhere — by resolving to the
+    ``pallas_interpret`` registry entries off-TPU.
+    """
     if backend == "auto":
-        return "pallas" if jax.default_backend() == "tpu" else "xla"
+        return "auto"
     if backend in ("ref", "xla"):
         return "xla"
     if backend == "pallas":
-        return "pallas"
-    raise ValueError(f"unknown backend {backend!r}")
+        return "pallas" if jax.default_backend() == "tpu" else "pallas_interpret"
+    if backend in ("pallas_interpret", "loop_reference"):
+        return backend
+    raise ValueError(f"unknown backend {backend!r}; expected 'auto', 'xla', "
+                     "'ref', 'pallas', 'pallas_interpret' or 'loop_reference'")
+
+
+#: report/kernel label -> the perfmodel stream-byte regime it executes
+_LABEL_STREAM = {"xla": "xla", "pallas": "pallas",
+                 "pallas-interpret": "pallas_interpret",
+                 "loop": "loop_reference"}
 
 
 def _report(matrix, fmt: str, chip: ChipSpec, am: PM.AccessModel, kernel: str,
             choice: PM.BlockChoice | None = None) -> PlanReport:
-    balance = PM.balance_of(matrix, am)
+    balance = PM.balance_of(matrix, am,
+                            backend=_LABEL_STREAM.get(kernel, "xla"))
     pred = PM.predict(fmt, balance, matrix.nnz, chip=chip)
     return PlanReport(
         format=fmt, shape=tuple(matrix.shape), nnz=matrix.nnz, kernel=kernel,
@@ -244,86 +268,41 @@ def _report(matrix, fmt: str, chip: ChipSpec, am: PM.AccessModel, kernel: str,
     )
 
 
+def _pick_entry(matrix, fmt: str, op: str, backend: str,
+                ctx: R.KernelContext) -> str:
+    """Resolve one (format, op) to a concrete registry backend.
+
+    ``"auto"`` probes + ranks through the registry; an explicit backend is
+    honored when its entry exists and its probe accepts the operand, and
+    degrades to the XLA formulation otherwise (the historical behavior:
+    ``backend="pallas"`` on a format without a Pallas kernel, or a SELL
+    whose tiling cannot fit VMEM, compiles the XLA path).
+    """
+    if backend == "auto":
+        be, _ = R.select_backend(matrix, fmt, op, ctx)
+        return be
+    if R.has(fmt, op, backend) and R.get(fmt, op, backend).probe(matrix, ctx).ok:
+        return backend
+    return "xla"
+
+
 def _compile(matrix, fmt, chip, am, backend, chunk_block, width_block) -> SpMVPlan:
-    if isinstance(matrix, SELL):
-        return _compile_sell(matrix, chip, am, backend, chunk_block, width_block)
-    if isinstance(matrix, HybridDIA):
-        sub_dia = SpMVPlan.compile(matrix.dia, chip=chip, am=am, backend=backend)
-        sub_sell = SpMVPlan.compile(matrix.rest, chip=chip, am=am, backend=backend,
-                                    chunk_block=chunk_block, width_block=width_block)
-        apply_fn = jax.jit(lambda x: sub_dia.apply(x) + sub_sell.apply(x))
-        apply_mm = jax.jit(lambda X: sub_dia.apply_multi(X) + sub_sell.apply_multi(X))
-        kernel = sub_sell.report.kernel
-        return SpMVPlan(matrix, _report(matrix, "hybrid", chip, am, kernel), apply_fn, apply_mm)
-
-    # XLA-vectorized formats: warm the build-once caches (host preprocessing
-    # happens HERE, not inside the traced function), then close over them.
-    if isinstance(matrix, CSR):
-        S.csr_row_ids(matrix)
-    elif isinstance(matrix, JDS):
-        S.jds_segment_ids(matrix)
-    elif isinstance(matrix, DIA):
-        S.dia_gather_tables(matrix)
-    elif isinstance(matrix, BSR):
-        S.bsr_block_row_ids(matrix)
-    apply_fn = jax.jit(lambda x: S.spmv(matrix, x))
-    apply_mm = jax.jit(lambda X: S.spmm(matrix, X))
-    return SpMVPlan(matrix, _report(matrix, fmt, chip, am, "xla"), apply_fn, apply_mm)
-
-
-def _compile_sell(m: SELL, chip, am, backend, chunk_block, width_block) -> SpMVPlan:
-    from ..kernels import sell_spmv as K
-
+    ctx = R.KernelContext(chip=chip, am=am, chunk_block=chunk_block,
+                          width_block=width_block)
     be = _resolve_backend(backend)
-    n = m.shape[0]
-    perm = jnp.asarray(np.asarray(m.perm))
-
-    if be == "pallas":
-        cw = np.asarray(m.chunk_width)
-        W0 = int(cw.max()) if cw.size else 1
-        choice = PM.select_pallas_blocks(
-            m.n_chunks, W0, m.C, m.shape[1],
-            value_bytes=np.dtype(m.val.dtype).itemsize,
-            chip=chip)
-        cb = chunk_block if chunk_block is not None else choice.chunk_block
-        wb = width_block if width_block is not None else choice.width_block
-        if chunk_block is not None or width_block is not None:
-            # re-claim for the overridden tiling, not the model's choice
-            claim = int(K.vmem_bytes(cb, wb, m.C, m.shape[1],
-                                     np.dtype(m.val.dtype).itemsize))
-            choice = PM.BlockChoice(cb, wb, -(-W0 // wb) * wb, claim,
-                                    claim <= int(chip.vmem_bytes * 0.5))
-        # the model may have been asked for a chip whose VMEM nothing fits;
-        # fall back to the XLA formulation rather than emit a doomed kernel
-        if choice.fits_vmem:
-            col3, val3, _ = S.sell_padded_views(m, pad_width_to=wb)
-            col3, val3 = jnp.asarray(col3), jnp.asarray(val3)  # device-put once
-            nc, W, _ = col3.shape
-            while nc % cb:   # nc is fixed by the matrix; cb must divide it
-                cb -= 1
-            choice = PM.BlockChoice(cb, wb, W, choice.vmem_bytes, choice.fits_vmem)
-            from ..utils.hw import pallas_interpret_default
-            interpret = pallas_interpret_default()
-            kernel = "pallas-interpret" if interpret else "pallas"
-
-            def apply_fn(x):
-                tiles = K.sell_spmv_arrays(col3, val3, x, chunk_block=cb,
-                                           width_block=wb, interpret=interpret)
-                return K.sell_spmv_scatter(tiles, perm, n)
-
-            # multi-vector stays on the fused XLA path (the Pallas kernel is
-            # single-vector); reuse the wb-padded views already in hand
-            # rather than building a second pad_width_to=1 cache entry
-            apply_mm = jax.jit(
-                lambda X: S.sell_spmm_padded(col3, val3, perm, X, n))
-            return SpMVPlan(m, _report(m, "sell", chip, am, kernel, choice),
-                            jax.jit(apply_fn), apply_mm)
-        be = "xla"
-
-    S.sell_padded_views(m)  # warm the cache host-side
-    apply_fn = jax.jit(lambda x: S.sell_spmv(m, x))
-    apply_mm = jax.jit(lambda X: S.sell_spmm(m, X))
-    return SpMVPlan(m, _report(m, "sell", chip, am, "xla"), apply_fn, apply_mm)
+    # "pallas" off-TPU has always meant: SpMV through the interpreter (the
+    # test-coverage path), SpMM on the fused XLA formulation — the
+    # interpreter's multi-vector pass is orders slower and was never the
+    # historical behavior.  Asking for "pallas_interpret" BY NAME opts into
+    # the interpreter for both ops (what the parity suite exercises).
+    be_mm = "xla" if (backend == "pallas" and be == "pallas_interpret") else be
+    be_v = _pick_entry(matrix, fmt, "spmv", be, ctx)
+    be_m = _pick_entry(matrix, fmt, "spmm", be_mm, ctx)
+    ck_v = R.build(matrix, fmt, "spmv", be_v, ctx)
+    ck_m = R.build(matrix, fmt, "spmm", be_m, ctx)
+    choice = ck_v.choice if isinstance(ck_v.choice, PM.BlockChoice) else None
+    return SpMVPlan(matrix, _report(matrix, fmt, chip, am, ck_v.label, choice),
+                    jax.jit(ck_v.fn), jax.jit(ck_m.fn))
 
 
 # ---------------------------------------------------------------------------

@@ -1,25 +1,15 @@
-"""Pure-jnp reference SpMV kernels, one per storage format.
+"""Back-compat façade over the per-format kernel modules.
 
-These are the *oracles*: readable, obviously-correct implementations used to
-validate the Pallas kernels and to run everywhere (CPU included).  Each
-function takes the concrete format container (host metadata such as
-``jd_ptr`` / ``chunk_ptr`` is read eagerly with numpy, so the per-matrix
-loop structure is static) and returns a jit-able closure or computes
-directly.
+The format kernel bodies that used to live here moved to
+``repro.kernels.{coo,csr,ell,jds,sell,bsr,dia,hybrid}`` (PR 5: the unified
+kernel registry), where each registers its ``(format, op, backend)``
+entries with ``repro.kernels.registry``.  This module keeps the historical
+``core.spmv`` surface as thin re-exports plus the type-dispatch helpers —
+nothing here computes; every consumer reaches the kernels through the
+registry (via ``core.plan``) or through these re-exports.
 
-Host-derived metadata (CSR row ids, JDS segment tables, SELL padded views,
-DIA shift-gather tables) is computed **once per container** and cached on
-the (frozen) dataclass via ``object.__setattr__`` — repeated SpMV calls on
-the same matrix never redo preprocessing.  ``precompute_stats()`` exposes
-the build counters so tests can assert no recomputation.
-
-The faithful per-diagonal / per-chunk loop traversals from the paper are
-kept under ``*_loop`` names; the default dispatch uses the vectorized
-formulations (single gather + segment-sum / einsum), which trace O(1)
-instead of O(n_chunks) host operations.
-
-Conventions
------------
+Conventions (unchanged)
+-----------------------
 * ``x`` is the input vector (paper: ``invec``), ``y`` the result
   (``resvec``).
 * All formats compute ``y = A @ x`` for ``A`` of shape ``(M, N)``.
@@ -30,384 +20,46 @@ from __future__ import annotations
 from functools import partial
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
+from ..kernels.bsr import bsr_block_row_ids, bsr_spmm, bsr_spmv  # noqa: F401
+from ..kernels.cache import precompute_stats  # noqa: F401
+from ..kernels.coo import coo_spmm, coo_spmv  # noqa: F401
+from ..kernels.csr import (  # noqa: F401
+    csr_row_ids,
+    csr_spmm,
+    csr_spmv,
+    csr_spmv_searchsorted,
+)
+from ..kernels.dia import (  # noqa: F401
+    dia_gather_tables,
+    dia_spmm,
+    dia_spmv,
+    dia_spmv_loop,
+)
+from ..kernels.ell import ell_spmm, ell_spmv, ell_spmv_loop  # noqa: F401
+from ..kernels.hybrid import (  # noqa: F401
+    hybrid_spmm,
+    hybrid_spmv,
+    hybrid_spmv_loop,
+)
+from ..kernels.jds import (  # noqa: F401
+    jds_segment_ids,
+    jds_spmm,
+    jds_spmv,
+    jds_spmv_loop,
+)
+from ..kernels.sell import (  # noqa: F401
+    sell_padded_views,
+    sell_spmm,
+    sell_spmm_padded,
+    sell_spmv,
+    sell_spmv_loop,
+    sell_spmv_padded,
+)
 from .formats import BSR, COO, CSR, DIA, ELL, JDS, SELL, HybridDIA
 
 # ---------------------------------------------------------------------------
-# per-container preprocessing cache
-# ---------------------------------------------------------------------------
-
-#: build counters per precompute kind, for regression tests ("preprocessing
-#: happens once per matrix", the plan layer's contract).
-_PRECOMPUTE_STATS = {
-    "csr_row_ids": 0,
-    "bsr_block_row_ids": 0,
-    "jds_segment_ids": 0,
-    "sell_padded_views": 0,
-    "dia_gather_tables": 0,
-}
-
-
-def precompute_stats() -> dict:
-    """Copy of the host-preprocessing build counters."""
-    return dict(_PRECOMPUTE_STATS)
-
-
-def _cached(m, attr: str, stat: str, build):
-    """Build-once metadata cached on the frozen container (not a pytree
-    field, so jit boundaries and tree_map never see it).
-
-    Builders must return concrete *numpy* arrays: the first SpMV call may
-    happen inside a jit trace, and caching a ``jnp`` value created there
-    would leak a tracer into later traces.  Device placement happens at the
-    use site (a constant-embed under jit, or once at plan compile time).
-    """
-    cached = getattr(m, attr, None)
-    if cached is None:
-        _PRECOMPUTE_STATS[stat] += 1
-        cached = build()
-        object.__setattr__(m, attr, cached)
-    return cached
-
-
-def _is_traced(a) -> bool:
-    return isinstance(a, jax.core.Tracer)
-
-
-# ---------------------------------------------------------------------------
-# CSR  (paper's CRS: inner loop = sparse scalar product, 10 B/F)
-# ---------------------------------------------------------------------------
-
-
-def csr_row_ids(m: CSR) -> jnp.ndarray:
-    """Expand row_ptr to one row id per nnz.
-
-    Host-computed once and cached on the container; falls back to the
-    on-device searchsorted expansion when the container holds tracers
-    (matrix passed as a jit argument instead of a closure constant).
-    """
-    if _is_traced(m.row_ptr):
-        nnz = int(np.asarray(m.col_idx.shape)[0]) if not _is_traced(m.col_idx) else m.col_idx.shape[0]
-        return (
-            jnp.searchsorted(
-                jnp.asarray(m.row_ptr), jnp.arange(nnz, dtype=jnp.int32), side="right"
-            ).astype(jnp.int32)
-            - 1
-        )
-
-    def build():
-        rp = np.asarray(m.row_ptr, dtype=np.int64)
-        return np.repeat(np.arange(len(rp) - 1, dtype=np.int32), np.diff(rp))
-
-    return _cached(m, "_row_ids", "csr_row_ids", build)
-
-
-def csr_spmv(m: CSR, x: jnp.ndarray) -> jnp.ndarray:
-    """Gather + segment-sum formulation of the CRS kernel."""
-    row_ids = csr_row_ids(m)
-    prod = jnp.asarray(m.val) * jnp.take(x, jnp.asarray(m.col_idx), axis=0)
-    return jax.ops.segment_sum(prod, row_ids, num_segments=m.shape[0])
-
-
-def csr_spmv_searchsorted(m: CSR, x: jnp.ndarray) -> jnp.ndarray:
-    """Legacy CRS formulation: the row-id expansion runs on device on every
-    call (an O(nnz log n) searchsorted the cached path amortizes away).
-    Kept as the naive baseline for plan-vs-naive benchmarks."""
-    nnz = int(np.asarray(m.col_idx).shape[0])
-    row_ids = (
-        jnp.searchsorted(
-            jnp.asarray(m.row_ptr), jnp.arange(nnz, dtype=jnp.int32), side="right"
-        ).astype(jnp.int32)
-        - 1
-    )
-    prod = jnp.asarray(m.val) * jnp.take(x, jnp.asarray(m.col_idx), axis=0)
-    return jax.ops.segment_sum(prod, row_ids, num_segments=m.shape[0])
-
-
-def csr_spmm(m: CSR, X: jnp.ndarray) -> jnp.ndarray:
-    row_ids = csr_row_ids(m)
-    prod = jnp.asarray(m.val)[:, None] * jnp.take(X, jnp.asarray(m.col_idx), axis=0)
-    return jax.ops.segment_sum(prod, row_ids, num_segments=m.shape[0])
-
-
-def coo_spmv(m: COO, x: jnp.ndarray) -> jnp.ndarray:
-    prod = jnp.asarray(m.vals) * jnp.take(x, jnp.asarray(m.cols), axis=0)
-    return jax.ops.segment_sum(prod, jnp.asarray(m.rows), num_segments=m.shape[0])
-
-
-def coo_spmm(m: COO, X: jnp.ndarray) -> jnp.ndarray:
-    prod = jnp.asarray(m.vals)[:, None] * jnp.take(X, jnp.asarray(m.cols), axis=0)
-    return jax.ops.segment_sum(prod, jnp.asarray(m.rows), num_segments=m.shape[0])
-
-
-# ---------------------------------------------------------------------------
-# ELL  (padded jagged; the vectorizable building block)
-# ---------------------------------------------------------------------------
-
-
-def ell_spmv(m: ELL, x: jnp.ndarray) -> jnp.ndarray:
-    """Row-major ELL: one gather of shape (M, W), one reduction over W."""
-    gathered = jnp.take(x, jnp.asarray(m.col_idx), axis=0)  # (M, W)
-    return jnp.sum(jnp.asarray(m.val) * gathered, axis=1)
-
-
-def ell_spmm(m: ELL, X: jnp.ndarray) -> jnp.ndarray:
-    gathered = jnp.take(X, jnp.asarray(m.col_idx), axis=0)  # (M, W, K)
-    return jnp.einsum("mw,mwk->mk", jnp.asarray(m.val), gathered)
-
-
-# ---------------------------------------------------------------------------
-# JDS  (paper's jagged diagonals: inner loop = sparse vector triad, 18 B/F)
-# ---------------------------------------------------------------------------
-
-
-def jds_segment_ids(m: JDS) -> jnp.ndarray:
-    """Permuted-row id per stored element: within jagged diagonal d the k-th
-    entry belongs to permuted row k.  Built host-side once and cached."""
-
-    def build():
-        jp = np.asarray(m.jd_ptr, dtype=np.int64)
-        lens = np.diff(jp)
-        ids = np.arange(int(jp[-1]), dtype=np.int64) - np.repeat(jp[:-1], lens)
-        return ids.astype(np.int32)
-
-    return _cached(m, "_segment_ids", "jds_segment_ids", build)
-
-
-def jds_spmv(m: JDS, x: jnp.ndarray) -> jnp.ndarray:
-    """Vectorized JDS: one gather + one segment-sum over the precomputed
-    permuted-row table, then the perm-scatter back to original order."""
-    seg = jds_segment_ids(m)
-    n_rows = m.shape[0]
-    n_perm = int(np.asarray(m.perm).shape[0])
-    prod = jnp.asarray(m.val) * jnp.take(x, jnp.asarray(m.col_idx), axis=0)
-    y_perm = jax.ops.segment_sum(prod, seg, num_segments=n_perm)
-    y = jnp.zeros(n_rows, dtype=y_perm.dtype)
-    return y.at[jnp.asarray(m.perm)[:n_rows]].set(y_perm[:n_rows])
-
-
-def jds_spmm(m: JDS, X: jnp.ndarray) -> jnp.ndarray:
-    seg = jds_segment_ids(m)
-    n_rows = m.shape[0]
-    n_perm = int(np.asarray(m.perm).shape[0])
-    prod = jnp.asarray(m.val)[:, None] * jnp.take(X, jnp.asarray(m.col_idx), axis=0)
-    Y_perm = jax.ops.segment_sum(prod, seg, num_segments=n_perm)
-    Y = jnp.zeros((n_rows, X.shape[1]), dtype=Y_perm.dtype)
-    return Y.at[jnp.asarray(m.perm)[:n_rows]].set(Y_perm[:n_rows])
-
-
-def jds_spmv_loop(m: JDS, x: jnp.ndarray) -> jnp.ndarray:
-    """Faithful JDS traversal: one pass per jagged diagonal (paper's outer
-    loop).  Kept as the paper-fidelity oracle; traces O(n_diags) segments."""
-    jp = np.asarray(m.jd_ptr)
-    n_rows = m.shape[0]
-    n_pad = int(np.asarray(m.perm).shape[0])
-    y_perm = jnp.zeros(n_pad, dtype=jnp.result_type(jnp.asarray(m.val).dtype, x.dtype))
-    val = jnp.asarray(m.val)
-    ci = jnp.asarray(m.col_idx)
-    for d in range(m.n_diags):
-        lo, hi = int(jp[d]), int(jp[d + 1])
-        seg_val = val[lo:hi]
-        seg_x = jnp.take(x, ci[lo:hi], axis=0)
-        y_perm = y_perm.at[: hi - lo].add(seg_val * seg_x)
-    y = jnp.zeros(n_rows, dtype=y_perm.dtype)
-    return y.at[jnp.asarray(m.perm)[:n_rows]].set(y_perm[:n_rows])
-
-
-# ---------------------------------------------------------------------------
-# SELL-C-sigma  (blocked JDS: NBJDS/RBJDS/SOJDS unified)
-# ---------------------------------------------------------------------------
-
-
-def sell_padded_views(m: SELL, pad_width_to: int = 1):
-    """Fully padded (nc, W, C) numpy views + per-chunk widths, built once and
-    cached per ``pad_width_to`` (the Pallas width-block granularity)."""
-
-    return _cached(m, f"_padded_views_{pad_width_to}", "sell_padded_views",
-                   lambda: m.padded_views(pad_width_to=pad_width_to))
-
-
-def sell_spmv(m: SELL, x: jnp.ndarray) -> jnp.ndarray:
-    """Vectorized SELL via the cached padded 3-D views: one gather + one
-    reduction over W + one perm-scatter (no host loop over chunks)."""
-    col3, val3, _ = sell_padded_views(m)
-    return sell_spmv_padded(jnp.asarray(col3), jnp.asarray(val3),
-                            jnp.asarray(m.perm), x, m.shape[0])
-
-
-def sell_spmm_padded(col3: jnp.ndarray, val3: jnp.ndarray, perm: jnp.ndarray,
-                     X: jnp.ndarray, n_rows: int) -> jnp.ndarray:
-    """Multi-vector SELL on the padded (nc, W, C) views (any padding works:
-    extra zero columns contribute nothing)."""
-    gathered = jnp.take(X, col3, axis=0)  # (nc, W, C, K)
-    tiles = jnp.einsum("nwc,nwck->nck", val3, gathered)  # (nc, C, K)
-    Y = jnp.zeros((n_rows + 1, X.shape[1]), dtype=tiles.dtype)
-    Y = Y.at[perm.reshape(-1)].add(tiles.reshape(-1, X.shape[1]))
-    return Y[:n_rows]
-
-
-def sell_spmm(m: SELL, X: jnp.ndarray) -> jnp.ndarray:
-    col3, val3, _ = sell_padded_views(m)
-    return sell_spmm_padded(jnp.asarray(col3), jnp.asarray(val3),
-                            jnp.asarray(m.perm), X, m.shape[0])
-
-
-def sell_spmv_loop(m: SELL, x: jnp.ndarray) -> jnp.ndarray:
-    """Chunk-local jagged-diagonal traversal (host loop over chunks).
-
-    Each chunk is a (width_c, C) column-major slab; the C-row result tile
-    stays "in cache" (a register tile on TPU) for the whole chunk — exactly
-    the paper's NBJDS blocking argument.  Kept as the paper-fidelity oracle;
-    traces O(n_chunks) scatter-adds.
-    """
-    cp = np.asarray(m.chunk_ptr)
-    cw = np.asarray(m.chunk_width)
-    C = m.C
-    n_rows = m.shape[0]
-    val = jnp.asarray(m.val)
-    ci = jnp.asarray(m.col_idx)
-    perm = jnp.asarray(m.perm)
-    y = jnp.zeros(n_rows + 1, dtype=jnp.result_type(val.dtype, x.dtype))
-    for c in range(m.n_chunks):
-        w = int(cw[c])
-        lo, hi = int(cp[c]), int(cp[c + 1])
-        slab_v = val[lo:hi].reshape(w, C)
-        slab_x = jnp.take(x, ci[lo:hi], axis=0).reshape(w, C)
-        tile = jnp.sum(slab_v * slab_x, axis=0)  # (C,)
-        rows = perm[c * C : (c + 1) * C]  # original row ids; pad rows -> n_rows
-        y = y.at[rows].add(tile)
-    return y[:n_rows]
-
-
-def sell_spmv_padded(col3: jnp.ndarray, val3: jnp.ndarray, perm: jnp.ndarray,
-                     x: jnp.ndarray, n_rows: int) -> jnp.ndarray:
-    """Vectorised SELL on the fully padded (n_chunks, W, C) views.
-
-    This is the shape the Pallas kernel consumes; also a fast XLA fallback.
-    """
-    gathered = jnp.take(x, col3, axis=0)  # (nc, W, C)
-    tiles = jnp.sum(val3 * gathered, axis=1)  # (nc, C)
-    y = jnp.zeros(n_rows + 1, dtype=tiles.dtype)
-    y = y.at[perm.reshape(-1)].add(tiles.reshape(-1))
-    return y[:n_rows]
-
-
-# ---------------------------------------------------------------------------
-# BSR  (MXU-native dense blocks)
-# ---------------------------------------------------------------------------
-
-
-def bsr_block_row_ids(m: BSR) -> jnp.ndarray:
-    if _is_traced(m.block_row_ptr):
-        nb = m.n_blocks
-        return (
-            jnp.searchsorted(
-                jnp.asarray(m.block_row_ptr), jnp.arange(nb, dtype=jnp.int32), side="right"
-            ).astype(jnp.int32)
-            - 1
-        )
-
-    def build():
-        brp = np.asarray(m.block_row_ptr, dtype=np.int64)
-        return np.repeat(np.arange(len(brp) - 1, dtype=np.int32), np.diff(brp))
-
-    return _cached(m, "_block_row_ids", "bsr_block_row_ids", build)
-
-
-def bsr_spmv(m: BSR, x: jnp.ndarray) -> jnp.ndarray:
-    bm, bn = m.block_shape
-    blocks = jnp.asarray(m.blocks)  # (nb, bm, bn)
-    bci = jnp.asarray(m.block_col_idx)
-    xb = jnp.take(x.reshape(-1, bn), bci, axis=0)  # (nb, bn)
-    partial = jnp.einsum("kmn,kn->km", blocks, xb)  # (nb, bm)
-    rows = bsr_block_row_ids(m)
-    ybl = jax.ops.segment_sum(partial, rows, num_segments=m.shape[0] // bm)
-    return ybl.reshape(-1)
-
-
-def bsr_spmm(m: BSR, X: jnp.ndarray) -> jnp.ndarray:
-    """Block-sparse matrix times dense matrix: each block feeds the MXU."""
-    bm, bn = m.block_shape
-    blocks = jnp.asarray(m.blocks)
-    bci = jnp.asarray(m.block_col_idx)
-    Xb = jnp.take(X.reshape(-1, bn, X.shape[1]), bci, axis=0)  # (nb, bn, K)
-    partial = jnp.einsum("kmn,knj->kmj", blocks, Xb)  # (nb, bm, K)
-    rows = bsr_block_row_ids(m)
-    ybl = jax.ops.segment_sum(partial, rows, num_segments=m.shape[0] // bm)
-    return ybl.reshape(m.shape[0], X.shape[1])
-
-
-# ---------------------------------------------------------------------------
-# DIA  (dense secondary diagonals: stride-1, zero index traffic)
-# ---------------------------------------------------------------------------
-
-
-def dia_gather_tables(m: DIA):
-    """Padded shift-gather tables: idx[k, i] = i + offsets[k] clipped into
-    range, data masked to zero where the shift runs off the matrix.  One
-    (nd, n) gather then replaces the per-diagonal dynamic_slice chain."""
-
-    def build():
-        n, ncols = m.shape
-        offs = np.asarray(m.offsets, dtype=np.int64)
-        i = np.arange(n, dtype=np.int64)
-        idx = i[None, :] + offs[:, None]                      # (nd, n)
-        valid = (idx >= 0) & (idx < ncols)
-        idx = np.clip(idx, 0, max(0, ncols - 1))
-        data = np.asarray(m.data)[:, :n] * valid
-        return idx.astype(np.int32), data
-
-    return _cached(m, "_gather_tables", "dia_gather_tables", build)
-
-
-def dia_spmv(m: DIA, x: jnp.ndarray) -> jnp.ndarray:
-    """Vectorized DIA: one shift-gather of shape (nd, n), one reduction."""
-    idx, data = dia_gather_tables(m)
-    if data.shape[0] == 0:
-        return jnp.zeros(m.shape[0], dtype=x.dtype)
-    return jnp.sum(jnp.asarray(data) * jnp.take(x, jnp.asarray(idx), axis=0), axis=0)
-
-
-def dia_spmm(m: DIA, X: jnp.ndarray) -> jnp.ndarray:
-    idx, data = dia_gather_tables(m)
-    if data.shape[0] == 0:
-        return jnp.zeros((m.shape[0], X.shape[1]), dtype=X.dtype)
-    return jnp.einsum("kn,knj->nj", jnp.asarray(data),
-                      jnp.take(X, jnp.asarray(idx), axis=0))
-
-
-def dia_spmv_loop(m: DIA, x: jnp.ndarray) -> jnp.ndarray:
-    """One shifted stride-1 read per stored diagonal (static offsets) — the
-    per-diagonal dynamic_slice chain, kept as the paper-fidelity oracle."""
-    n, ncols = m.shape
-    offsets = np.asarray(m.offsets)
-    data = jnp.asarray(m.data)
-    y = jnp.zeros(n, dtype=jnp.result_type(data.dtype, x.dtype))
-    for k, off in enumerate(offsets.tolist()):
-        lo = max(0, -off)
-        hi = min(n, ncols - off)
-        if hi <= lo:
-            continue
-        y = y.at[lo:hi].add(data[k, lo:hi] * jax.lax.dynamic_slice(x, (lo + off,), (hi - lo,)))
-    return y
-
-
-def hybrid_spmv(m: HybridDIA, x: jnp.ndarray) -> jnp.ndarray:
-    return dia_spmv(m.dia, x) + sell_spmv(m.rest, x)
-
-
-def hybrid_spmv_loop(m: HybridDIA, x: jnp.ndarray) -> jnp.ndarray:
-    return dia_spmv_loop(m.dia, x) + sell_spmv_loop(m.rest, x)
-
-
-def hybrid_spmm(m: HybridDIA, X: jnp.ndarray) -> jnp.ndarray:
-    return dia_spmm(m.dia, X) + sell_spmm(m.rest, X)
-
-
-# ---------------------------------------------------------------------------
-# dispatch
+# type dispatch (format container -> default XLA formulation)
 # ---------------------------------------------------------------------------
 
 _DISPATCH = {
@@ -433,7 +85,7 @@ _DISPATCH_MM = {
 }
 
 
-def spmv(matrix, x: jnp.ndarray) -> jnp.ndarray:
+def spmv(matrix, x) -> "jax.Array":
     """Format-dispatching SpMV (reference path)."""
     fn = _DISPATCH.get(type(matrix))
     if fn is None:
@@ -441,7 +93,7 @@ def spmv(matrix, x: jnp.ndarray) -> jnp.ndarray:
     return fn(matrix, x)
 
 
-def spmm(matrix, X: jnp.ndarray) -> jnp.ndarray:
+def spmm(matrix, X) -> "jax.Array":
     """Format-dispatching multi-vector SpMV: X (N, K) -> Y (M, K)."""
     fn = _DISPATCH_MM.get(type(matrix))
     if fn is None:
@@ -461,7 +113,7 @@ _DISPATCH_NAIVE = {
 }
 
 
-def naive_spmv(matrix, x: jnp.ndarray) -> jnp.ndarray:
+def naive_spmv(matrix, x) -> "jax.Array":
     """SpMV via the legacy per-call formulations (benchmark baseline)."""
     fn = _DISPATCH_NAIVE.get(type(matrix))
     if fn is None:

@@ -1,7 +1,38 @@
-"""Pallas TPU kernels for the SpMV hot-spots (+ grouped MoE GEMM).
+"""Kernel implementations + the unified backend registry.
 
-Each kernel module pairs with an oracle in ``ref.py``; ``ops.py`` is the
-public dispatch layer.  Kernels are written for TPU (pl.pallas_call +
-BlockSpec VMEM tiling) and validated in interpret mode on CPU.
+Per-format modules (``coo``/``csr``/``ell``/``jds``/``sell``/``dia``/
+``bsr``/``hybrid``/``slab``) hold the XLA formulations and the
+paper-fidelity loop oracles; ``*_spmv.py``/``bsr_spmm.py`` hold the Pallas
+TPU kernels (validated in interpret mode on CPU); ``ref.py`` keeps the
+array-level oracles the kernel tests sweep against.  Every implementation
+registers with ``registry`` under a ``(format, op, backend)`` key — the
+plan, distributed-plan and serving layers dispatch exclusively through that
+table (``registry.select_backend`` is ``backend="auto"``).
 """
-from . import bsr_spmm, dia_spmv, gather_bench, moe_gemm, ops, ref, sell_spmv  # noqa: F401
+# Initialize repro.core first: core.spmv re-exports the per-format kernel
+# modules below, so entering through `import repro.kernels` must run the
+# core package init (formats, perfmodel, spmv) before this package's own
+# module list — otherwise core.spmv would see half-initialized siblings.
+from .. import core as _core  # noqa: F401
+
+from . import (  # noqa: F401,E402
+    bsr,
+    bsr_spmm,
+    cache,
+    coo,
+    csr,
+    csr_spmv,
+    dia,
+    dia_spmv,
+    ell,
+    gather_bench,
+    hybrid,
+    jds,
+    moe_gemm,
+    ops,
+    ref,
+    registry,
+    sell,
+    sell_spmv,
+    slab,
+)

@@ -1,0 +1,157 @@
+"""BSR kernels (MXU-native dense blocks).
+
+Registry entries: ``(bsr, {spmv, spmm}, {xla, loop_reference, pallas,
+pallas_interpret})``.  The Pallas entries wrap the BELL scalar-prefetch
+kernel of ``bsr_spmm.py`` (SpMV rides the SpMM kernel through a lane-padded
+column panel, as the roofline model charges it).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.formats import BSR
+from . import bsr_spmm as KP
+from .cache import cached, is_traced, register_stat
+from .registry import CompiledKernel, KernelContext, register_kernel
+
+register_stat("bsr_block_row_ids")
+register_stat("bsr_bell_pack")
+
+
+def bsr_block_row_ids(m: BSR) -> jnp.ndarray:
+    if is_traced(m.block_row_ptr):
+        nb = m.n_blocks
+        return (
+            jnp.searchsorted(
+                jnp.asarray(m.block_row_ptr), jnp.arange(nb, dtype=jnp.int32), side="right"
+            ).astype(jnp.int32)
+            - 1
+        )
+
+    def build():
+        brp = np.asarray(m.block_row_ptr, dtype=np.int64)
+        return np.repeat(np.arange(len(brp) - 1, dtype=np.int32), np.diff(brp))
+
+    return cached(m, "_block_row_ids", "bsr_block_row_ids", build)
+
+
+def bsr_spmv(m: BSR, x: jnp.ndarray) -> jnp.ndarray:
+    bm, bn = m.block_shape
+    blocks = jnp.asarray(m.blocks)  # (nb, bm, bn)
+    bci = jnp.asarray(m.block_col_idx)
+    xb = jnp.take(x.reshape(-1, bn), bci, axis=0)  # (nb, bn)
+    partial = jnp.einsum("kmn,kn->km", blocks, xb)  # (nb, bm)
+    rows = bsr_block_row_ids(m)
+    ybl = jax.ops.segment_sum(partial, rows, num_segments=m.shape[0] // bm)
+    return ybl.reshape(-1)
+
+
+def bsr_spmm(m: BSR, X: jnp.ndarray) -> jnp.ndarray:
+    """Block-sparse matrix times dense matrix: each block feeds the MXU."""
+    bm, bn = m.block_shape
+    blocks = jnp.asarray(m.blocks)
+    bci = jnp.asarray(m.block_col_idx)
+    Xb = jnp.take(X.reshape(-1, bn, X.shape[1]), bci, axis=0)  # (nb, bn, K)
+    partial = jnp.einsum("kmn,knj->kmj", blocks, Xb)  # (nb, bm, K)
+    rows = bsr_block_row_ids(m)
+    ybl = jax.ops.segment_sum(partial, rows, num_segments=m.shape[0] // bm)
+    return ybl.reshape(m.shape[0], X.shape[1])
+
+
+def bell_pack(m: BSR):
+    """BELL (block-ELL) host-side pack, cached once per container."""
+    return cached(m, "_bell_pack", "bsr_bell_pack", lambda: KP.bsr_to_bell(m))
+
+
+def bsr_spmm_slotloop(m: BSR, X: jnp.ndarray) -> jnp.ndarray:
+    """Loop-reference oracle: one pass per BELL block-column slot (the
+    block-granular jagged-diagonal traversal; padded slots are zero)."""
+    bcols, slab = bell_pack(m)
+    bm, bk = m.block_shape
+    nbr, nbpp = bcols.shape
+    Xb = X.reshape(-1, bk, X.shape[1])
+    Y = jnp.zeros((nbr, bm, X.shape[1]),
+                  dtype=jnp.result_type(np.asarray(slab).dtype, X.dtype))
+    bc = jnp.asarray(bcols)
+    sl = jnp.asarray(slab)
+    for j in range(nbpp):
+        Xj = jnp.take(Xb, bc[:, j], axis=0)              # (nbr, bk, K)
+        Y = Y + jnp.einsum("rmk,rkj->rmj", sl[:, j], Xj)
+    return Y.reshape(nbr * bm, X.shape[1])[: m.shape[0]]
+
+
+# --- registry entries -------------------------------------------------------
+
+
+@register_kernel("bsr", "spmv", "xla",
+                 description="block gather + per-block einsum + segment-sum")
+def _build_spmv(m: BSR, ctx) -> CompiledKernel:
+    bsr_block_row_ids(m)  # warm the build-once cache host-side
+    return CompiledKernel(lambda x: bsr_spmv(m, x), "xla")
+
+
+@register_kernel("bsr", "spmm", "xla",
+                 description="multi-vector block einsum + segment-sum")
+def _build_spmm(m: BSR, ctx) -> CompiledKernel:
+    bsr_block_row_ids(m)
+    return CompiledKernel(lambda X: bsr_spmm(m, X), "xla")
+
+
+@register_kernel("bsr", "spmv", "loop_reference", auto=False,
+                 description="BELL slot-loop oracle (single column)")
+def _build_spmv_loop(m: BSR, ctx) -> CompiledKernel:
+    return CompiledKernel(lambda x: bsr_spmm_slotloop(m, x[:, None])[:, 0], "loop")
+
+
+@register_kernel("bsr", "spmm", "loop_reference", auto=False,
+                 description="BELL slot-loop oracle")
+def _build_spmm_loop(m: BSR, ctx) -> CompiledKernel:
+    return CompiledKernel(lambda X: bsr_spmm_slotloop(m, X), "loop")
+
+
+def _build_bell_spmm(m: BSR, ctx: KernelContext, interpret: bool) -> CompiledKernel:
+    bcols, slab = bell_pack(m)
+    bc, bl = jnp.asarray(bcols), jnp.asarray(slab)  # device-put once
+    M = m.shape[0]
+    label = "pallas-interpret" if interpret else "pallas"
+
+    def fn(X):
+        return KP.bell_spmm_arrays(bc, bl, X, interpret=interpret)[:M]
+
+    return CompiledKernel(fn, label)
+
+
+@register_kernel("bsr", "spmm", "pallas",
+                 description="BELL scalar-prefetch MXU kernel")
+def _build_bell_compiled(m: BSR, ctx) -> CompiledKernel:
+    return _build_bell_spmm(m, ctx, interpret=False)
+
+
+@register_kernel("bsr", "spmm", "pallas_interpret",
+                 description="BELL scalar-prefetch kernel via the interpreter")
+def _build_bell_interpret(m: BSR, ctx) -> CompiledKernel:
+    return _build_bell_spmm(m, ctx, interpret=True)
+
+
+def _build_bell_spmv(m: BSR, ctx: KernelContext, interpret: bool) -> CompiledKernel:
+    ck = _build_bell_spmm(m, ctx, interpret)
+    lane = 8  # thin N=1 is MXU-hostile; the model charges the padded panel
+
+    def fn(x):
+        return ck.fn(jnp.tile(x[:, None], (1, lane)))[:, 0]
+
+    return CompiledKernel(fn, ck.label)
+
+
+@register_kernel("bsr", "spmv", "pallas",
+                 description="BELL kernel over a lane-padded column panel")
+def _build_bell_spmv_compiled(m: BSR, ctx) -> CompiledKernel:
+    return _build_bell_spmv(m, ctx, interpret=False)
+
+
+@register_kernel("bsr", "spmv", "pallas_interpret",
+                 description="lane-padded BELL panel via the interpreter")
+def _build_bell_spmv_interpret(m: BSR, ctx) -> CompiledKernel:
+    return _build_bell_spmv(m, ctx, interpret=True)

@@ -1,0 +1,63 @@
+"""Build-once host-preprocessing cache shared by every kernel module.
+
+Host-derived metadata (CSR row ids, JDS segment tables, SELL padded views,
+DIA shift-gather tables, row-split slabs) is computed **once per container**
+and pinned on the (frozen) dataclass via ``object.__setattr__`` — repeated
+SpMV calls on the same matrix never redo preprocessing.  ``precompute_stats``
+exposes the build counters so tests can assert no recomputation (the plan
+layer's contract).
+"""
+from __future__ import annotations
+
+import jax
+
+#: build counters per precompute kind, for regression tests ("preprocessing
+#: happens once per matrix").  Kernel modules add their own keys at import.
+_PRECOMPUTE_STATS: dict[str, int] = {}
+
+
+def register_stat(name: str) -> str:
+    """Declare a build counter (idempotent); returns the name for reuse."""
+    _PRECOMPUTE_STATS.setdefault(name, 0)
+    return name
+
+
+def precompute_stats() -> dict:
+    """Copy of the host-preprocessing build counters."""
+    return dict(_PRECOMPUTE_STATS)
+
+
+def cached(m, attr: str, stat: str, build):
+    """Build-once metadata cached on the frozen container (not a pytree
+    field, so jit boundaries and tree_map never see it).
+
+    Builders must return concrete *numpy* arrays: the first SpMV call may
+    happen inside a jit trace, and caching a ``jnp`` value created there
+    would leak a tracer into later traces.  Device placement happens at the
+    use site (a constant-embed under jit, or once at plan compile time).
+    """
+    out = getattr(m, attr, None)
+    if out is None:
+        _PRECOMPUTE_STATS[stat] = _PRECOMPUTE_STATS.get(stat, 0) + 1
+        out = build()
+        object.__setattr__(m, attr, out)
+    return out
+
+
+def is_traced(a) -> bool:
+    return isinstance(a, jax.core.Tracer)
+
+
+def spmm_by_columns(spmv_fn):
+    """Lift an SpMV closure to the SpMM contract column by column.
+
+    The loop-reference oracle for multi-vector ops: K separate SpMVs,
+    stacked.  Obviously correct, and independent of every fused SpMM
+    formulation it is used to validate.
+    """
+    import jax.numpy as jnp
+
+    def f(X):
+        return jnp.stack([spmv_fn(X[:, j]) for j in range(X.shape[1])], axis=1)
+
+    return f

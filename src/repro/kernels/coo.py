@@ -1,0 +1,58 @@
+"""COO kernels: the interchange format's gather + segment-sum formulation.
+
+Registry entries: ``(coo, {spmv, spmm}, {xla, loop_reference})``.  The
+loop-reference oracle uses an index-scatter (``.at[rows].add``) instead of
+``segment_sum`` so the two entries share no reduction code path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core.formats import COO
+from .cache import spmm_by_columns
+from .registry import CompiledKernel, register_kernel
+
+
+def coo_spmv(m: COO, x: jnp.ndarray) -> jnp.ndarray:
+    prod = jnp.asarray(m.vals) * jnp.take(x, jnp.asarray(m.cols), axis=0)
+    return jax.ops.segment_sum(prod, jnp.asarray(m.rows), num_segments=m.shape[0])
+
+
+def coo_spmm(m: COO, X: jnp.ndarray) -> jnp.ndarray:
+    prod = jnp.asarray(m.vals)[:, None] * jnp.take(X, jnp.asarray(m.cols), axis=0)
+    return jax.ops.segment_sum(prod, jnp.asarray(m.rows), num_segments=m.shape[0])
+
+
+def coo_spmv_scatter(m: COO, x: jnp.ndarray) -> jnp.ndarray:
+    """Scatter-add formulation — the loop-reference oracle."""
+    prod = jnp.asarray(m.vals) * jnp.take(x, jnp.asarray(m.cols), axis=0)
+    y = jnp.zeros(m.shape[0], dtype=prod.dtype)
+    return y.at[jnp.asarray(m.rows)].add(prod)
+
+
+# --- registry entries -------------------------------------------------------
+
+
+@register_kernel("coo", "spmv", "xla",
+                 description="gather + segment-sum over explicit row ids")
+def _build_spmv(m: COO, ctx) -> CompiledKernel:
+    return CompiledKernel(lambda x: coo_spmv(m, x), "xla")
+
+
+@register_kernel("coo", "spmm", "xla",
+                 description="multi-vector gather + segment-sum")
+def _build_spmm(m: COO, ctx) -> CompiledKernel:
+    return CompiledKernel(lambda X: coo_spmm(m, X), "xla")
+
+
+@register_kernel("coo", "spmv", "loop_reference", auto=False,
+                 description="independent scatter-add oracle")
+def _build_spmv_loop(m: COO, ctx) -> CompiledKernel:
+    return CompiledKernel(lambda x: coo_spmv_scatter(m, x), "loop")
+
+
+@register_kernel("coo", "spmm", "loop_reference", auto=False,
+                 description="column-by-column scatter-add oracle")
+def _build_spmm_loop(m: COO, ctx) -> CompiledKernel:
+    return CompiledKernel(spmm_by_columns(lambda x: coo_spmv_scatter(m, x)), "loop")

@@ -1,0 +1,169 @@
+"""CSR kernels (paper's CRS: inner loop = sparse scalar product, 10 B/F).
+
+Registry entries: ``(csr, {spmv, spmm}, {xla, loop_reference, pallas,
+pallas_interpret})`` — the Pallas backend is the row-split kernel of
+``csr_spmv.py``.  The loop-reference oracle is the legacy per-call
+formulation (on-device searchsorted row-id expansion), independent of the
+cached-row-ids fast path it validates.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.formats import CSR
+from . import csr_spmv as KP
+from .cache import cached, is_traced, register_stat, spmm_by_columns
+from .registry import CompiledKernel, KernelContext, register_kernel
+
+register_stat("csr_row_ids")
+
+
+def csr_row_ids(m: CSR) -> jnp.ndarray:
+    """Expand row_ptr to one row id per nnz.
+
+    Host-computed once and cached on the container; falls back to the
+    on-device searchsorted expansion when the container holds tracers
+    (matrix passed as a jit argument instead of a closure constant).
+    """
+    if is_traced(m.row_ptr):
+        nnz = int(np.asarray(m.col_idx.shape)[0]) if not is_traced(m.col_idx) else m.col_idx.shape[0]
+        return (
+            jnp.searchsorted(
+                jnp.asarray(m.row_ptr), jnp.arange(nnz, dtype=jnp.int32), side="right"
+            ).astype(jnp.int32)
+            - 1
+        )
+
+    def build():
+        rp = np.asarray(m.row_ptr, dtype=np.int64)
+        return np.repeat(np.arange(len(rp) - 1, dtype=np.int32), np.diff(rp))
+
+    return cached(m, "_row_ids", "csr_row_ids", build)
+
+
+def csr_spmv(m: CSR, x: jnp.ndarray) -> jnp.ndarray:
+    """Gather + segment-sum formulation of the CRS kernel."""
+    row_ids = csr_row_ids(m)
+    prod = jnp.asarray(m.val) * jnp.take(x, jnp.asarray(m.col_idx), axis=0)
+    return jax.ops.segment_sum(prod, row_ids, num_segments=m.shape[0])
+
+
+def csr_spmv_searchsorted(m: CSR, x: jnp.ndarray) -> jnp.ndarray:
+    """Legacy CRS formulation: the row-id expansion runs on device on every
+    call (an O(nnz log n) searchsorted the cached path amortizes away).
+    Kept as the naive baseline for plan-vs-naive benchmarks and as the
+    registry's loop-reference oracle."""
+    nnz = int(np.asarray(m.col_idx).shape[0])
+    row_ids = (
+        jnp.searchsorted(
+            jnp.asarray(m.row_ptr), jnp.arange(nnz, dtype=jnp.int32), side="right"
+        ).astype(jnp.int32)
+        - 1
+    )
+    prod = jnp.asarray(m.val) * jnp.take(x, jnp.asarray(m.col_idx), axis=0)
+    return jax.ops.segment_sum(prod, row_ids, num_segments=m.shape[0])
+
+
+def csr_spmm(m: CSR, X: jnp.ndarray) -> jnp.ndarray:
+    row_ids = csr_row_ids(m)
+    prod = jnp.asarray(m.val)[:, None] * jnp.take(X, jnp.asarray(m.col_idx), axis=0)
+    return jax.ops.segment_sum(prod, row_ids, num_segments=m.shape[0])
+
+
+# --- registry entries -------------------------------------------------------
+
+
+@register_kernel("csr", "spmv", "xla",
+                 description="cached row-ids gather + segment-sum")
+def _build_spmv(m: CSR, ctx: KernelContext) -> CompiledKernel:
+    csr_row_ids(m)  # warm the build-once cache host-side, outside any trace
+    return CompiledKernel(lambda x: csr_spmv(m, x), "xla")
+
+
+@register_kernel("csr", "spmm", "xla",
+                 description="multi-vector cached row-ids segment-sum")
+def _build_spmm(m: CSR, ctx: KernelContext) -> CompiledKernel:
+    csr_row_ids(m)
+    return CompiledKernel(lambda X: csr_spmm(m, X), "xla")
+
+
+@register_kernel("csr", "spmv", "loop_reference", auto=False,
+                 description="per-call searchsorted row-id expansion (naive oracle)")
+def _build_spmv_loop(m: CSR, ctx: KernelContext) -> CompiledKernel:
+    return CompiledKernel(lambda x: csr_spmv_searchsorted(m, x), "loop")
+
+
+@register_kernel("csr", "spmm", "loop_reference", auto=False,
+                 description="column-by-column naive-oracle SpMVs")
+def _build_spmm_loop(m: CSR, ctx: KernelContext) -> CompiledKernel:
+    return CompiledKernel(spmm_by_columns(lambda x: csr_spmv_searchsorted(m, x)),
+                          "loop")
+
+
+def _rowsplit_geometry(ctx: KernelContext) -> tuple[int, int]:
+    R = ctx.width_block if ctx.width_block is not None else 8
+    tb = ctx.chunk_block if ctx.chunk_block is not None else 8
+    return R, tb
+
+
+def csr_rowsplit_autotune(m: CSR, ctx: KernelContext):
+    """Registry autotune hook: the slab geometry + its VMEM claim.
+
+    Uses the O(n) geometry computation — probing must stay cheap (auto
+    selection probes every entry, including ones that then lose), so the
+    full (T, E) slab build is deferred to the build hook.
+    """
+    R, tb = _rowsplit_geometry(ctx)
+    T, E = KP.csr_rowsplit_geometry(m, R=R, tile_block=tb)
+    vb = np.dtype(np.asarray(m.val).dtype).itemsize
+    claim = KP.rowsplit_vmem_bytes(tb, E, R, m.shape[1], vb)
+    return {"R": R, "tile_block": tb, "tiles": T, "tile_nnz_padded": E,
+            "vmem_bytes": int(claim),
+            "fits_vmem": claim <= int(ctx.chip.vmem_bytes * 0.5)}
+
+
+def _probe_rowsplit(m, ctx: KernelContext):
+    from .registry import CAP_OK, Capability, _probe_pallas_dtype
+    cap = _probe_pallas_dtype(m, ctx)
+    if not cap.ok or m is None:
+        return cap
+    tune = csr_rowsplit_autotune(m, ctx)
+    if not tune["fits_vmem"]:
+        return Capability(False, "row-split slab tiling exceeds the VMEM budget")
+    return CAP_OK
+
+
+def _build_rowsplit(m: CSR, ctx: KernelContext, interpret: bool) -> CompiledKernel:
+    R, tb = _rowsplit_geometry(ctx)
+    col2, val2, rid2, T, E = KP.csr_rowsplit_prepare(m, R=R, tile_block=tb)
+    col2, val2, rid2 = map(jnp.asarray, (col2, val2, rid2))  # device-put once
+    n = m.n_rows
+    tune = csr_rowsplit_autotune(m, ctx)
+
+    def fn(x):
+        y = KP.csr_rowsplit_arrays(col2, val2, rid2, x, R=R, tile_block=tb,
+                                   interpret=interpret)
+        return y.reshape(-1)[:n]
+
+    return CompiledKernel(fn, "pallas-interpret" if interpret else "pallas", tune)
+
+
+def _probe_rowsplit_compiled(m, ctx):
+    from .registry import compiled_probe
+    return compiled_probe(_probe_rowsplit)(m, ctx)
+
+
+@register_kernel("csr", "spmv", "pallas", probe=_probe_rowsplit_compiled,
+                 autotune=csr_rowsplit_autotune,
+                 description="row-split slab kernel, one-hot tile reduce")
+def _build_rowsplit_compiled(m: CSR, ctx: KernelContext) -> CompiledKernel:
+    return _build_rowsplit(m, ctx, interpret=False)
+
+
+@register_kernel("csr", "spmv", "pallas_interpret", probe=_probe_rowsplit,
+                 autotune=csr_rowsplit_autotune,
+                 description="row-split slab kernel via the interpreter")
+def _build_rowsplit_interpret(m: CSR, ctx: KernelContext) -> CompiledKernel:
+    return _build_rowsplit(m, ctx, interpret=True)

@@ -1,0 +1,162 @@
+"""DIA kernels (dense secondary diagonals: stride-1, zero index traffic).
+
+Registry entries: ``(dia, {spmv, spmm}, {xla, loop_reference})`` plus the
+Pallas SpMV (``dia_spmv.py``'s shifted-window kernel) under
+``{pallas, pallas_interpret}``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.formats import DIA
+from . import dia_spmv as KP
+from .cache import cached, register_stat, spmm_by_columns
+from .registry import (
+    CAP_OK,
+    Capability,
+    CompiledKernel,
+    KernelContext,
+    _probe_pallas_dtype,
+    compiled_probe,
+    register_kernel,
+)
+
+register_stat("dia_gather_tables")
+register_stat("dia_pallas_prepare")
+
+
+def dia_gather_tables(m: DIA):
+    """Padded shift-gather tables: idx[k, i] = i + offsets[k] clipped into
+    range, data masked to zero where the shift runs off the matrix.  One
+    (nd, n) gather then replaces the per-diagonal dynamic_slice chain."""
+
+    def build():
+        n, ncols = m.shape
+        offs = np.asarray(m.offsets, dtype=np.int64)
+        i = np.arange(n, dtype=np.int64)
+        idx = i[None, :] + offs[:, None]                      # (nd, n)
+        valid = (idx >= 0) & (idx < ncols)
+        idx = np.clip(idx, 0, max(0, ncols - 1))
+        data = np.asarray(m.data)[:, :n] * valid
+        return idx.astype(np.int32), data
+
+    return cached(m, "_gather_tables", "dia_gather_tables", build)
+
+
+def dia_spmv(m: DIA, x: jnp.ndarray) -> jnp.ndarray:
+    """Vectorized DIA: one shift-gather of shape (nd, n), one reduction."""
+    idx, data = dia_gather_tables(m)
+    if data.shape[0] == 0:
+        return jnp.zeros(m.shape[0], dtype=x.dtype)
+    return jnp.sum(jnp.asarray(data) * jnp.take(x, jnp.asarray(idx), axis=0), axis=0)
+
+
+def dia_spmm(m: DIA, X: jnp.ndarray) -> jnp.ndarray:
+    idx, data = dia_gather_tables(m)
+    if data.shape[0] == 0:
+        return jnp.zeros((m.shape[0], X.shape[1]), dtype=X.dtype)
+    return jnp.einsum("kn,knj->nj", jnp.asarray(data),
+                      jnp.take(X, jnp.asarray(idx), axis=0))
+
+
+def dia_spmv_loop(m: DIA, x: jnp.ndarray) -> jnp.ndarray:
+    """One shifted stride-1 read per stored diagonal (static offsets) — the
+    per-diagonal dynamic_slice chain, kept as the paper-fidelity oracle."""
+    n, ncols = m.shape
+    offsets = np.asarray(m.offsets)
+    data = jnp.asarray(m.data)
+    y = jnp.zeros(n, dtype=jnp.result_type(data.dtype, x.dtype))
+    for k, off in enumerate(offsets.tolist()):
+        lo = max(0, -off)
+        hi = min(n, ncols - off)
+        if hi <= lo:
+            continue
+        y = y.at[lo:hi].add(data[k, lo:hi] * jax.lax.dynamic_slice(x, (lo + off,), (hi - lo,)))
+    return y
+
+
+def dia_prepared(m: DIA, tile: int = 512):
+    """Host-side Pallas padding (``dia_spmv.dia_prepare``), cached once per
+    (container, tile)."""
+    return cached(m, f"_dia_prepared_{tile}", "dia_pallas_prepare",
+                  lambda: KP.dia_prepare(m, tile))
+
+
+# --- registry entries -------------------------------------------------------
+
+
+@register_kernel("dia", "spmv", "xla",
+                 description="one (nd, n) shift-gather + reduction")
+def _build_spmv(m: DIA, ctx) -> CompiledKernel:
+    dia_gather_tables(m)  # warm the build-once cache host-side
+    return CompiledKernel(lambda x: dia_spmv(m, x), "xla")
+
+
+@register_kernel("dia", "spmm", "xla",
+                 description="multi-vector shift-gather einsum")
+def _build_spmm(m: DIA, ctx) -> CompiledKernel:
+    dia_gather_tables(m)
+    return CompiledKernel(lambda X: dia_spmm(m, X), "xla")
+
+
+@register_kernel("dia", "spmv", "loop_reference", auto=False,
+                 description="per-diagonal dynamic_slice chain oracle")
+def _build_spmv_loop(m: DIA, ctx) -> CompiledKernel:
+    return CompiledKernel(lambda x: dia_spmv_loop(m, x), "loop")
+
+
+@register_kernel("dia", "spmm", "loop_reference", auto=False,
+                 description="column-by-column per-diagonal chains")
+def _build_spmm_loop(m: DIA, ctx) -> CompiledKernel:
+    return CompiledKernel(spmm_by_columns(lambda x: dia_spmv_loop(m, x)), "loop")
+
+
+def _probe_dia_pallas(m, ctx: KernelContext) -> Capability:
+    cap = _probe_pallas_dtype(m, ctx)
+    if not cap.ok or m is None:
+        return cap
+    nd = int(np.asarray(m.offsets).shape[0])
+    if nd == 0:
+        return Capability(False, "no stored diagonals (empty DIA)")
+    tile = ctx.tile or 512
+    n_pad = -(-m.shape[0] // tile) * tile
+    vb = int(np.dtype(np.asarray(m.data).dtype).itemsize)
+    claim = nd * tile * vb * 2 + (n_pad + 2 * n_pad) * vb
+    if claim > int(ctx.chip.vmem_bytes * 0.5):
+        return Capability(False, "diagonal slab + padded x exceed the VMEM budget")
+    return CAP_OK
+
+
+_probe_dia_pallas_compiled = compiled_probe(_probe_dia_pallas)
+
+
+def _build_dia_pallas(m: DIA, ctx: KernelContext, interpret: bool) -> CompiledKernel:
+    tile = ctx.tile or 512
+    data, pad0, pad1, offsets, n = dia_prepared(m, tile)
+    label = "pallas-interpret" if interpret else "pallas"
+    if not offsets:
+        return CompiledKernel(lambda x: jnp.zeros(n, dtype=x.dtype), label)
+    dataj = jnp.asarray(data)  # device-put once
+    n_pad = data.shape[1]
+
+    def fn(x):
+        x_pad = jnp.pad(x, (pad0, pad1 + (n_pad - n)))
+        y = KP.dia_spmv_arrays(dataj, x_pad, offsets=offsets, tile=tile,
+                               pad0=pad0, interpret=interpret)
+        return y[:n]
+
+    return CompiledKernel(fn, label)
+
+
+@register_kernel("dia", "spmv", "pallas", probe=_probe_dia_pallas_compiled,
+                 description="shifted-window tile kernel, static offsets")
+def _build_dia_pallas_compiled(m: DIA, ctx) -> CompiledKernel:
+    return _build_dia_pallas(m, ctx, interpret=False)
+
+
+@register_kernel("dia", "spmv", "pallas_interpret", probe=_probe_dia_pallas,
+                 description="shifted-window tile kernel via the interpreter")
+def _build_dia_pallas_interpret(m: DIA, ctx) -> CompiledKernel:
+    return _build_dia_pallas(m, ctx, interpret=True)

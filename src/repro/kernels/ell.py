@@ -1,0 +1,61 @@
+"""ELL kernels (padded jagged; the vectorizable building block).
+
+Registry entries: ``(ell, {spmv, spmm}, {xla, loop_reference})``.  The
+loop-reference oracle walks the padded width one jagged column at a time —
+the paper's JDS traversal restricted to the unpermuted padded layout.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..core.formats import ELL
+from .cache import spmm_by_columns
+from .registry import CompiledKernel, register_kernel
+
+
+def ell_spmv(m: ELL, x: jnp.ndarray) -> jnp.ndarray:
+    """Row-major ELL: one gather of shape (M, W), one reduction over W."""
+    gathered = jnp.take(x, jnp.asarray(m.col_idx), axis=0)  # (M, W)
+    return jnp.sum(jnp.asarray(m.val) * gathered, axis=1)
+
+
+def ell_spmm(m: ELL, X: jnp.ndarray) -> jnp.ndarray:
+    gathered = jnp.take(X, jnp.asarray(m.col_idx), axis=0)  # (M, W, K)
+    return jnp.einsum("mw,mwk->mk", jnp.asarray(m.val), gathered)
+
+
+def ell_spmv_loop(m: ELL, x: jnp.ndarray) -> jnp.ndarray:
+    """One pass per padded jagged column (host loop over W)."""
+    col = jnp.asarray(m.col_idx)
+    val = jnp.asarray(m.val)
+    y = jnp.zeros(m.shape[0], dtype=jnp.result_type(val.dtype, x.dtype))
+    for j in range(m.width):
+        y = y + val[:, j] * jnp.take(x, col[:, j], axis=0)
+    return y
+
+
+# --- registry entries -------------------------------------------------------
+
+
+@register_kernel("ell", "spmv", "xla",
+                 description="one (M, W) gather + width reduction")
+def _build_spmv(m: ELL, ctx) -> CompiledKernel:
+    return CompiledKernel(lambda x: ell_spmv(m, x), "xla")
+
+
+@register_kernel("ell", "spmm", "xla",
+                 description="(M, W, K) gather + einsum")
+def _build_spmm(m: ELL, ctx) -> CompiledKernel:
+    return CompiledKernel(lambda X: ell_spmm(m, X), "xla")
+
+
+@register_kernel("ell", "spmv", "loop_reference", auto=False,
+                 description="per-jagged-column traversal oracle")
+def _build_spmv_loop(m: ELL, ctx) -> CompiledKernel:
+    return CompiledKernel(lambda x: ell_spmv_loop(m, x), "loop")
+
+
+@register_kernel("ell", "spmm", "loop_reference", auto=False,
+                 description="column-by-column jagged-traversal oracle")
+def _build_spmm_loop(m: ELL, ctx) -> CompiledKernel:
+    return CompiledKernel(spmm_by_columns(lambda x: ell_spmv_loop(m, x)), "loop")

@@ -1,0 +1,96 @@
+"""Hybrid DIA+SELL kernels: composition of the two part registries.
+
+Registry entries: ``(hybrid, {spmv, spmm}, {xla, loop_reference})`` plus a
+``{pallas, pallas_interpret}`` SpMV that composes the DIA and SELL Pallas
+kernels (no Pallas SpMM: the DIA part has none — the plan layer falls back
+to the XLA formulation for multi-vector hybrid execution).
+"""
+from __future__ import annotations
+
+from ..core.formats import HybridDIA
+from . import dia as KD
+from . import sell as KS
+from .cache import spmm_by_columns
+from .registry import CompiledKernel, KernelContext, register_kernel
+
+
+def hybrid_spmv(m: HybridDIA, x):
+    return KD.dia_spmv(m.dia, x) + KS.sell_spmv(m.rest, x)
+
+
+def hybrid_spmm(m: HybridDIA, X):
+    return KD.dia_spmm(m.dia, X) + KS.sell_spmm(m.rest, X)
+
+
+def hybrid_spmv_loop(m: HybridDIA, x):
+    return KD.dia_spmv_loop(m.dia, x) + KS.sell_spmv_loop(m.rest, x)
+
+
+# --- registry entries -------------------------------------------------------
+
+
+@register_kernel("hybrid", "spmv", "xla",
+                 description="DIA shift-gather + SELL padded-view sum")
+def _build_spmv(m: HybridDIA, ctx) -> CompiledKernel:
+    KD.dia_gather_tables(m.dia)
+    KS.sell_padded_views(m.rest)
+    return CompiledKernel(lambda x: hybrid_spmv(m, x), "xla")
+
+
+@register_kernel("hybrid", "spmm", "xla",
+                 description="multi-vector DIA + SELL composition")
+def _build_spmm(m: HybridDIA, ctx) -> CompiledKernel:
+    KD.dia_gather_tables(m.dia)
+    KS.sell_padded_views(m.rest)
+    return CompiledKernel(lambda X: hybrid_spmm(m, X), "xla")
+
+
+@register_kernel("hybrid", "spmv", "loop_reference", auto=False,
+                 description="per-diagonal + per-chunk traversal oracles")
+def _build_spmv_loop(m: HybridDIA, ctx) -> CompiledKernel:
+    return CompiledKernel(lambda x: hybrid_spmv_loop(m, x), "loop")
+
+
+@register_kernel("hybrid", "spmm", "loop_reference", auto=False,
+                 description="column-by-column composed traversals")
+def _build_spmm_loop(m: HybridDIA, ctx) -> CompiledKernel:
+    return CompiledKernel(spmm_by_columns(lambda x: hybrid_spmv_loop(m, x)), "loop")
+
+
+def _probe_hybrid_pallas(m, ctx: KernelContext, compiled: bool) -> Capability:
+    probe_d = (KD._probe_dia_pallas_compiled if compiled else KD._probe_dia_pallas)
+    probe_s = (KS._probe_sell_pallas_compiled if compiled else KS._probe_sell_pallas)
+    if m is None:
+        return probe_s(None, ctx)
+    # an empty DIA part is fine here (the SELL remainder carries everything,
+    # and the build composes a zeros closure for the DIA half)
+    import numpy as np
+    if int(np.asarray(m.dia.offsets).shape[0]):
+        cap_d = probe_d(m.dia, ctx)
+        if not cap_d.ok:
+            return cap_d
+    return probe_s(m.rest, ctx)
+
+
+def _build_hybrid_pallas(m: HybridDIA, ctx: KernelContext, interpret: bool) -> CompiledKernel:
+    ck_d = KD._build_dia_pallas(m.dia, ctx, interpret)
+    ck_s = (KS._build_pallas_spmv(m.rest, ctx, interpret)
+            if m.rest.nnz else None)
+    if ck_s is None:
+        return CompiledKernel(ck_d.fn, ck_d.label)
+    return CompiledKernel(lambda x: ck_d.fn(x) + ck_s.fn(x), ck_s.label,
+                          ck_s.choice)
+
+
+@register_kernel("hybrid", "spmv", "pallas",
+                 probe=lambda m, ctx: _probe_hybrid_pallas(m, ctx, True),
+                 description="composed DIA + SELL Pallas kernels")
+def _build_pallas_compiled(m: HybridDIA, ctx) -> CompiledKernel:
+    return _build_hybrid_pallas(m, ctx, interpret=False)
+
+
+@register_kernel("hybrid", "spmv", "pallas_interpret",
+                 probe=lambda m, ctx: _probe_hybrid_pallas(m, ctx, False),
+                 description="composed DIA + SELL kernels via the interpreter")
+def _build_pallas_interpret(m: HybridDIA, ctx) -> CompiledKernel:
+    return _build_hybrid_pallas(m, ctx, interpret=True)

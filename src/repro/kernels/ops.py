@@ -2,11 +2,13 @@
 
 backend:
   "pallas"  — the Pallas kernels (interpret=True off-TPU, compiled on TPU);
-  "ref"     — the pure-jnp oracles (XLA-fused; the fast path on CPU);
-  "auto"    — pallas on TPU, ref elsewhere.
+  "ref"     — the pure-jnp formulations (XLA-fused; the fast path on CPU);
+  "auto"    — capability probes + roofline ranking via the registry.
 
-Everything downstream (models/sparse.py, benchmarks, the eigensolver) calls
-through here, so a single flag flips the whole framework between paths.
+This module predates ``registry`` and is kept as a thin convenience shim:
+every function below resolves to a registry entry (``repro.kernels.
+registry``), so a single table drives the whole framework — these wrappers
+only translate the legacy backend names and jit the result.
 """
 from __future__ import annotations
 
@@ -16,10 +18,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.formats import BSR, DIA, SELL, HybridDIA
-from . import bsr_spmm as _bsr
-from . import dia_spmv as _dia
 from . import moe_gemm as _moe
 from . import ref as _ref
+from . import registry as R
 
 
 def on_tpu() -> bool:
@@ -27,14 +28,32 @@ def on_tpu() -> bool:
 
 
 def _resolve(backend: str) -> str:
+    """Legacy name -> registry backend ("auto" stays symbolic)."""
     if backend == "auto":
-        return "pallas" if on_tpu() else "ref"
+        return "auto"
+    if backend == "ref":
+        return "xla"
+    if backend == "pallas":
+        return "pallas" if on_tpu() else "pallas_interpret"
     return backend
 
 
 def _interpret() -> bool:
     from ..utils.hw import pallas_interpret_default
     return pallas_interpret_default()
+
+
+def _build(matrix, fmt: str, op: str, backend: str, **ctx_kw):
+    ctx = R.KernelContext(**ctx_kw)
+    be = _resolve(backend)
+    if be == "auto":
+        return R.build_best(matrix, fmt, op, ctx)
+    try:
+        return R.build(matrix, fmt, op, be, ctx)
+    except (KeyError, R.BackendUnavailable):
+        # degrade like the plan layer: an explicitly requested backend that
+        # cannot run this operand compiles the XLA formulation instead
+        return R.build(matrix, fmt, op, "xla", ctx)
 
 
 # ---------------------------------------------------------------------------
@@ -46,12 +65,13 @@ def make_sell_spmv(m: SELL, *, backend: str = "auto", chunk_block: int | None = 
                    width_pad: int | None = None):
     """Returns jitted ``f(x) -> y`` for a concrete SELL matrix.
 
-    Delegates to the plan layer — one compile pipeline (perfmodel block
-    choice, VMEM-fit fallback, cached padded views) for both entry points.
+    Delegates to the plan layer — one compile pipeline (registry dispatch,
+    autotune hook, VMEM-fit fallback, cached padded views) for both entry
+    points.
     """
     from ..core.plan import SpMVPlan
 
-    plan = SpMVPlan.compile(m, backend=_resolve(backend),
+    plan = SpMVPlan.compile(m, backend=backend,
                             chunk_block=chunk_block, width_block=width_pad)
     return plan.apply
 
@@ -62,19 +82,7 @@ def make_sell_spmv(m: SELL, *, backend: str = "auto", chunk_block: int | None = 
 
 
 def make_bsr_spmm(m: BSR, *, backend: str = "auto"):
-    be = _resolve(backend)
-    bcols, slab = _bsr.bsr_to_bell(m)
-    bc, bl = jnp.asarray(bcols), jnp.asarray(slab)
-    M = m.shape[0]
-
-    if be == "pallas":
-        def f(X):
-            return _bsr.bell_spmm_arrays(bc, bl, X, interpret=_interpret())[:M]
-    else:
-        def f(X):
-            return _ref.bell_spmm_ref(bc, bl, X)[:M]
-
-    return jax.jit(f)
+    return jax.jit(_build(m, "bsr", "spmm", backend).fn)
 
 
 # ---------------------------------------------------------------------------
@@ -83,26 +91,7 @@ def make_bsr_spmm(m: BSR, *, backend: str = "auto"):
 
 
 def make_dia_spmv(m: DIA, *, backend: str = "auto", tile: int = 512):
-    be = _resolve(backend)
-    data, pad0, pad1, offsets, n = _dia.dia_prepare(m, tile)
-    dataj = jnp.asarray(data)
-    n_pad = data.shape[1]
-
-    if not offsets:
-        return jax.jit(lambda x: jnp.zeros(n, dtype=x.dtype))
-
-    if be == "pallas":
-        def f(x):
-            x_pad = jnp.pad(x, (pad0, pad1 + (n_pad - n)))
-            y = _dia.dia_spmv_arrays(dataj, x_pad, offsets=offsets, tile=tile,
-                                     pad0=pad0, interpret=_interpret())
-            return y[:n]
-    else:
-        def f(x):
-            x_pad = jnp.pad(x, (pad0, pad1 + (n_pad - n)))
-            return _ref.dia_spmv_ref(offsets, dataj[:, :n], x_pad, pad0, n)
-
-    return jax.jit(f)
+    return jax.jit(_build(m, "dia", "spmv", backend, tile=tile).fn)
 
 
 def make_hybrid_spmv(m: HybridDIA, *, backend: str = "auto", **kw):
@@ -117,7 +106,11 @@ def make_hybrid_spmv(m: HybridDIA, *, backend: str = "auto", **kw):
 
 
 def grouped_gemm(X, expert_of_token, W, *, backend: str = "auto", bt: int = 128):
-    be = _resolve(backend)
+    # not a registry format (MoE GEMM, no loop oracle); keep the historical
+    # two-path dispatch: only "pallas" (or "auto" on TPU) takes the kernel,
+    # every other name runs the reference path
+    be = "pallas" if (backend == "pallas"
+                      or (backend == "auto" and on_tpu())) else "ref"
     if be == "pallas":
         return _moe.grouped_gemm(X, expert_of_token, W, bt=bt, interpret=_interpret())
     order, inv, tile_expert, T_pad = _moe.plan_groups(
@@ -128,19 +121,18 @@ def grouped_gemm(X, expert_of_token, W, *, backend: str = "auto", bt: int = 128)
 
 
 # ---------------------------------------------------------------------------
-# format-level dispatch (mirrors core.spmv.make_spmv but kernel-backed)
+# format-level dispatch (mirrors core.spmv.make_spmv but registry-backed)
 # ---------------------------------------------------------------------------
+
+_FMT_OF = {SELL: "sell", BSR: "bsr", DIA: "dia", HybridDIA: "hybrid"}
 
 
 def make_kernel_spmv(matrix, *, backend: str = "auto", **kw):
     if isinstance(matrix, SELL):
         return make_sell_spmv(matrix, backend=backend, **kw)
-    if isinstance(matrix, BSR):
-        f = make_bsr_spmm(matrix, backend=backend)
-        lane = 8
-        return jax.jit(lambda x: f(jnp.tile(x[:, None], (1, lane)))[:, 0])
-    if isinstance(matrix, DIA):
-        return make_dia_spmv(matrix, backend=backend, **kw)
     if isinstance(matrix, HybridDIA):
         return make_hybrid_spmv(matrix, backend=backend)
-    raise TypeError(f"no kernel path for {type(matrix).__name__}")
+    fmt = _FMT_OF.get(type(matrix))
+    if fmt is None:
+        raise TypeError(f"no kernel path for {type(matrix).__name__}")
+    return jax.jit(_build(matrix, fmt, "spmv", backend, **kw).fn)

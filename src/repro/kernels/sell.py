@@ -1,0 +1,260 @@
+"""SELL-C-sigma kernels (blocked JDS: NBJDS/RBJDS/SOJDS unified).
+
+Registry entries: ``(sell, {spmv, spmm}, {xla, loop_reference, pallas,
+pallas_interpret})``.  The Pallas entries wrap the TPU kernels in
+``sell_spmv.py``; their shared :func:`sell_autotune` hook owns the
+``(chunk_block, width_block)`` selection (model-driven via
+``perfmodel.select_pallas_blocks``), the override re-claim and the
+grid-divisibility adjustment that used to live inline in ``core.plan`` —
+the plan layer and any other consumer now get one implementation.
+
+Stream-byte note (see ``perfmodel.balance_of(backend=...)``): the XLA
+formulation consumes the *globally padded* (nc, W_max, C) views — it
+streams ``nc * W_max * C`` elements per call — while the flat chunk-local
+layout (what the loop oracle walks, and what an ideal per-chunk-width TPU
+kernel streams) moves only ``sum_c w_c * C``.  The perfmodel accounts for
+the two regimes separately per backend.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.formats import SELL
+from . import sell_spmv as KP
+from .cache import cached, register_stat, spmm_by_columns
+from .registry import (
+    CAP_OK,
+    Capability,
+    CompiledKernel,
+    KernelContext,
+    _probe_pallas_dtype,
+    compiled_probe,
+    register_kernel,
+)
+
+register_stat("sell_padded_views")
+
+
+def sell_padded_views(m: SELL, pad_width_to: int = 1):
+    """Fully padded (nc, W, C) numpy views + per-chunk widths, built once and
+    cached per ``pad_width_to`` (the Pallas width-block granularity)."""
+
+    return cached(m, f"_padded_views_{pad_width_to}", "sell_padded_views",
+                  lambda: m.padded_views(pad_width_to=pad_width_to))
+
+
+def sell_spmv_padded(col3: jnp.ndarray, val3: jnp.ndarray, perm: jnp.ndarray,
+                     x: jnp.ndarray, n_rows: int) -> jnp.ndarray:
+    """Vectorised SELL on the fully padded (n_chunks, W, C) views.
+
+    This is the shape the Pallas kernel consumes; also a fast XLA fallback.
+    """
+    gathered = jnp.take(x, col3, axis=0)  # (nc, W, C)
+    tiles = jnp.sum(val3 * gathered, axis=1)  # (nc, C)
+    y = jnp.zeros(n_rows + 1, dtype=tiles.dtype)
+    y = y.at[perm.reshape(-1)].add(tiles.reshape(-1))
+    return y[:n_rows]
+
+
+def sell_spmv(m: SELL, x: jnp.ndarray) -> jnp.ndarray:
+    """Vectorized SELL via the cached padded 3-D views: one gather + one
+    reduction over W + one perm-scatter (no host loop over chunks)."""
+    col3, val3, _ = sell_padded_views(m)
+    return sell_spmv_padded(jnp.asarray(col3), jnp.asarray(val3),
+                            jnp.asarray(m.perm), x, m.shape[0])
+
+
+def sell_spmm_padded(col3: jnp.ndarray, val3: jnp.ndarray, perm: jnp.ndarray,
+                     X: jnp.ndarray, n_rows: int) -> jnp.ndarray:
+    """Multi-vector SELL on the padded (nc, W, C) views (any padding works:
+    extra zero columns contribute nothing)."""
+    gathered = jnp.take(X, col3, axis=0)  # (nc, W, C, K)
+    tiles = jnp.einsum("nwc,nwck->nck", val3, gathered)  # (nc, C, K)
+    Y = jnp.zeros((n_rows + 1, X.shape[1]), dtype=tiles.dtype)
+    Y = Y.at[perm.reshape(-1)].add(tiles.reshape(-1, X.shape[1]))
+    return Y[:n_rows]
+
+
+def sell_spmm(m: SELL, X: jnp.ndarray) -> jnp.ndarray:
+    col3, val3, _ = sell_padded_views(m)
+    return sell_spmm_padded(jnp.asarray(col3), jnp.asarray(val3),
+                            jnp.asarray(m.perm), X, m.shape[0])
+
+
+def sell_spmv_loop(m: SELL, x: jnp.ndarray) -> jnp.ndarray:
+    """Chunk-local jagged-diagonal traversal (host loop over chunks).
+
+    Each chunk is a (width_c, C) column-major slab; the C-row result tile
+    stays "in cache" (a register tile on TPU) for the whole chunk — exactly
+    the paper's NBJDS blocking argument.  Kept as the paper-fidelity oracle;
+    traces O(n_chunks) scatter-adds.
+    """
+    cp = np.asarray(m.chunk_ptr)
+    cw = np.asarray(m.chunk_width)
+    C = m.C
+    n_rows = m.shape[0]
+    val = jnp.asarray(m.val)
+    ci = jnp.asarray(m.col_idx)
+    perm = jnp.asarray(m.perm)
+    y = jnp.zeros(n_rows + 1, dtype=jnp.result_type(val.dtype, x.dtype))
+    for c in range(m.n_chunks):
+        w = int(cw[c])
+        lo, hi = int(cp[c]), int(cp[c + 1])
+        slab_v = val[lo:hi].reshape(w, C)
+        slab_x = jnp.take(x, ci[lo:hi], axis=0).reshape(w, C)
+        tile = jnp.sum(slab_v * slab_x, axis=0)  # (C,)
+        rows = perm[c * C : (c + 1) * C]  # original row ids; pad rows -> n_rows
+        y = y.at[rows].add(tile)
+    return y[:n_rows]
+
+
+# --- Pallas autotune hook (shared by plan + any other consumer) -------------
+
+
+def sell_autotune(m: SELL, ctx: KernelContext):
+    """Pick ``(chunk_block, width_block)`` for the Pallas SELL kernels.
+
+    One implementation of the logic that used to be duplicated at the plan
+    layer: the model-driven ``perfmodel.select_pallas_blocks`` choice,
+    re-claimed VMEM when the caller overrides a block, and the
+    grid-divisibility adjustment (``chunk_block`` must divide ``n_chunks``).
+    Returns a ``perfmodel.BlockChoice``.
+    """
+    from ..core import perfmodel as PM
+
+    cw = np.asarray(m.chunk_width)
+    W0 = int(cw.max()) if cw.size else 1
+    vb = int(np.dtype(np.asarray(m.val).dtype).itemsize)
+    choice = PM.select_pallas_blocks(m.n_chunks, W0, m.C, m.shape[1],
+                                     value_bytes=vb, chip=ctx.chip)
+    cb = ctx.chunk_block if ctx.chunk_block is not None else choice.chunk_block
+    wb = ctx.width_block if ctx.width_block is not None else choice.width_block
+    if ctx.chunk_block is not None or ctx.width_block is not None:
+        # re-claim for the overridden tiling, not the model's choice
+        claim = int(KP.vmem_bytes(cb, wb, m.C, m.shape[1], vb))
+        choice = PM.BlockChoice(cb, wb, -(-W0 // wb) * wb, claim,
+                                claim <= int(ctx.chip.vmem_bytes * 0.5))
+    nc = max(1, m.n_chunks)
+    while nc % cb:   # nc is fixed by the matrix; cb must divide it
+        cb -= 1
+    if cb != choice.chunk_block:
+        choice = PM.BlockChoice(cb, choice.width_block, choice.width_padded,
+                                choice.vmem_bytes, choice.fits_vmem)
+    return choice
+
+
+def _probe_sell_pallas(m, ctx: KernelContext) -> Capability:
+    cap = _probe_pallas_dtype(m, ctx)
+    if not cap.ok or m is None:
+        return cap
+    choice = sell_autotune(m, ctx)
+    if not choice.fits_vmem:
+        return Capability(False, "no (chunk_block, width_block) tiling fits "
+                                 "the VMEM budget for this matrix")
+    return CAP_OK
+
+
+_probe_sell_pallas_compiled = compiled_probe(_probe_sell_pallas)
+
+
+def _pallas_operands(m: SELL, ctx: KernelContext):
+    choice = sell_autotune(m, ctx)
+    col3, val3, _ = sell_padded_views(m, pad_width_to=choice.width_block)
+    return (choice, jnp.asarray(col3), jnp.asarray(val3),  # device-put once
+            jnp.asarray(np.asarray(m.perm)))
+
+
+def _build_pallas_spmv(m: SELL, ctx: KernelContext, interpret: bool) -> CompiledKernel:
+    choice, col3, val3, perm = _pallas_operands(m, ctx)
+    cb, wb = choice.chunk_block, choice.width_block
+    n = m.shape[0]
+
+    def fn(x):
+        tiles = KP.sell_spmv_arrays(col3, val3, x, chunk_block=cb,
+                                    width_block=wb, interpret=interpret)
+        return KP.sell_spmv_scatter(tiles, perm, n)
+
+    return CompiledKernel(fn, "pallas-interpret" if interpret else "pallas",
+                          choice)
+
+
+def _build_pallas_spmm(m: SELL, ctx: KernelContext, interpret: bool) -> CompiledKernel:
+    choice, col3, val3, perm = _pallas_operands(m, ctx)
+    cb, wb = choice.chunk_block, choice.width_block
+    n = m.shape[0]
+    vb = int(np.dtype(np.asarray(m.val).dtype).itemsize)
+    budget = int(ctx.chip.vmem_bytes * 0.5)
+
+    def fn(X):
+        # the probe claims VMEM at k=1 (batch width is unknown until call
+        # time); X.shape is static per trace, so re-claim here and degrade
+        # to the fused XLA formulation on the same wb-padded views when a
+        # wide batch would blow the budget — never emit a doomed kernel
+        k = int(X.shape[1])
+        claim = KP.vmem_bytes(cb, wb, m.C, m.shape[1], vb, k=k)
+        if claim > budget:
+            return sell_spmm_padded(col3, val3, perm, X, n)
+        tiles = KP.sell_spmm_arrays(col3, val3, X, chunk_block=cb,
+                                    width_block=wb, interpret=interpret)
+        return KP.sell_spmm_scatter(tiles, perm, n)
+
+    return CompiledKernel(fn, "pallas-interpret" if interpret else "pallas",
+                          choice)
+
+
+# --- registry entries -------------------------------------------------------
+
+
+@register_kernel("sell", "spmv", "xla",
+                 description="padded-view gather + width reduce + perm scatter")
+def _build_spmv(m: SELL, ctx) -> CompiledKernel:
+    sell_padded_views(m)  # warm the build-once cache host-side
+    return CompiledKernel(lambda x: sell_spmv(m, x), "xla")
+
+
+@register_kernel("sell", "spmm", "xla",
+                 description="padded-view multi-vector einsum + perm scatter")
+def _build_spmm(m: SELL, ctx) -> CompiledKernel:
+    sell_padded_views(m)
+    return CompiledKernel(lambda X: sell_spmm(m, X), "xla")
+
+
+@register_kernel("sell", "spmv", "loop_reference", auto=False,
+                 description="paper-faithful chunk-local slab traversal")
+def _build_spmv_loop(m: SELL, ctx) -> CompiledKernel:
+    return CompiledKernel(lambda x: sell_spmv_loop(m, x), "loop")
+
+
+@register_kernel("sell", "spmm", "loop_reference", auto=False,
+                 description="column-by-column chunk-slab traversals")
+def _build_spmm_loop(m: SELL, ctx) -> CompiledKernel:
+    return CompiledKernel(spmm_by_columns(lambda x: sell_spmv_loop(m, x)), "loop")
+
+
+@register_kernel("sell", "spmv", "pallas", probe=_probe_sell_pallas_compiled,
+                 autotune=sell_autotune,
+                 description="chunk-slab grid kernel, VMEM-resident x")
+def _build_pallas_spmv_compiled(m: SELL, ctx) -> CompiledKernel:
+    return _build_pallas_spmv(m, ctx, interpret=False)
+
+
+@register_kernel("sell", "spmv", "pallas_interpret", probe=_probe_sell_pallas,
+                 autotune=sell_autotune,
+                 description="chunk-slab grid kernel via the interpreter")
+def _build_pallas_spmv_interpret(m: SELL, ctx) -> CompiledKernel:
+    return _build_pallas_spmv(m, ctx, interpret=True)
+
+
+@register_kernel("sell", "spmm", "pallas", probe=_probe_sell_pallas_compiled,
+                 autotune=sell_autotune,
+                 description="multi-vector chunk-slab kernel (one matrix pass)")
+def _build_pallas_spmm_compiled(m: SELL, ctx) -> CompiledKernel:
+    return _build_pallas_spmm(m, ctx, interpret=False)
+
+
+@register_kernel("sell", "spmm", "pallas_interpret", probe=_probe_sell_pallas,
+                 autotune=sell_autotune,
+                 description="multi-vector chunk-slab kernel via the interpreter")
+def _build_pallas_spmm_interpret(m: SELL, ctx) -> CompiledKernel:
+    return _build_pallas_spmm(m, ctx, interpret=True)

@@ -96,8 +96,81 @@ def sell_spmv_scatter(tiles: jnp.ndarray, perm: jnp.ndarray, n_rows: int) -> jnp
     return y[:n_rows]
 
 
+def _sell_mm_kernel(col_ref, val_ref, x_ref, o_ref):
+    w = pl.program_id(1)
+
+    @pl.when(w == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    idx = col_ref[...]   # (CB, WB, C) int32
+    vals = val_ref[...]  # (CB, WB, C)
+    X = x_ref[...]       # (N, K)
+    g = jnp.take(X, idx.reshape(-1), axis=0).reshape(idx.shape + (X.shape[1],))
+    o_ref[...] += jnp.einsum("bwc,bwck->bck", vals.astype(o_ref.dtype),
+                             g.astype(o_ref.dtype))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("chunk_block", "width_block", "interpret", "out_dtype")
+)
+def sell_spmm_arrays(
+    col3: jnp.ndarray,
+    val3: jnp.ndarray,
+    X: jnp.ndarray,
+    *,
+    chunk_block: int = 8,
+    width_block: int | None = None,
+    interpret: bool | None = None,
+    out_dtype=None,
+) -> jnp.ndarray:
+    """Multi-vector SELL kernel: col3/val3 (nc, W, C); X (N, K) -> (nc, C, K).
+
+    The matrix slabs stream exactly as in ``sell_spmv_arrays`` while X stays
+    VMEM-resident whole — one matrix pass for all K right-hand sides (the
+    serving layer's batching lever).  The block choice is shared with the
+    SpMV kernel; the VMEM claim grows by the (N + CB*C) * K term, so very
+    wide batches on very large x may need a smaller chunk_block.
+    """
+    if interpret is None:
+        interpret = _auto_interpret()
+    nc, W, C = col3.shape
+    wb = width_block or W
+    assert nc % chunk_block == 0, (nc, chunk_block)
+    assert W % wb == 0, (W, wb)
+    K = X.shape[1]
+    odt = out_dtype or jnp.result_type(val3.dtype, X.dtype)
+    grid = (nc // chunk_block, W // wb)
+    return pl.pallas_call(
+        _sell_mm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((chunk_block, wb, C), lambda i, w: (i, w, 0)),
+            pl.BlockSpec((chunk_block, wb, C), lambda i, w: (i, w, 0)),
+            pl.BlockSpec((X.shape[0], K), lambda i, w: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((chunk_block, C, K), lambda i, w: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nc, C, K), odt),
+        interpret=interpret,
+    )(col3, val3, X)
+
+
+def sell_spmm_scatter(tiles: jnp.ndarray, perm: jnp.ndarray, n_rows: int) -> jnp.ndarray:
+    """Scatter (nc, C, K) permuted tiles back to original row order."""
+    K = tiles.shape[-1]
+    Y = jnp.zeros((n_rows + 1, K), dtype=tiles.dtype)
+    Y = Y.at[perm.reshape(-1)].add(tiles.reshape(-1, K))
+    return Y[:n_rows]
+
+
 def vmem_bytes(chunk_block: int, width_block: int, C: int, n: int,
-               val_bytes: int = 4, idx_bytes: int = 4, x_bytes: int = 4) -> int:
-    """Working-set claim for the BlockSpec choice (must be << VMEM)."""
+               val_bytes: int = 4, idx_bytes: int = 4, x_bytes: int = 4,
+               k: int = 1) -> int:
+    """Working-set claim for the BlockSpec choice (must be << VMEM).
+
+    ``k`` is the SpMM batch width (1 = SpMV): x and the output tile scale
+    by it, the matrix slabs do not.
+    """
     slab = chunk_block * width_block * C
-    return slab * (val_bytes + idx_bytes) * 2 + n * x_bytes + chunk_block * C * 4
+    return slab * (val_bytes + idx_bytes) * 2 + n * x_bytes * k \
+        + chunk_block * C * 4 * k

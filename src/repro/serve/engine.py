@@ -166,11 +166,16 @@ class BatchingSpMVServer:
     # -- registration -------------------------------------------------------
 
     def _policy(self, policy_matrix, max_batch, deadline_s,
-                max_pending) -> BatchPolicy:
+                max_pending, kernel: str = "xla") -> BatchPolicy:
+        # the executed kernel's stream-byte regime (flat vs padded SELL
+        # views) feeds the width policy; the label mapping is the plan
+        # layer's, shared rather than duplicated
+        from ..core.plan import _LABEL_STREAM
         width = max_batch if max_batch is not None else self.max_batch
         if width is None:
-            width = PM.select_batch_width(policy_matrix, am=self.am,
-                                          chip=self.chip).width
+            width = PM.select_batch_width(
+                policy_matrix, am=self.am, chip=self.chip,
+                backend=_LABEL_STREAM.get(kernel, "xla")).width
         return BatchPolicy(
             width=int(width),
             deadline_s=self.deadline_s if deadline_s is None else deadline_s,
@@ -180,7 +185,8 @@ class BatchingSpMVServer:
 
     def register(self, name: str, matrix, *, max_batch: int | None = None,
                  deadline_s: float | None = None,
-                 max_pending: int | None = None, **plan_kw):
+                 max_pending: int | None = None,
+                 backend: str | None = None, **plan_kw):
         """Compile ``matrix`` into a plan + batching queue; returns the report.
 
         Compilation is idempotent (plans are memoized on the container);
@@ -191,15 +197,21 @@ class BatchingSpMVServer:
             matrix: any ``core.formats`` container.
             max_batch: flush-width override for this operator.
             deadline_s / max_pending: per-operator policy overrides.
+            backend: per-operator kernel-registry backend override
+                (defaults to the server-wide ``backend``, itself
+                ``"auto"`` = capability probes + roofline ranking).
             **plan_kw: forwarded to ``SpMVPlan.compile`` — in particular
                 ``format="auto"`` registers a CSR under the perfmodel's
                 chosen storage scheme (``perfmodel.select_format``).
         """
-        plan = SpMVPlan.compile(matrix, backend=self.backend, chip=self.chip,
-                                **plan_kw)
-        # batch-width policy from the container the plan actually executes
-        # (after any format="auto" conversion), not the registered source
-        policy = self._policy(plan.matrix, max_batch, deadline_s, max_pending)
+        plan = SpMVPlan.compile(matrix,
+                                backend=backend or self.backend,
+                                chip=self.chip, **plan_kw)
+        # batch-width policy from the container AND kernel the plan actually
+        # executes (after any format="auto" conversion / backend selection),
+        # not the registered source
+        policy = self._policy(plan.matrix, max_batch, deadline_s, max_pending,
+                              kernel=plan.report.kernel)
         self._queues[name] = OperatorQueue(plan, policy, self._clock)
         return plan.report
 
@@ -207,17 +219,22 @@ class BatchingSpMVServer:
                              variant: str = "overlap",
                              max_batch: int | None = None,
                              deadline_s: float | None = None,
-                             max_pending: int | None = None, **plan_kw):
+                             max_pending: int | None = None,
+                             backend: str | None = None, **plan_kw):
         """Mesh-aware registration: compile ``matrix`` into a
         ``DistributedSpMVPlan`` sharded over ``mesh`` (default: all local
         devices).  Batching applies unchanged — ``plan.spmm`` is one
         *distributed* pass, so coalescing also amortizes the collective
         x-shard exchange across the batch, not just the HBM matrix stream.
+        ``backend`` (default: the server-wide setting) selects the
+        registry entry for the inner slab multiplies.
         """
         from ..core.distributed_plan import _as_csr, compile_distributed_spmv_plan
 
         plan = compile_distributed_spmv_plan(matrix, mesh, variant=variant,
-                                             chip=self.chip, **plan_kw)
+                                             chip=self.chip,
+                                             backend=backend or self.backend,
+                                             **plan_kw)
         policy = self._policy(_as_csr(matrix), max_batch, deadline_s, max_pending)
         self._queues[name] = OperatorQueue(plan, policy, self._clock)
         return plan.report
