@@ -41,7 +41,7 @@ MODULES = [
 ]
 
 #: current perf-trajectory tag; --json with no PATH writes BENCH_<tag>.json
-DEFAULT_BENCH_TAG = "PR5"
+DEFAULT_BENCH_TAG = "PR6"
 
 
 def main(argv=None) -> int:

@@ -57,9 +57,10 @@ def _time_calls(fn, args, iters: int, repeats: int = 3) -> float:
 
 
 def _serve_width(plan_matrix, xs, width: int, iters: int,
-                 repeats: int = 3) -> float:
+                 repeats: int = 3, **server_kw) -> float:
     """Best-of-``repeats`` seconds per *batch* through the full submit path."""
-    srv = BatchingSpMVServer(backend="auto", max_batch=width, deadline_s=60.0)
+    srv = BatchingSpMVServer(backend="auto", max_batch=width, deadline_s=60.0,
+                             **server_kw)
     srv.register("op", plan_matrix)
     batch = xs[:width]
 
@@ -77,6 +78,66 @@ def _serve_width(plan_matrix, xs, width: int, iters: int,
         jax.block_until_ready(y)
         best = min(best, (time.perf_counter() - t0) / iters)
     return best
+
+
+def _guardrails_overhead(plan_matrix, xs, iters: int, rounds: int = 13) -> dict:
+    """Width-8 served seconds/batch: guardrails ON (the default server) vs
+    OFF (validate="off" + resilience disabled), interleaved round-robin.
+
+    Returns the BENCH ``serving/guardrails`` payload; ``overhead_ratio``
+    is the gated invariant.  Scheduler noise on a shared CI runner is
+    several percent over millisecond windows — far louder than the
+    overhead being measured — so the estimator pairs as finely as the
+    workload allows: within a round the two servers alternate
+    *batch-by-batch* (each batch synced, order swapped every iteration),
+    so a preemption burst lands on both sides of the ratio, and the
+    reported ratio is the median over rounds — one bad round cannot move
+    the gate the way a plain min-over-min quotient could.
+    """
+    from repro.serve import ResiliencePolicy
+
+    def make(**kw):
+        srv = BatchingSpMVServer(backend="auto", max_batch=8,
+                                 deadline_s=60.0, **kw)
+        srv.register("op", plan_matrix)
+        batch = xs[:8]
+
+        def one_batch():
+            futs = srv.submit_many("op", batch)
+            return futs[-1].result()
+        jax.block_until_ready(one_batch())  # warm the jitted executors
+        return one_batch
+
+    on = make()
+    off = make(validate="off", resilience=ResiliencePolicy(enabled=False))
+
+    def one(fn):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        return time.perf_counter() - t0
+
+    t_on = t_off = float("inf")
+    ratios = []
+    for _ in range(rounds):
+        s_on = s_off = 0.0
+        for i in range(iters):
+            if i % 2 == 0:
+                s_on += one(on)
+                s_off += one(off)
+            else:
+                s_off += one(off)
+                s_on += one(on)
+        t_on = min(t_on, s_on / iters)
+        t_off = min(t_off, s_off / iters)
+        ratios.append(s_on / s_off)
+    ratios.sort()
+    return {
+        "t_on_s": t_on,
+        "t_off_s": t_off,
+        "qps_on": 8.0 / t_on,
+        "qps_off": 8.0 / t_off,
+        "overhead_ratio": ratios[len(ratios) // 2],
+    }
 
 
 def measure(n: int = 12_000, iters: int = 30, seed: int = 0) -> dict:
@@ -107,9 +168,18 @@ def measure(n: int = 12_000, iters: int = 30, seed: int = 0) -> dict:
 
     # served path at the acceptance width (queue overhead included);
     # extra repeats: this is the acceptance headline and Python-side
-    # overhead is the jitteriest part of the pipeline
+    # overhead is the jitteriest part of the pipeline.  The default server
+    # runs with guardrails ON (validate="strict" + resilience flush path),
+    # so this headline is what production actually pays.
     t_served8 = _serve_width(sell, xs, 8, max(10, iters // 2), repeats=5)
     qps_served8 = 8.0 / t_served8
+
+    # guardrails overhead: the default-on served path vs every guardrail
+    # off (the pre-resilience flush + no request validation).  Both sides
+    # are timed in *interleaved* rounds in the same process, so machine
+    # speed and slow thermal/allocator drift cancel out of the ratio.
+    # The acceptance criterion (gated by check_bench --bound) is <= 5%.
+    guardrails = _guardrails_overhead(sell, xs, max(20, iters))
 
     # model curve over the same widths + the policy's choice
     choice = PM.select_batch_width(sell, k_max=max(WIDTHS))
@@ -132,6 +202,7 @@ def measure(n: int = 12_000, iters: int = 30, seed: int = 0) -> dict:
         "batched": kernel,
         "served_width8": {"t_batch_s": t_served8, "qps": qps_served8,
                           "speedup_vs_sequential": qps_served8 / qps_seq},
+        "guardrails": guardrails,
         "policy": {"selected_width": choice.width,
                    "saturation": choice.saturation,
                    "predicted_qps": model_qps,
@@ -161,6 +232,10 @@ def run(full: bool = False):
                     res["policy"]["selected_width"],
                     res["policy"]["saturation"],
                     res["model_direction_match"]))
+    g = res["guardrails"]
+    rows.append(row("serve_throughput", "guardrails_overhead",
+                    g["overhead_ratio"], g["t_on_s"] * 1e3,
+                    g["t_off_s"] * 1e3))
     return rows
 
 

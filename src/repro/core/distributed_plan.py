@@ -491,9 +491,14 @@ class DistributedSpMVPlan:
     run: object                     # jitted f(x) -> y
     run_mm: object                  # jitted f(X) -> Y
     traffic: dict                   # modelled per-SpMV byte movement
+    slab_backend: str = "xla"       # registry entry of the inner multiplies
 
     def __call__(self, x: jnp.ndarray) -> jnp.ndarray:
         return self.spmv(x)
+
+    def _fault_ctx(self, op: str) -> dict:
+        return {"op": op, "variant": self.variant, "parts": self.parts,
+                "backend": self.slab_backend, "kernel": self.variant}
 
     def spmv(self, x: jnp.ndarray) -> jnp.ndarray:
         """One distributed SpMV through the cached shard_map executor.
@@ -505,9 +510,12 @@ class DistributedSpMVPlan:
         Returns:
             y = A @ x of shape (M,), gathered back to the caller.
         """
+        from ..testing import faults
         if x.shape != (self.blocks.n_cols,):
             raise ValueError(f"x has shape {x.shape}, expected ({self.blocks.n_cols},)")
-        return self.run(x)
+        spec = faults.fire("dist.spmv", ctx=self._fault_ctx("spmv"))
+        y = self.run(x)
+        return faults.poison(y, spec) if spec is not None else y
 
     def spmm(self, X: jnp.ndarray) -> jnp.ndarray:
         """Multi-vector SpMV: X (N, K) -> Y (M, K), one distributed pass.
@@ -515,9 +523,12 @@ class DistributedSpMVPlan:
         Both the HBM matrix stream *and* the collective x-shard exchange
         are paid once for all K columns — batching amortizes the
         communication too."""
+        from ..testing import faults
         if X.ndim != 2 or X.shape[0] != self.blocks.n_cols:
             raise ValueError(f"X has shape {X.shape}, expected ({self.blocks.n_cols}, K)")
-        return self.run_mm(X)
+        spec = faults.fire("dist.spmm", ctx=self._fault_ctx("spmm"))
+        Y = self.run_mm(X)
+        return faults.poison(Y, spec) if spec is not None else Y
 
     # -- back-compat + introspection ----------------------------------------
 
@@ -703,7 +714,8 @@ def _compile(m, mesh, variant, balance, slab_format, axis, C, chip, am,
     traffic = slab_traffic_bytes(blocks, variant,
                                  np.dtype(np.asarray(m.val).dtype).itemsize)
     return DistributedSpMVPlan(variant, parts, axis, pack, balance, blocks,
-                               tuple(reports), run, run_mm, traffic)
+                               tuple(reports), run, run_mm, traffic,
+                               slab_backend=backend)
 
 
 def plan_all_variants(m: CSR, mesh: Mesh | None = None, **kw) -> dict:

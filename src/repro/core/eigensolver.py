@@ -22,6 +22,31 @@ import numpy as np
 Apply = Callable[[jnp.ndarray], jnp.ndarray]
 
 
+class LanczosBreakdown(RuntimeError):
+    """The Lanczos recurrence produced a non-finite alpha or beta.
+
+    A NaN/Inf in the operator output (a poisoned SpMV, an overflowing
+    Hamiltonian entry) contaminates every later iteration — the tridiagonal
+    eigenproblem then silently returns NaN Ritz values.  Detection happens
+    per iteration, so the error names the first broken step.
+
+    Attributes:
+        iteration: 0-based Lanczos step at which the recurrence broke.
+        alpha / beta: the offending coefficients (floats, possibly NaN).
+    """
+
+    def __init__(self, iteration: int, alpha: float, beta: float):
+        super().__init__(
+            f"Lanczos recurrence broke down at iteration {iteration}: "
+            f"alpha={alpha!r}, beta={beta!r} (non-finite).  The operator "
+            "returned NaN/Inf — check the matrix and input vector "
+            "(core.validate), or pass on_breakdown='restart' to retry "
+            "from a reseeded start vector.")
+        self.iteration = iteration
+        self.alpha = alpha
+        self.beta = beta
+
+
 def as_apply(op, *, mesh=None, variant: str = "overlap",
              format: str | None = None, backend: str = "auto") -> Apply:
     """Normalize the injected operator: a callable (closure, jitted fn,
@@ -79,6 +104,8 @@ def lanczos(
     mesh=None,
     format: str | None = None,
     backend: str = "auto",
+    on_breakdown: str = "raise",
+    max_restarts: int = 2,
 ) -> LanczosResult:
     """m-step Lanczos on the symmetric operator ``apply_A`` of dimension n.
 
@@ -93,8 +120,38 @@ def lanczos(
     ``format`` (e.g. ``"auto"``) picks the storage scheme for bare
     containers before planning; ``backend`` picks the kernel-registry
     entry (``"auto"`` probes + ranks).
+
+    A non-finite recurrence coefficient (the operator returned NaN/Inf)
+    raises :class:`LanczosBreakdown` at the offending iteration instead of
+    silently propagating NaN into the Ritz values; ``on_breakdown=
+    "restart"`` retries the whole solve from a reseeded start vector up to
+    ``max_restarts`` times (a transient fault recovers; a deterministic
+    one still raises, carrying the last attempt's breakdown).
     """
+    if on_breakdown not in ("raise", "restart"):
+        raise ValueError(f"on_breakdown={on_breakdown!r}; "
+                         "expected 'raise' or 'restart'")
     apply_A = as_apply(apply_A, mesh=mesh, format=format, backend=backend)
+    attempts = 1 + (max_restarts if on_breakdown == "restart" else 0)
+    n_spmv_prior = 0
+    for attempt in range(attempts):
+        try:
+            result = _lanczos_once(
+                apply_A, n, m, v0, reorthogonalize,
+                # reseed each restart (and never reuse a caller v0 that
+                # already broke the recurrence once)
+                seed if attempt == 0 else seed + 7919 * attempt, dtype)
+            result.n_spmv += n_spmv_prior
+            return result
+        except LanczosBreakdown as e:
+            n_spmv_prior += e.iteration + 1
+            v0 = None
+            if attempt == attempts - 1:
+                raise
+    raise AssertionError("unreachable")  # pragma: no cover
+
+
+def _lanczos_once(apply_A, n, m, v0, reorthogonalize, seed, dtype) -> LanczosResult:
     if v0 is None:
         v0 = jax.random.normal(jax.random.PRNGKey(seed), (n,), dtype)
     v = v0 / jnp.linalg.norm(v0)
@@ -113,6 +170,8 @@ def lanczos(
             w = w - basis.T @ (basis @ w)
             w = w - basis.T @ (basis @ w)  # twice is enough
         beta_new = jnp.linalg.norm(w)
+        if not (np.isfinite(float(alpha)) and np.isfinite(float(beta_new))):
+            raise LanczosBreakdown(j, float(alpha), float(beta_new))
         alphas.append(float(alpha))
         betas.append(float(beta_new))
         if float(beta_new) < 1e-12 * max(1.0, abs(float(alpha))):

@@ -47,7 +47,44 @@ def _open_text(path, mode: str):
     return open(path, mode)
 
 
-def read_mtx(path) -> COO:
+def _entry_lines(path, start_after: int):
+    """Yield ``(lineno, stripped_line)`` for data lines after the size line.
+
+    The slow path of error reporting: ``read_mtx`` parses the bulk with
+    ``np.loadtxt`` (no line provenance) and only rescans the file here when
+    something was wrong, to name the offending line.
+    """
+    with _open_text(path, "r") as fh:
+        for lineno, raw in enumerate(fh, start=1):
+            if lineno <= start_after:
+                continue
+            s = raw.strip()
+            if not s or s.startswith("%"):
+                continue
+            yield lineno, s
+
+
+def _locate_bad_entry(path, start_after: int, want_cols: int,
+                      n_rows: int, n_cols: int):
+    """(lineno, message) of the first malformed/out-of-range entry line."""
+    for lineno, s in _entry_lines(path, start_after):
+        toks = s.split()
+        if len(toks) < want_cols:
+            return lineno, (f"entry line has {len(toks)} fields, expected "
+                            f"{want_cols}: {s!r}")
+        try:
+            r, c = int(float(toks[0])), int(float(toks[1]))
+            if want_cols > 2:
+                float(toks[2])
+        except ValueError:
+            return lineno, f"entry line is not numeric: {s!r}"
+        if not (1 <= r <= n_rows and 1 <= c <= n_cols):
+            return lineno, (f"entry ({r}, {c}) out of range for a "
+                            f"{n_rows}x{n_cols} matrix (indices are 1-based)")
+    return None, None
+
+
+def read_mtx(path, *, validate: str = "strict") -> COO:
     """Read a MatrixMarket ``coordinate`` file (optionally ``.gz``) into COO.
 
     Supports ``real``/``integer``/``pattern`` fields and ``general``/
@@ -57,49 +94,90 @@ def read_mtx(path) -> COO:
 
     Args:
         path: file path; gzip-decompressed when it ends in ``.gz``.
+        validate: matrix-level policy applied to the parsed container
+            (``core.validate.validate_matrix`` — duplicates, NaN/Inf
+            values): ``"strict"`` raises, ``"repair"`` fixes, ``"off"``
+            skips.  *File-format* errors always raise, regardless.
 
     Returns:
         A ``COO`` with int32 indices; values are float64 (``pattern``
         entries become 1.0).
 
     Raises:
-        ValueError: on a malformed banner, unsupported format/field/
-            symmetry, out-of-range indices, or an entry-count mismatch.
+        MatrixFormatError: (a ``ValueError``) on a malformed banner,
+            unsupported format/field/symmetry, a malformed or out-of-range
+            entry line, or an entry-count mismatch — carrying the file
+            path and the 1-based line number of the first offending line.
     """
+    from .validate import MatrixFormatError, validate_matrix
+
     with _open_text(path, "r") as fh:
         banner = fh.readline().strip().split()
         if (len(banner) < 5 or banner[0].lower() != "%%matrixmarket"
                 or banner[1].lower() != "matrix"):
-            raise ValueError(f"{path}: not a MatrixMarket file (banner {banner!r})")
+            raise MatrixFormatError(
+                f"not a MatrixMarket file (banner {banner!r}; want "
+                "'%%MatrixMarket matrix <layout> <field> <symmetry>')",
+                path=path, line=1)
         layout, field, symmetry = (w.lower() for w in banner[2:5])
         if layout != "coordinate":
-            raise ValueError(f"{path}: only 'coordinate' layout supported, got {layout!r}")
+            raise MatrixFormatError(
+                f"only 'coordinate' layout supported, got {layout!r}",
+                path=path, line=1)
         if field not in _FIELDS:
-            raise ValueError(f"{path}: unsupported field {field!r} (want one of {_FIELDS})")
+            raise MatrixFormatError(
+                f"unsupported field {field!r} (want one of {_FIELDS})",
+                path=path, line=1)
         if symmetry not in _SYMMETRIES:
-            raise ValueError(
-                f"{path}: unsupported symmetry {symmetry!r} (want one of {_SYMMETRIES})")
+            raise MatrixFormatError(
+                f"unsupported symmetry {symmetry!r} (want one of {_SYMMETRIES})",
+                path=path, line=1)
+        lineno = 2
         line = fh.readline()
         while line and line.lstrip().startswith("%"):
             line = fh.readline()
+            lineno += 1
+        if not line or not line.strip():
+            raise MatrixFormatError("missing size line ('rows cols nnz')",
+                                    path=path, line=lineno)
         try:
             n_rows, n_cols, nnz = (int(t) for t in line.split())
         except Exception as e:
-            raise ValueError(f"{path}: bad size line {line!r}") from e
+            raise MatrixFormatError(
+                f"bad size line {line.strip()!r} (want 'rows cols nnz')",
+                path=path, line=lineno) from e
+        size_lineno = lineno
         want_cols = 2 if field == "pattern" else 3
-        data = np.loadtxt(fh, ndmin=2, dtype=np.float64)
+        try:
+            data = np.loadtxt(fh, ndmin=2, dtype=np.float64)
+        except ValueError as e:
+            bad_line, msg = _locate_bad_entry(path, size_lineno, want_cols,
+                                              n_rows, n_cols)
+            raise MatrixFormatError(
+                msg or f"unparseable entry data ({e})",
+                path=path, line=bad_line) from e
     if data.size == 0:
         data = np.zeros((0, want_cols))
-    if data.shape[0] != nnz or data.shape[1] < want_cols:
-        raise ValueError(
-            f"{path}: expected {nnz} entries of {want_cols} columns, "
-            f"got array of shape {data.shape}")
+    if data.shape[0] != nnz:
+        raise MatrixFormatError(
+            f"size line declares {nnz} entries but the file has "
+            f"{data.shape[0]}", path=path, line=size_lineno)
+    if data.shape[1] < want_cols:
+        bad_line, msg = _locate_bad_entry(path, size_lineno, want_cols,
+                                          n_rows, n_cols)
+        raise MatrixFormatError(
+            msg or f"entries have {data.shape[1]} fields, expected "
+                   f"{want_cols}", path=path, line=bad_line)
     rows = data[:, 0].astype(np.int64) - 1  # 1-based -> 0-based
     cols = data[:, 1].astype(np.int64) - 1
     vals = np.ones(nnz, np.float64) if field == "pattern" else data[:, 2]
     if nnz and (rows.min() < 0 or cols.min() < 0
                 or rows.max() >= n_rows or cols.max() >= n_cols):
-        raise ValueError(f"{path}: entry indices out of range for {n_rows}x{n_cols}")
+        bad_line, msg = _locate_bad_entry(path, size_lineno, want_cols,
+                                          n_rows, n_cols)
+        raise MatrixFormatError(
+            msg or f"entry indices out of range for {n_rows}x{n_cols}",
+            path=path, line=bad_line)
     if symmetry != "general":
         off = rows != cols
         sign = -1.0 if symmetry == "skew-symmetric" else 1.0
@@ -108,7 +186,7 @@ def read_mtx(path) -> COO:
         vals = np.concatenate([vals, sign * vals[off]])
     coo = COO(rows.astype(np.int32), cols.astype(np.int32), vals, (n_rows, n_cols))
     object.__setattr__(coo, "_source", str(path))
-    return coo
+    return validate_matrix(coo, policy=validate)
 
 
 def write_mtx(path, matrix, *, field: str = "real", symmetry: str = "general",
@@ -204,7 +282,7 @@ def synthetic_fallback(name: str, n: int = 512, dtype=np.float32) -> CSR:
 
 
 def load_matrix(name: str, *, search_dirs=None, fallback_n: int = 512,
-                dtype=np.float32) -> CSR:
+                dtype=np.float32, validate: str = "strict") -> CSR:
     """Load a named corpus matrix as CSR, falling back to a synthetic.
 
     Args:
@@ -215,15 +293,23 @@ def load_matrix(name: str, *, search_dirs=None, fallback_n: int = 512,
         fallback_n: dimension of the synthetic stand-in when no file is
             found (see ``synthetic_fallback``).
         dtype: value dtype of the returned CSR.
+        validate: matrix-level policy (``core.validate``), checked on the
+            float64 parse *before* narrowing to ``dtype`` so values that
+            would overflow the cast to Inf are named explicitly
+            (``dtype_overflow_count``) rather than surfacing later as
+            mysterious non-finite results.
 
     Returns:
         A ``CSR`` whose ``_source`` attribute records the resolved path or
         ``"synthetic:<name>"``.
     """
+    from .validate import validate_matrix
+
     path = resolve_matrix_path(name, search_dirs)
     if path is None:
         return synthetic_fallback(name, n=fallback_n, dtype=dtype)
-    coo = read_mtx(path)
+    coo = read_mtx(path, validate="off")
+    coo = validate_matrix(coo, policy=validate, value_dtype=dtype)
     m = CSR.from_coo(COO(np.asarray(coo.rows), np.asarray(coo.cols),
                          np.asarray(coo.vals, dtype), coo.shape))
     object.__setattr__(m, "_source", str(path))

@@ -93,9 +93,13 @@ class SpMVPlan:
             y = A @ x of shape (M,).  Raises ValueError on a shape
             mismatch (the XLA gather would clamp indices silently).
         """
+        from ..testing import faults
         if x.shape != (self.report.shape[1],):  # XLA gather would clamp, silently
             raise ValueError(f"x has shape {x.shape}, expected ({self.report.shape[1]},)")
-        return self.apply(x)
+        spec = faults.fire("plan.spmv", ctx={"op": "spmv", "format": self.report.format,
+                                             "kernel": self.report.kernel})
+        y = self.apply(x)
+        return faults.poison(y, spec) if spec is not None else y
 
     def spmm(self, X: jnp.ndarray) -> jnp.ndarray:
         """Multi-vector SpMV: X (N, K) -> Y (M, K), one fused pass.
@@ -103,9 +107,13 @@ class SpMVPlan:
         The matrix is streamed once for all K columns — the serving
         layer's batching lever (see ``perfmodel.spmm_balance_of``).
         """
+        from ..testing import faults
         if X.ndim != 2 or X.shape[0] != self.report.shape[1]:
             raise ValueError(f"X has shape {X.shape}, expected ({self.report.shape[1]}, K)")
-        return self.apply_multi(X)
+        spec = faults.fire("plan.spmm", ctx={"op": "spmm", "format": self.report.format,
+                                             "kernel": self.report.kernel})
+        Y = self.apply_multi(X)
+        return faults.poison(Y, spec) if spec is not None else Y
 
     def __repr__(self) -> str:  # pragma: no cover - cosmetic
         r = self.report
@@ -124,6 +132,7 @@ class SpMVPlan:
         backend: str = "auto",
         chunk_block: int | None = None,
         width_block: int | None = None,
+        validate: str = "off",
     ) -> "SpMVPlan":
         """Build (or fetch the memoized) plan for ``matrix``.
 
@@ -140,11 +149,22 @@ class SpMVPlan:
             backend: "auto" | "xla" | "pallas" ("ref" aliases "xla").
             chunk_block / width_block: override the model's Pallas tiling
                 choice; leave None for ``perfmodel.select_pallas_blocks``.
+            validate: structural/numerical matrix validation before
+                compiling (``core.validate``): ``"strict"`` raises on
+                defects, ``"repair"`` fixes what it can (returning a
+                repaired container — the plan compiles against *it*),
+                ``"off"`` (default: callers own their containers)
+                compiles as-is.  Compiled executors gather with clamped
+                indices, so an out-of-bounds ``col_idx`` silently reads
+                the wrong x entry — validation is where that surfaces.
 
         Returns:
             The compiled (memoized) ``SpMVPlan``; ``plan.report`` records
             what was decided and what the roofline predicts for it.
         """
+        if validate != "off":
+            from .validate import validate_matrix
+            matrix = validate_matrix(matrix, policy=validate)
         if format is not None:
             matrix = resolve_format(matrix, format, chip=chip, am=am,
                                     backend=backend)

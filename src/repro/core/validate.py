@@ -1,0 +1,353 @@
+"""Structural and numerical validation for matrices and request vectors.
+
+The paper's performance story is about *fragility*: one pathological nnz
+distribution and the kernel falls off the roofline.  A serving stack is
+equally fragile to bad *data* — a column index past the matrix edge turns
+into a silently clamped XLA gather, a NaN in one request poisons a whole
+coalesced SpMM batch, a float64 matrix cast to float32 can quietly overflow
+to Inf.  This module centralizes the checks and the policy for what to do
+when they fire:
+
+* ``validate_matrix(m, policy=...)`` — structural checks (index bounds,
+  ``row_ptr`` monotonicity, duplicate entries, unsorted columns) and
+  numerical checks (NaN/Inf values, dtype-overflow on narrowing casts) for
+  ``CSR``/``COO`` containers;
+* ``validate_vector(x, n, policy=...)`` — shape/dtype/finiteness checks for
+  one request vector (the ``BatchingSpMVServer.submit`` guard);
+* ``check_finite_columns(Y)`` — per-column finiteness verdict for a batch
+  result, used by the serving flush path to fail exactly the poisoned
+  requests and resolve their batch-mates.
+
+Policies
+--------
+``strict``
+    Raise :class:`ValidationError` (a ``ValueError``) describing every
+    violated check — the production default for request boundaries.
+``repair``
+    Fix what is fixable and return the repaired container: out-of-range
+    entries dropped, duplicates summed, rows sorted, non-finite values
+    zeroed.  The repairs performed are recorded on the returned object as
+    ``_repairs`` (a tuple of strings).
+``off``
+    Skip everything (benchmark mode; the guardrails-overhead measurement
+    compares against this).
+
+Errors form a small hierarchy so callers can catch precisely::
+
+    ValidationError (ValueError)
+      +-- MatrixValidationError     bad matrix structure/values
+      +-- VectorValidationError     bad request vector
+    MatrixFormatError (ValidationError)   raised by core.io.read_mtx with
+                                          file/line provenance
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+POLICIES = ("strict", "repair", "off")
+
+
+class ValidationError(ValueError):
+    """A structural or numerical validation check failed (policy 'strict')."""
+
+
+class MatrixValidationError(ValidationError):
+    """A matrix container violated the structural/numerical contract."""
+
+
+class VectorValidationError(ValidationError):
+    """A request vector violated the shape/dtype/finiteness contract."""
+
+
+class MatrixFormatError(ValidationError):
+    """A MatrixMarket file is malformed; carries file/line provenance.
+
+    Attributes:
+        path: the offending file.
+        line: 1-based line number of the first offending line (None when
+            the problem is file-level, e.g. an entry-count mismatch).
+    """
+
+    def __init__(self, message: str, *, path=None, line: int | None = None):
+        loc = f"{path}" + (f":{line}" if line is not None else "")
+        super().__init__(f"{loc}: {message}" if path is not None else message)
+        self.path = path
+        self.line = line
+
+
+def _check_policy(policy: str) -> str:
+    if policy not in POLICIES:
+        raise ValueError(f"unknown validation policy {policy!r}; "
+                         f"expected one of {POLICIES}")
+    return policy
+
+
+@dataclass
+class ValidationReport:
+    """What ``validate_matrix`` found (and, under 'repair', fixed)."""
+
+    problems: list[str] = field(default_factory=list)
+    repairs: list[str] = field(default_factory=list)
+
+    @property
+    def ok(self) -> bool:
+        return not self.problems
+
+
+# ---------------------------------------------------------------------------
+# matrix validation
+# ---------------------------------------------------------------------------
+
+
+#: integer headroom of the f32/f16 significand: index values above this are
+#: not exactly representable if values ever round-trip through the dtype
+_FINITE_MAX = {np.dtype(np.float16): float(np.finfo(np.float16).max),
+               np.dtype(np.float32): float(np.finfo(np.float32).max),
+               np.dtype(np.float64): float(np.finfo(np.float64).max)}
+
+
+def dtype_overflow_count(vals: np.ndarray, target_dtype) -> int:
+    """Entries of ``vals`` that are finite but overflow to Inf in ``target_dtype``.
+
+    The corpus loaders narrow float64 MatrixMarket values to the container
+    dtype (usually f32); a value like 1e300 survives the file checks but
+    becomes Inf after the cast — this counts those before they do.
+    """
+    td = np.dtype(target_dtype)
+    if td not in _FINITE_MAX or vals.size == 0:
+        return 0
+    finite = np.isfinite(vals)
+    return int((finite & (np.abs(vals) > _FINITE_MAX[td])).sum())
+
+
+def _coo_arrays(m):
+    """(rows, cols, vals, shape) as numpy views for CSR or COO."""
+    from .formats import COO, CSR
+    if isinstance(m, CSR):
+        rp = np.asarray(m.row_ptr)
+        rows = np.repeat(np.arange(m.shape[0], dtype=np.int64),
+                         np.maximum(rp[1:] - rp[:-1], 0))
+        return rows, np.asarray(m.col_idx, np.int64), np.asarray(m.val), m.shape
+    if isinstance(m, COO):
+        return (np.asarray(m.rows, np.int64), np.asarray(m.cols, np.int64),
+                np.asarray(m.vals), m.shape)
+    raise TypeError(f"validate_matrix expects CSR or COO, got "
+                    f"{type(m).__name__}; validate before converting")
+
+
+def inspect_matrix(m, *, value_dtype=None) -> ValidationReport:
+    """Run every check without raising or repairing; returns the report."""
+    from .formats import CSR
+    rep = ValidationReport()
+    n_rows, n_cols = m.shape
+    if isinstance(m, CSR):
+        rp = np.asarray(m.row_ptr)
+        if len(rp) != n_rows + 1:
+            rep.problems.append(
+                f"row_ptr has {len(rp)} entries, expected n_rows+1={n_rows + 1}")
+            return rep  # structure too broken for the remaining checks
+        if rp[0] != 0 or np.any(np.diff(rp) < 0):
+            rep.problems.append("row_ptr is not a monotone prefix-sum "
+                                "starting at 0")
+            return rep
+        if int(rp[-1]) != m.nnz:
+            rep.problems.append(
+                f"row_ptr[-1]={int(rp[-1])} does not match nnz={m.nnz}")
+            return rep
+    rows, cols, vals, _ = _coo_arrays(m)
+    oob = (rows < 0) | (rows >= n_rows) | (cols < 0) | (cols >= n_cols)
+    n_oob = int(oob.sum())
+    if n_oob:
+        i = int(np.argmax(oob))
+        rep.problems.append(
+            f"{n_oob} entries with indices out of range for "
+            f"{n_rows}x{n_cols} (first at entry {i}: "
+            f"({int(rows[i])}, {int(cols[i])}))")
+    inb = ~oob
+    if inb.any():
+        keys = rows[inb] * np.int64(n_cols) + cols[inb]
+        uniq = np.unique(keys)
+        n_dup = int(keys.size - uniq.size)
+        if n_dup:
+            rep.problems.append(f"{n_dup} duplicate (row, col) entries "
+                                "(their values would silently sum)")
+        if isinstance(m, CSR) and np.any(np.diff(keys) < 0):
+            rep.problems.append("columns are not sorted within rows "
+                                "(chunked kernels assume sorted CSR)")
+    if np.issubdtype(vals.dtype, np.floating):
+        n_bad = int((~np.isfinite(vals)).sum())
+        if n_bad:
+            i = int(np.argmax(~np.isfinite(vals)))
+            rep.problems.append(
+                f"{n_bad} non-finite values (first at entry {i}: {vals[i]!r})")
+        if value_dtype is not None:
+            n_ovf = dtype_overflow_count(vals, value_dtype)
+            if n_ovf:
+                rep.problems.append(
+                    f"{n_ovf} finite values overflow to Inf when cast to "
+                    f"{np.dtype(value_dtype).name}")
+    return rep
+
+
+def repair_matrix(m):
+    """Return a repaired copy of ``m`` (same container class) + repair log.
+
+    Drops out-of-range entries, merges duplicates (summing their values),
+    sorts rows/columns, and zeroes non-finite values.  Cheap no-op when the
+    matrix is already clean (the original object is returned unchanged).
+    """
+    from .formats import COO, CSR
+    rep = inspect_matrix(m)
+    if rep.ok:
+        return m, []
+    rows, cols, vals, shape = _coo_arrays(m)
+    repairs = []
+    keep = ((rows >= 0) & (rows < shape[0]) & (cols >= 0) & (cols < shape[1]))
+    if not keep.all():
+        repairs.append(f"dropped {int((~keep).sum())} out-of-range entries")
+        rows, cols, vals = rows[keep], cols[keep], vals[keep]
+    if np.issubdtype(vals.dtype, np.floating):
+        bad = ~np.isfinite(vals)
+        if bad.any():
+            repairs.append(f"zeroed {int(bad.sum())} non-finite values")
+            vals = np.where(bad, np.zeros((), vals.dtype), vals)
+    keys = rows * np.int64(shape[1]) + cols
+    uniq, inv = np.unique(keys, return_inverse=True)
+    if uniq.size != keys.size:
+        repairs.append(f"merged {int(keys.size - uniq.size)} duplicate entries")
+        summed = np.zeros(uniq.size, vals.dtype)
+        np.add.at(summed, inv, vals)
+        rows = (uniq // shape[1]).astype(np.int64)
+        cols = (uniq % shape[1]).astype(np.int64)
+        vals = summed
+    elif np.any(np.diff(keys) < 0):
+        repairs.append("sorted entries by (row, col)")
+        order = np.argsort(keys, kind="stable")
+        rows, cols, vals = rows[order], cols[order], vals[order]
+    coo = COO(rows.astype(np.int32), cols.astype(np.int32), vals, shape)
+    fixed = coo if isinstance(m, COO) else CSR.from_coo(coo)
+    object.__setattr__(fixed, "_repairs", tuple(repairs))
+    src = getattr(m, "_source", None)
+    if src is not None:
+        object.__setattr__(fixed, "_source", src)
+    return fixed, repairs
+
+
+def validate_matrix(m, policy: str = "strict", *, value_dtype=None):
+    """Validate (and under 'repair', fix) a CSR/COO container.
+
+    Args:
+        m: the container to check (CSR or COO; validate *before* converting
+            to packed formats — packers assume a clean source).
+        policy: ``"strict"`` raises :class:`MatrixValidationError` listing
+            every violated check; ``"repair"`` returns a fixed copy (see
+            :func:`repair_matrix`); ``"off"`` returns ``m`` untouched.
+        value_dtype: optional narrowing target — adds the dtype-overflow
+            check (finite values that would become Inf after the cast).
+
+    Returns:
+        The validated (possibly repaired) container.
+    """
+    from .formats import COO, CSR
+    if _check_policy(policy) == "off":
+        return m
+    if not isinstance(m, (CSR, COO)):
+        # already-packed containers (ELL/SELL/DIA/...) were built by our
+        # own converters from a CSR/COO source — the checkable surface is
+        # the source, so a packed container passes through untouched
+        return m
+    if policy == "repair":
+        fixed, _ = repair_matrix(m)
+        return fixed
+    rep = inspect_matrix(m, value_dtype=value_dtype)
+    if not rep.ok:
+        raise MatrixValidationError(
+            "matrix failed validation (policy='strict'; use 'repair' to "
+            "fix fixable problems):\n  - " + "\n  - ".join(rep.problems))
+    return m
+
+
+# ---------------------------------------------------------------------------
+# request-vector validation (the serving submit guard)
+# ---------------------------------------------------------------------------
+
+_FINITE_CHECKS: dict = {}
+
+#: dtype -> is-floating verdict, memoized: ``jnp.issubdtype`` costs ~0.5us
+#: and ``validate_vector`` sits on the per-request serving hot path
+_FLOATING_DTYPES: dict = {}
+
+
+def _finite_all(x):
+    """Memoized jitted all-finite reduction (one fused op per shape/dtype)."""
+    import jax
+    import jax.numpy as jnp
+    key = (x.shape, str(getattr(x, "dtype", None)))
+    fn = _FINITE_CHECKS.get(key)
+    if fn is None:
+        fn = _FINITE_CHECKS[key] = jax.jit(lambda a: jnp.all(jnp.isfinite(a)))
+    return bool(fn(x))
+
+
+def validate_vector(x, n: int, policy: str = "strict", *, name: str = "x",
+                    defer_finite: bool = False):
+    """Validate one request vector against an (M, n) operator.
+
+    Shape mismatches always raise (under every policy — a wrong-shaped
+    operand cannot be repaired and would poison its batch); finiteness is
+    policy-controlled: ``strict`` raises :class:`VectorValidationError`,
+    ``repair`` zeroes the non-finite entries, ``off`` skips the check.
+
+    ``defer_finite=True`` skips the strict finiteness *sync* (a device
+    round-trip per request — the dominant guardrail cost on the serving hot
+    path) on the caller's promise that a downstream batch-wide check
+    enforces it: the batcher's flush runs :func:`check_finite_columns` as
+    one fused reduction + one sync over the whole batch and fails exactly
+    the non-finite request's future.  Shape/dtype checks still raise here.
+
+    Returns the (possibly repaired) vector.
+    """
+    import jax.numpy as jnp
+    if x.shape != (n,):
+        raise VectorValidationError(
+            f"{name} has shape {x.shape}, expected ({n},)")
+    if _check_policy(policy) == "off":
+        return x
+    dt = x.dtype
+    is_float = _FLOATING_DTYPES.get(dt)
+    if is_float is None:
+        is_float = _FLOATING_DTYPES[dt] = bool(
+            jnp.issubdtype(dt, jnp.floating))
+    if not is_float:
+        raise VectorValidationError(
+            f"{name} has dtype {x.dtype}, expected a floating dtype")
+    if policy == "repair":
+        return jnp.where(jnp.isfinite(x), x, jnp.zeros((), x.dtype))
+    if not defer_finite and not _finite_all(x):
+        raise VectorValidationError(
+            f"{name} contains non-finite entries (NaN/Inf); policy='strict' "
+            "rejects them at submission so they cannot poison a batch")
+    return x
+
+
+_COLUMN_CHECKS: dict = {}
+
+
+def check_finite_columns(Y) -> np.ndarray:
+    """Per-column all-finite verdict of a batch result Y (M, K) -> (K,) bool.
+
+    The serving flush path uses this to fail exactly the poisoned requests
+    (a kernel fault or an escaped NaN input) while their batch-mates
+    resolve normally — one fused (jitted, memoized per shape) reduction,
+    one device sync.
+    """
+    import jax
+    import jax.numpy as jnp
+    key = (Y.shape, str(getattr(Y, "dtype", None)))
+    fn = _COLUMN_CHECKS.get(key)
+    if fn is None:
+        fn = _COLUMN_CHECKS[key] = jax.jit(
+            lambda a: jnp.all(jnp.isfinite(a), axis=0))
+    return np.asarray(fn(Y))

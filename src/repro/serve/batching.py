@@ -38,29 +38,97 @@ class SpMVFuture:
     ``result()`` never deadlocks: if the batch is still pending (width not
     reached, deadline not elapsed), it forces a flush of the owning
     operator queue — a consumer demanding an answer outranks the policy.
+
+    A future can resolve with a *structured error* instead of a value (one
+    poisoned request must not fail its batch-mates — see
+    ``serve.resilience``): ``done()`` is then still True, ``error()``
+    returns the carried exception, and ``result()`` raises it.
     """
 
-    __slots__ = ("_queue", "_value", "_done")
+    __slots__ = ("_queue", "_value", "_error", "_done", "_check")
 
     def __init__(self, queue: "OperatorQueue"):
         self._queue = queue
         self._value = None
+        self._error = None
         self._done = False
+        self._check = None  # deferred finiteness verdict: (shared, column)
 
     def done(self) -> bool:
-        """True once the owning batch has executed."""
+        """True once the owning batch has executed (value OR error)."""
         return self._done
 
-    def result(self) -> jnp.ndarray:
-        """The request's ``y = A @ x`` column, flushing its batch if needed."""
+    def error(self) -> BaseException | None:
+        """The structured error this request failed with, or None."""
         if not self._done:
             self._queue.flush()
+        self._materialize()
+        return self._error
+
+    def result(self) -> jnp.ndarray:
+        """The request's ``y = A @ x`` column, flushing its batch if needed.
+
+        Raises the request's structured error (``RequestError`` subclass —
+        ``KernelFault``, ``DeadlineExceeded``) when the request failed.
+        """
+        if not self._done:
+            self._queue.flush()
+        self._materialize()
+        if self._error is not None:
+            raise self._error
         return self._value
+
+    def _materialize(self) -> None:
+        """Settle a deferred finiteness verdict (see ``_resolve_checked``).
+
+        The batch-wide verdict vector is synced exactly once — by the first
+        consumer, who has to wait for the device anyway — and shared with
+        every batch-mate; a non-finite column flips this future to a
+        ``KernelFault`` and does the stats/breaker bookkeeping the flush
+        deferred.
+        """
+        if self._check is None:
+            return
+        shared, i = self._check
+        self._check = None
+        if shared["host"] is None:
+            import numpy as np
+            shared["host"] = np.asarray(shared["vec"])
+        if not shared["host"][i]:
+            from .resilience import KernelFault
+            queue = shared["queue"]
+            self._value = None
+            self._error = KernelFault(
+                "batch column came back non-finite (kernel fault, or a "
+                "NaN/Inf request that bypassed validation)",
+                op="spmm", kernel=shared["kernel"], nonfinite=True)
+            queue.stats.failed += 1
+            queue.breaker.record_failure()
 
     def _resolve(self, value: jnp.ndarray) -> None:
         self._value = value
         self._done = True
         self._queue = None  # drop the back-reference once resolved
+
+    def _resolve_checked(self, value: jnp.ndarray, shared: dict, i: int) -> None:
+        """Resolve with a batch-shared, not-yet-synced finiteness verdict.
+
+        ``shared`` holds the device-side per-column verdict of this
+        future's batch (``{"vec", "host", "queue", "kernel"}``); syncing it
+        at flush time would cost the hot path a device round-trip per
+        batch, so the sync rides on the first ``result()``/``error()``
+        instead — consumers pay nothing they would not already pay to read
+        the value.
+        """
+        self._value = value
+        self._check = (shared, i)
+        self._done = True
+        self._queue = None
+
+    def _fail(self, error: BaseException) -> None:
+        self._error = error
+        self._done = True
+        self._queue = None
 
 
 @dataclass(frozen=True)
@@ -101,6 +169,11 @@ class QueueStats:
     batched_columns: int = 0   # real columns across all flushes
     padded_columns: int = 0    # zero columns streamed for shape stability
     fast_path_calls: int = 0   # width-1 submits executed as plan(x)
+    shed: int = 0              # rejected at submit (backpressure cap)
+    retried: int = 0           # batch re-executions (transient faults)
+    degraded: int = 0          # backend-ladder steps taken by the breaker
+    deadline_missed: int = 0   # requests shed with DeadlineExceeded
+    failed: int = 0            # requests resolved with a structured error
 
     def record_batch(self, k: int, n_pad: int = 0) -> None:
         """Account one executed batch of k real columns (+ n_pad zeros) —
@@ -144,15 +217,28 @@ class OperatorQueue:
     """Pending requests for one registered operator + its flush machinery.
 
     Holds the compiled plan (``SpMVPlan`` or ``DistributedSpMVPlan`` — both
-    expose ``spmv``/``spmm``), the flush policy, and the stats counters.
+    expose ``spmv``/``spmm``), the flush policy, the stats counters, and
+    the robustness state: the request-validation policy, the resilience
+    policy + circuit breaker, and the backend degradation ladder
+    (``rebuild(backend)`` recompiles the operator one rung down when the
+    breaker trips — see ``serve.resilience``).
     """
 
-    def __init__(self, plan, policy: BatchPolicy, clock):
+    def __init__(self, plan, policy: BatchPolicy, clock, *,
+                 validate: str = "off", resilience=None,
+                 rebuild=None, ladder=()):
+        from .resilience import CircuitBreaker, ResiliencePolicy
         self.plan = plan
         self.policy = policy
         self._clock = clock
+        self._validate = validate
+        self.resilience = resilience if resilience is not None else (
+            ResiliencePolicy())
+        self._rebuild = rebuild
+        self.ladder = list(ladder)
+        self.breaker = CircuitBreaker(self.resilience.breaker_threshold)
         self._n_cols = int(plan.report.shape[1])
-        self._pending: deque = deque()  # (x, future, t_enqueue)
+        self._pending: deque = deque()  # (x, future, t_enqueue, timeout_s)
         self._executors: dict = {}      # real width k -> jitted batch fn
         self.stats = QueueStats()
 
@@ -161,13 +247,26 @@ class OperatorQueue:
 
     # -- submission ---------------------------------------------------------
 
-    def submit(self, x: jnp.ndarray) -> SpMVFuture:
-        """Enqueue one request; flush if the policy says the batch is due."""
-        if x.shape != (self._n_cols,):
-            # reject at the offending caller — a bad shape reaching flush
-            # would fail the whole batch and strand its valid futures
-            raise ValueError(
-                f"x has shape {x.shape}, expected ({self._n_cols},)")
+    def submit(self, x: jnp.ndarray, *, timeout_s: float | None = None) -> SpMVFuture:
+        """Enqueue one request; flush if the policy says the batch is due.
+
+        ``timeout_s`` overrides the resilience policy's per-request
+        deadline for this request (None keeps the policy default).
+        """
+        from ..core.validate import validate_vector
+        from ..testing import faults
+        # reject bad requests at the offending caller — a bad shape (or,
+        # under validate="strict", a NaN/Inf payload) reaching flush would
+        # poison the whole batch and strand its valid futures.  When the
+        # resilient flush already runs the fused per-column finiteness
+        # check, the strict per-request sync (one device round-trip per
+        # submit — the dominant guardrail cost) is deferred to it: a
+        # non-finite request then fails its own future at flush instead of
+        # raising here, and its batch-mates still resolve.
+        defer = (self.policy.width > 1 and self.resilience.enabled
+                 and self.resilience.check_finite)
+        x = validate_vector(x, self._n_cols, policy=self._validate,
+                            defer_finite=defer)
         self.stats.requests += 1
         if self.policy.width <= 1:
             # fast path: a width-1 policy means batching cannot amortize
@@ -177,14 +276,21 @@ class OperatorQueue:
             self.stats.fast_path_calls += 1
             self.stats.calls += 1
             return fut
-        if len(self._pending) >= self.policy.max_pending:
+        try:
+            faults.fire("serve.queue_full", ctx={"pending": len(self._pending)},
+                        clock=self._clock)
+            full = len(self._pending) >= self.policy.max_pending
+        except BackpressureError:
+            full = True
+        if full:
             self.stats.requests -= 1  # shed: the request was not admitted
+            self.stats.shed += 1
             raise BackpressureError(
                 f"{len(self._pending)} pending requests at the "
                 f"max_pending={self.policy.max_pending} cap; drain with "
                 f"pump()/flush() or raise the cap")
         fut = SpMVFuture(self)
-        self._pending.append((x, fut, self._clock()))
+        self._pending.append((x, fut, self._clock(), timeout_s))
         if len(self._pending) >= self.policy.width or self._deadline_elapsed():
             self.flush()
         return fut
@@ -201,7 +307,7 @@ class OperatorQueue:
         return (len(self._pending) >= self.policy.width
                 or self._deadline_elapsed())
 
-    def _splitter(self, k: int):
+    def _splitter(self, k: int, check: bool = False):
         """Jitted Y -> (Y[:,0], ..., Y[:,k-1]) column split, cached per k.
 
         One dispatch to hand each future its column, instead of k eager
@@ -210,30 +316,100 @@ class OperatorQueue:
         bounded.  The stack/pad stays *eager* on purpose: fusing it into
         the spmm graph makes XLA re-materialize the stacked operand inside
         the gather and roughly doubles the batch time.
+
+        ``check=True`` prepends a per-column all-finite verdict to the
+        return value, fused into the same compiled call; the resilient
+        flush hands the un-synced verdict to the futures, whose first
+        consumer materializes it (``SpMVFuture._materialize``) — the
+        no-silent-NaN guarantee costs one fused reduction and zero extra
+        device round-trips.
         """
-        fn = self._executors.get(k)
+        key = (k, check)
+        fn = self._executors.get(key)
         if fn is None:
-            fn = self._executors[k] = jax.jit(
-                lambda Y: tuple(Y[:, i] for i in range(k)))
+            if check:
+                fn = jax.jit(lambda Y: (
+                    jnp.all(jnp.isfinite(Y[:, :k]), axis=0),
+                    tuple(Y[:, i] for i in range(k))))
+            else:
+                fn = jax.jit(lambda Y: tuple(Y[:, i] for i in range(k)))
+            self._executors[key] = fn
         return fn
+
+    def _fused(self, k: int):
+        """Jitted X -> (verdict, columns) with the *spmm inlined*: one
+        compiled program for execute + per-column finiteness + split.
+
+        ``plan.apply_multi`` is itself a jitted callable, so tracing it
+        here inlines the kernel and lets XLA fuse the ``isfinite``
+        reduction and the column copies into the spmm's own output pass —
+        the no-silent-NaN guarantee becomes close to free, which is what
+        keeps the guardrails-overhead gate (``check_bench --bound``)
+        honest.  Only local ``SpMVPlan``s take this path (distributed
+        plans keep their own fault points and collectives observable);
+        the resilience layer also skips it whenever a fault is armed on
+        ``plan.spmm``, so chaos tests still drive the exact production
+        wrapper.  Returns None when fusion is unavailable.
+        """
+        key = (k, "fused")
+        fn = self._executors.get(key)
+        if fn is None:
+            from ..core.plan import SpMVPlan
+            if isinstance(self.plan, SpMVPlan):
+                inner = self.plan.apply_multi
+
+                def run(X, _inner=inner, _k=k):
+                    Y = _inner(X)
+                    return (jnp.all(jnp.isfinite(Y[:, :_k]), axis=0),
+                            tuple(Y[:, i] for i in range(_k)))
+                fn = jax.jit(run)
+            else:
+                fn = False  # cache the miss; cleared on degrade()
+            self._executors[key] = fn
+        return fn or None
 
     def flush(self) -> int:
         """Execute all pending requests as one (padded) SpMM; resolve futures.
 
+        The execution itself is delegated to the resilience layer
+        (``serve.resilience.execute_flush``): every drained future resolves
+        with a value or a structured error; with resilience disabled the
+        legacy behavior (exceptions propagate, batch stranded) applies.
+
         Returns:
             The number of real requests answered (0 if the queue was empty).
         """
+        from .resilience import execute_flush
         if not self._pending:
             return 0
-        xs, futs = [], []
+        entries = []
         while self._pending:
-            x, fut, _ = self._pending.popleft()
-            xs.append(x)
-            futs.append(fut)
-        k = len(futs)
-        X, n_pad = coalesce(xs, self.policy.width, self.policy.pad_to_width)
-        cols = self._splitter(k)(self.plan.spmm(X))
-        for fut, y in zip(futs, cols):
-            fut._resolve(y)
-        self.stats.record_batch(k, n_pad)
-        return k
+            entries.append(self._pending.popleft())
+        return execute_flush(self, entries)
+
+    # -- degradation ---------------------------------------------------------
+
+    def degrade(self) -> bool:
+        """Step the operator one rung down its backend ladder.
+
+        Called by the resilience layer when the circuit breaker trips.
+        Recompiles the plan on the next ladder backend (via the ``rebuild``
+        closure the server registered), drops the cached splitters (their
+        captured dtypes may change), and resets the breaker so the new
+        backend gets a full failure budget.
+
+        Returns:
+            True when a degrade happened; False when the ladder is empty
+            or the operator was registered without a rebuild hook.
+        """
+        if not self.ladder or self._rebuild is None:
+            return False
+        backend = self.ladder.pop(0)
+        try:
+            self.plan = self._rebuild(backend)
+        except Exception:  # noqa: BLE001 - a rung that fails to build is skipped
+            return self.degrade()
+        self._executors.clear()
+        self.stats.degraded += 1
+        self.breaker.failures = 0
+        return True

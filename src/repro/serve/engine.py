@@ -140,7 +140,8 @@ class BatchingSpMVServer:
                  am: PM.AccessModel = PM.TPU_FP32,
                  max_batch: int | None = None, deadline_s: float = 1e-3,
                  max_pending: int = 256, pad_partial: bool = True,
-                 clock=time.monotonic):
+                 clock=time.monotonic, validate: str = "strict",
+                 resilience=None):
         """Args:
             backend: plan backend ("auto" | "xla" | "pallas").
             chip: roofline parameters; defaults to TPU v5e.
@@ -151,8 +152,21 @@ class BatchingSpMVServer:
             max_pending: default per-operator queue cap (backpressure).
             pad_partial: zero-pad partial batches to the policy width.
             clock: monotonic time source (injectable for tests).
+            validate: request-vector policy ("strict" | "repair" | "off")
+                applied at ``submit`` and to registered matrices
+                (``core.validate``).  Strict rejects bad shapes and
+                NaN/Inf payloads at the offending caller.
+            resilience: a ``serve.resilience.ResiliencePolicy`` for the
+                flush path (deadlines, retry-with-split, circuit breaker
+                + backend degradation).  None uses the defaults; pass
+                ``ResiliencePolicy(enabled=False)`` for the legacy
+                propagate-and-strand behavior (benchmark mode).
         """
+        from ..core.validate import POLICIES
         from ..utils.hw import TPU_V5E
+        from .resilience import ResiliencePolicy
+        if validate not in POLICIES:
+            raise ValueError(f"validate={validate!r}; expected one of {POLICIES}")
         self.backend = backend
         self.chip = chip or TPU_V5E
         self.am = am
@@ -161,6 +175,9 @@ class BatchingSpMVServer:
         self.max_pending = max_pending
         self.pad_partial = pad_partial
         self._clock = clock
+        self.validate = validate
+        self.resilience = resilience if resilience is not None else (
+            ResiliencePolicy())
         self._queues: dict[str, OperatorQueue] = {}
 
     # -- registration -------------------------------------------------------
@@ -202,8 +219,12 @@ class BatchingSpMVServer:
                 ``"auto"`` = capability probes + roofline ranking).
             **plan_kw: forwarded to ``SpMVPlan.compile`` — in particular
                 ``format="auto"`` registers a CSR under the perfmodel's
-                chosen storage scheme (``perfmodel.select_format``).
+                chosen storage scheme (``perfmodel.select_format``), and
+                ``validate=`` overrides the server's matrix-validation
+                policy for this operator.
         """
+        from .resilience import degradation_ladder
+        plan_kw.setdefault("validate", self.validate)
         plan = SpMVPlan.compile(matrix,
                                 backend=backend or self.backend,
                                 chip=self.chip, **plan_kw)
@@ -212,7 +233,17 @@ class BatchingSpMVServer:
         # not the registered source
         policy = self._policy(plan.matrix, max_batch, deadline_s, max_pending,
                               kernel=plan.report.kernel)
-        self._queues[name] = OperatorQueue(plan, policy, self._clock)
+        rebuild_kw = dict(plan_kw, validate="off")  # matrix already checked
+
+        def rebuild(be, _m=matrix, _kw=rebuild_kw):
+            return SpMVPlan.compile(_m, backend=be, chip=self.chip, **_kw)
+
+        self._queues[name] = OperatorQueue(
+            plan, policy, self._clock,
+            validate=self.validate, resilience=self.resilience,
+            rebuild=rebuild,
+            ladder=degradation_ladder(plan.report.format, plan.report.kernel,
+                                      plan.matrix))
         return plan.report
 
     def register_distributed(self, name: str, matrix, *, mesh=None,
@@ -230,26 +261,45 @@ class BatchingSpMVServer:
         registry entry for the inner slab multiplies.
         """
         from ..core.distributed_plan import _as_csr, compile_distributed_spmv_plan
+        from ..core.validate import validate_matrix
 
+        matrix = validate_matrix(matrix, policy=self.validate)
         plan = compile_distributed_spmv_plan(matrix, mesh, variant=variant,
                                              chip=self.chip,
                                              backend=backend or self.backend,
                                              **plan_kw)
         policy = self._policy(_as_csr(matrix), max_batch, deadline_s, max_pending)
-        self._queues[name] = OperatorQueue(plan, policy, self._clock)
+        # the inner slab multiplies know exactly two backends (xla and the
+        # loop oracles — see ``_resolve_slab_backend``), so the distributed
+        # ladder is at most one rung
+        ladder = ([] if plan.slab_backend == "loop_reference"
+                  else ["loop_reference"])
+
+        def rebuild(be, _m=matrix, _mesh=mesh, _v=variant, _kw=dict(plan_kw)):
+            return compile_distributed_spmv_plan(_m, _mesh, variant=_v,
+                                                 chip=self.chip, backend=be,
+                                                 **_kw)
+
+        self._queues[name] = OperatorQueue(
+            plan, policy, self._clock,
+            validate=self.validate, resilience=self.resilience,
+            rebuild=rebuild, ladder=ladder)
         return plan.report
 
     # -- batched submission -------------------------------------------------
 
-    def submit(self, name: str, x: jnp.ndarray) -> SpMVFuture:
+    def submit(self, name: str, x: jnp.ndarray, *,
+               timeout_s: float | None = None) -> SpMVFuture:
         """Enqueue one ``y = A @ x`` request; returns its future.
 
         Flushes the operator's batch when the policy width is reached or
         its deadline has elapsed; width-1 policies execute synchronously
         (exactly ``plan(x)``).  Raises ``BackpressureError`` at the
-        ``max_pending`` cap.
+        ``max_pending`` cap.  ``timeout_s`` overrides the resilience
+        policy's per-request deadline (requests still queued past it are
+        shed with ``DeadlineExceeded`` at flush time).
         """
-        return self._queues[name].submit(x)
+        return self._queues[name].submit(x, timeout_s=timeout_s)
 
     def submit_many(self, name: str, xs) -> list[SpMVFuture]:
         """Submit a burst of requests in order; returns their futures."""
@@ -300,8 +350,13 @@ class BatchingSpMVServer:
         Beyond the plan report fields, each entry carries the batching
         counters: ``requests`` (submitted), ``calls`` (queries answered),
         ``batches``, ``mean_batch_width`` (real columns per flush),
-        ``padding_ratio`` (zero columns / streamed columns), and the
-        policy's ``batch_width``/``deadline_s``.
+        ``padding_ratio`` (zero columns / streamed columns), the
+        policy's ``batch_width``/``deadline_s``, and the robustness
+        counters — ``shed`` (backpressure rejections), ``retried``
+        (batch re-executions), ``degraded`` (backend-ladder steps),
+        ``deadline_missed`` (requests shed with ``DeadlineExceeded``),
+        ``failed`` (requests resolved with a structured error),
+        ``breaker_trips``, and the remaining degrade ``ladder``.
         """
         out = {}
         for name, q in self._queues.items():
@@ -314,6 +369,13 @@ class BatchingSpMVServer:
                 "mean_batch_width": st.mean_batch_width,
                 "padding_ratio": st.padding_ratio,
                 "fast_path_calls": st.fast_path_calls,
+                "shed": st.shed,
+                "retried": st.retried,
+                "degraded": st.degraded,
+                "deadline_missed": st.deadline_missed,
+                "failed": st.failed,
+                "breaker_trips": q.breaker.trips,
+                "ladder": tuple(q.ladder),
                 "pending": len(q),
                 "batch_width": q.policy.width,
                 "deadline_s": q.policy.deadline_s,

@@ -1,0 +1,5 @@
+"""Test-support subsystems that ship with the library (not under tests/)
+because production modules host their hooks: ``testing.faults`` is the
+deterministic fault-injection harness whose named fault points live in the
+plan layer, the distributed executors, and the serving flush path."""
+from . import faults  # noqa: F401

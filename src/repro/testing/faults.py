@@ -1,0 +1,190 @@
+"""Deterministic fault injection for the SpMV stack.
+
+The serving layer's resilience claims (retry-with-split, circuit breaker,
+deadline shedding — ``serve.resilience``) are only claims until a fault
+actually fires in the paths they guard.  This module provides the firing
+mechanism: **named fault points** embedded in production code (the plan
+executors, the distributed executors, the serving flush/submit paths) that
+are free when disarmed and deterministic when armed.
+
+Mechanics
+---------
+* Production code declares a point once at import time
+  (``FAULT_POINTS``/:func:`fault_point`) and calls :func:`fire` at the
+  matching site.  Disarmed, ``fire`` is a dict lookup returning ``None``.
+* Tests arm a point with :func:`inject` (a context manager)::
+
+      with faults.inject("plan.spmv", error=RuntimeError("kernel died")):
+          plan(x)                      # raises RuntimeError
+
+  Fault kinds:
+
+  - ``error=exc``        the point raises ``exc`` (an instance or class);
+  - ``nonfinite=True``   the caller poisons its *result* with NaN
+    (``fire`` returns the spec; the call site applies :func:`poison`) —
+    emulates a kernel writing garbage without crashing;
+  - ``delay_s=t``        a slow kernel / straggler: the injected serving
+    clock is advanced by ``t`` (``clock.advance``), or the process sleeps
+    when the clock is the real one.  Deterministic with the test clock.
+
+* ``times=N`` (default 1) disarms the fault after N firings — "fail once,
+  then recover" is the shape every retry test needs.  ``times=None`` keeps
+  it armed for the context's duration (persistent faults drive the
+  circuit-breaker/degradation tests).
+* ``when=pred`` filters by call-site context: every ``fire`` passes a
+  ``ctx`` dict (kernel label, op, backend, ...) and the fault only fires
+  when ``pred(ctx)`` is true — e.g. *fail only the pallas backend* so a
+  degradation to xla visibly recovers.
+
+Everything is process-local and single-threaded (like the serving stack
+itself); :func:`reset` clears all armed faults between tests.
+"""
+from __future__ import annotations
+
+import contextlib
+import time
+from dataclasses import dataclass, field
+from typing import Callable
+
+#: every declared fault point: name -> description.  Production modules
+#: register at import time; the chaos suite parametrizes over this table.
+FAULT_POINTS: dict[str, str] = {}
+
+_ARMED: dict[str, "FaultSpec"] = {}
+
+
+def fault_point(name: str, description: str) -> str:
+    """Declare a named fault point (idempotent); returns the name."""
+    FAULT_POINTS.setdefault(name, description)
+    return name
+
+
+@dataclass
+class FaultSpec:
+    """One armed fault: what happens and how many times."""
+
+    name: str
+    error: BaseException | type | None = None
+    nonfinite: bool = False
+    delay_s: float = 0.0
+    times: int | None = 1            # None = every firing while armed
+    when: Callable | None = None     # ctx predicate; None = always
+    column: int = 0                  # which batch column ``poison`` hits
+    fired: int = 0
+    log: list = field(default_factory=list)
+
+    def _matches(self, ctx) -> bool:
+        if self.times is not None and self.fired >= self.times:
+            return False
+        return self.when is None or bool(self.when(ctx or {}))
+
+
+def armed(name: str) -> FaultSpec | None:
+    """The spec currently armed at ``name`` (None when disarmed)."""
+    return _ARMED.get(name)
+
+
+def fire(name: str, ctx: dict | None = None, clock=None) -> FaultSpec | None:
+    """Production hook: fire the fault armed at ``name``, if any.
+
+    Raises the spec's error, or advances/sleeps the clock for a delay
+    fault.  Returns the spec for ``nonfinite`` faults (the call site must
+    apply :func:`poison` to its result) and ``None`` otherwise.
+    Disarmed — the overwhelmingly common case — this is one dict lookup.
+    """
+    if not _ARMED:
+        return None
+    spec = _ARMED.get(name)
+    if spec is None or not spec._matches(ctx):
+        return None
+    spec.fired += 1
+    spec.log.append(dict(ctx or {}))
+    if spec.delay_s:
+        if clock is not None and hasattr(clock, "advance"):
+            clock.advance(spec.delay_s)
+        else:  # real clock: actually be slow (tests pass a fake clock)
+            time.sleep(spec.delay_s)
+    if spec.error is not None:
+        exc = spec.error() if isinstance(spec.error, type) else spec.error
+        raise exc
+    return spec if spec.nonfinite else None
+
+
+def poison(y, spec: FaultSpec):
+    """Corrupt a kernel result the way a broken kernel would: NaN in one
+    output element (of column ``spec.column`` for a batch result)."""
+    import jax.numpy as jnp
+    nan = jnp.asarray(float("nan"), dtype=y.dtype)
+    if y.ndim == 1:
+        return y.at[0].set(nan)
+    col = min(spec.column, y.shape[1] - 1)
+    return y.at[0, col].set(nan)
+
+
+@contextlib.contextmanager
+def inject(name: str, *, error=None, nonfinite: bool = False,
+           delay_s: float = 0.0, times: int | None = 1,
+           when: Callable | None = None, column: int = 0):
+    """Arm ``name`` for the duration of the context; yields the spec.
+
+    Exactly one kind per injection (error XOR nonfinite XOR delay).  The
+    yielded spec's ``fired`` counter and ``log`` (the ctx dicts seen) let
+    tests assert the fault actually fired where they expected.
+    """
+    if name not in FAULT_POINTS:
+        raise KeyError(f"unknown fault point {name!r}; registered points: "
+                       f"{sorted(FAULT_POINTS)}")
+    if name in _ARMED:
+        raise RuntimeError(f"fault point {name!r} is already armed")
+    kinds = (error is not None) + bool(nonfinite) + (delay_s > 0)
+    if kinds != 1:
+        raise ValueError("arm exactly one of error=, nonfinite=, delay_s=")
+    spec = FaultSpec(name=name, error=error, nonfinite=nonfinite,
+                     delay_s=delay_s, times=times, when=when, column=column)
+    _ARMED[name] = spec
+    try:
+        yield spec
+    finally:
+        _ARMED.pop(name, None)
+
+
+def reset() -> None:
+    """Disarm everything (test teardown safety net)."""
+    _ARMED.clear()
+
+
+# ---------------------------------------------------------------------------
+# the emulated-infrastructure fault types
+# ---------------------------------------------------------------------------
+
+
+class ShardDeath(RuntimeError):
+    """Emulates a device/shard dying mid-collective in a distributed plan.
+
+    Real multi-host jax surfaces this as an XlaRuntimeError from the
+    collective; the emulation raises at the distributed executor's fault
+    point so the recovery machinery (retry, degrade, structured errors)
+    can be exercised single-process.
+    """
+
+    def __init__(self, part: int = 0):
+        super().__init__(f"emulated death of shard {part} during the "
+                         "distributed SpMV collective")
+        self.part = part
+
+
+# fault points hosted by modules that must stay import-light declare here,
+# next to the harness, so FAULT_POINTS is complete after one import
+fault_point("plan.spmv", "local plan SpMV dispatch (kernel raise / "
+                         "non-finite output / slow kernel)")
+fault_point("plan.spmm", "local plan SpMM dispatch (the serving flush "
+                         "executes through this)")
+fault_point("dist.spmv", "distributed executor SpMV (shard death, "
+                         "collective failure, straggler)")
+fault_point("dist.spmm", "distributed executor SpMM (batched serving over "
+                         "a mesh)")
+fault_point("serve.flush", "serving flush path, before the batch executes "
+                           "(straggler via the injected clock)")
+fault_point("serve.queue_full", "submission-time queue-full: submit sheds "
+                                "with BackpressureError regardless of "
+                                "queue length")

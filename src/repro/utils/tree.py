@@ -21,8 +21,22 @@ def param_bytes(tree) -> int:
 
 
 def tree_any_nan(tree) -> bool:
+    # each leaf is checked in its OWN dtype: upcasting f64 to f32 first
+    # would turn finite values beyond the f32 range into Inf (missed by
+    # isnan but corrupt all the same) and costs a copy per leaf
     leaves = [l for l in jax.tree_util.tree_leaves(tree) if hasattr(l, "dtype")]
-    flags = [jnp.any(jnp.isnan(l.astype(jnp.float32))) for l in leaves if jnp.issubdtype(l.dtype, jnp.floating)]
+    flags = [jnp.any(jnp.isnan(l)) for l in leaves if jnp.issubdtype(l.dtype, jnp.floating)]
+    if not flags:
+        return False
+    return bool(jax.device_get(jnp.any(jnp.stack(flags))))
+
+
+def tree_any_nonfinite(tree) -> bool:
+    """True when any floating leaf holds a NaN *or* Inf, checked per leaf
+    in the leaf's own dtype (no intermediate cast, no silent overflow)."""
+    leaves = [l for l in jax.tree_util.tree_leaves(tree) if hasattr(l, "dtype")]
+    flags = [jnp.any(~jnp.isfinite(l)) for l in leaves
+             if jnp.issubdtype(l.dtype, jnp.floating)]
     if not flags:
         return False
     return bool(jax.device_get(jnp.any(jnp.stack(flags))))

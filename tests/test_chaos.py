@@ -1,0 +1,438 @@
+"""Chaos suite: inject faults at every registered point, across every
+serving surface, and assert structured recovery.
+
+The contract under test (see ``serve.resilience``):
+
+* a **transient** fault (``times=1``) recovers by retry, and the retried
+  answer is **bitwise equal** to the fault-free one (the executor is the
+  same jitted function);
+* a **persistent** fault never hangs and never silently returns NaN — each
+  affected request resolves with a structured ``RequestError`` subclass
+  while unaffected batch-mates resolve normally;
+* a **backend-scoped** persistent fault trips the circuit breaker, the
+  operator degrades down its registry ladder, and service recovers on the
+  surviving backend.
+"""
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core.formats import COO, CSR  # noqa: E402
+from repro.core.plan import SpMVPlan  # noqa: E402
+from repro.serve import (  # noqa: E402
+    BackpressureError,
+    BatchingSpMVServer,
+    DeadlineExceeded,
+    KernelFault,
+    RequestError,
+    ResiliencePolicy,
+)
+from repro.testing import faults  # noqa: E402
+
+
+@pytest.fixture(autouse=True)
+def _disarm():
+    yield
+    faults.reset()
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+def make_csr(n=48, seed=0, density=0.15):
+    rng = np.random.default_rng(seed)
+    dense = (rng.random((n, n)) < density) * rng.standard_normal((n, n))
+    rows, cols = np.nonzero(dense)
+    return CSR.from_coo(COO(rows.astype(np.int32), cols.astype(np.int32),
+                            dense[rows, cols].astype(np.float32), (n, n)))
+
+
+def make_requests(n, k, seed=1):
+    rng = np.random.default_rng(seed)
+    return [jnp.asarray(rng.standard_normal(n), jnp.float32) for _ in range(k)]
+
+
+def make_server(m, *, width=4, clock=None, resilience=None, backend="auto"):
+    srv = BatchingSpMVServer(max_batch=width, clock=clock or FakeClock(),
+                             resilience=resilience, backend=backend)
+    srv.register("A", m)
+    return srv
+
+
+# ---------------------------------------------------------------------------
+# the harness itself
+# ---------------------------------------------------------------------------
+
+
+class TestHarness:
+    def test_every_point_is_registered(self):
+        assert {"plan.spmv", "plan.spmm", "dist.spmv", "dist.spmm",
+                "serve.flush", "serve.queue_full"} <= set(faults.FAULT_POINTS)
+
+    def test_unknown_point_rejected(self):
+        with pytest.raises(KeyError, match="unknown fault point"):
+            with faults.inject("no.such.point", error=RuntimeError()):
+                pass
+
+    def test_double_arm_rejected(self):
+        with faults.inject("plan.spmv", error=RuntimeError()):
+            with pytest.raises(RuntimeError, match="already armed"):
+                with faults.inject("plan.spmv", error=RuntimeError()):
+                    pass
+
+    def test_exactly_one_kind(self):
+        with pytest.raises(ValueError, match="exactly one"):
+            with faults.inject("plan.spmv", error=RuntimeError(), nonfinite=True):
+                pass
+        with pytest.raises(ValueError, match="exactly one"):
+            with faults.inject("plan.spmv"):
+                pass
+
+    def test_times_disarms_and_logs_ctx(self):
+        m = make_csr()
+        plan = SpMVPlan.compile(m, backend="xla")
+        x = make_requests(m.shape[1], 1)[0]
+        with faults.inject("plan.spmv", error=RuntimeError("once"), times=1) as spec:
+            with pytest.raises(RuntimeError, match="once"):
+                plan(x)
+            y = plan(x)  # disarmed after 1 firing
+        assert spec.fired == 1
+        assert spec.log[0]["op"] == "spmv"
+        assert np.isfinite(np.asarray(y)).all()
+
+    def test_when_predicate_filters(self):
+        m = make_csr()
+        plan = SpMVPlan.compile(m, backend="xla")
+        x = make_requests(m.shape[1], 1)[0]
+        with faults.inject("plan.spmv", error=RuntimeError("never"), times=None,
+                           when=lambda ctx: ctx.get("kernel") == "pallas") as spec:
+            plan(x)  # xla kernel: predicate is false, nothing fires
+        assert spec.fired == 0
+
+    def test_disarmed_fire_is_free(self):
+        assert faults.fire("plan.spmv", ctx={"op": "spmv"}) is None
+
+
+# ---------------------------------------------------------------------------
+# local plan surface
+# ---------------------------------------------------------------------------
+
+
+class TestLocalPlanChaos:
+    @pytest.mark.parametrize("point, op", [("plan.spmv", "spmv"),
+                                           ("plan.spmm", "spmm")])
+    def test_error_raises_then_bitwise_recovery(self, point, op):
+        m = make_csr()
+        plan = SpMVPlan.compile(m, backend="xla")
+        n = m.shape[1]
+        arg = (make_requests(n, 1)[0] if op == "spmv"
+               else jnp.stack(make_requests(n, 3), axis=1))
+        call = getattr(plan, op)
+        before = np.asarray(call(arg))
+        with faults.inject(point, error=RuntimeError("kernel died"), times=1):
+            with pytest.raises(RuntimeError, match="kernel died"):
+                call(arg)
+        after = np.asarray(call(arg))
+        assert (before == after).all()  # same jitted executor, bit for bit
+
+    @pytest.mark.parametrize("point, op", [("plan.spmv", "spmv"),
+                                           ("plan.spmm", "spmm")])
+    def test_nonfinite_poisons_result(self, point, op):
+        m = make_csr()
+        plan = SpMVPlan.compile(m, backend="xla")
+        n = m.shape[1]
+        arg = (make_requests(n, 1)[0] if op == "spmv"
+               else jnp.stack(make_requests(n, 3), axis=1))
+        with faults.inject(point, nonfinite=True, times=1, column=1):
+            y = getattr(plan, op)(arg)
+        assert not np.isfinite(np.asarray(y)).all()
+        if op == "spmm":  # only the targeted column is poisoned
+            finite_cols = np.isfinite(np.asarray(y)).all(axis=0)
+            assert not finite_cols[1] and finite_cols[0] and finite_cols[2]
+
+
+# ---------------------------------------------------------------------------
+# batching server surface
+# ---------------------------------------------------------------------------
+
+
+class TestServerChaos:
+    @pytest.mark.parametrize("point", ["serve.flush", "plan.spmm"])
+    def test_transient_error_retries_bitwise(self, point):
+        m = make_csr()
+        srv = make_server(m)
+        xs = make_requests(m.shape[1], 4)
+        clean = [np.asarray(f.result()) for f in
+                 [srv.submit("A", x) for x in xs]]
+        with faults.inject(point, error=RuntimeError("transient"), times=1) as spec:
+            futs = [srv.submit("A", x) for x in xs]
+            got = [np.asarray(f.result()) for f in futs]
+        assert spec.fired == 1
+        for a, b in zip(clean, got):
+            assert (a == b).all()
+        st = srv.stats()["A"]
+        assert st["retried"] == 1 and st["failed"] == 0
+
+    @pytest.mark.parametrize("point", ["serve.flush", "plan.spmm"])
+    def test_persistent_error_fails_structured_no_hang(self, point):
+        m = make_csr()
+        # no ladder escape: loop_reference also goes through plan.spmm, so
+        # a persistent fault there must end in structured per-request errors
+        srv = make_server(m, resilience=ResiliencePolicy(max_retries=1,
+                                                         breaker_threshold=100))
+        xs = make_requests(m.shape[1], 4)
+        with faults.inject(point, error=RuntimeError("persistent"), times=None):
+            futs = [srv.submit("A", x) for x in xs]
+            srv.flush("A")
+        for f in futs:
+            assert f.done()
+            err = f.error()
+            assert isinstance(err, KernelFault) and isinstance(err, RequestError)
+            with pytest.raises(KernelFault):
+                f.result()
+        assert srv.stats()["A"]["failed"] == 4
+
+    def test_poison_request_isolated_others_answered(self):
+        m = make_csr()
+        srv = make_server(m)
+        xs = make_requests(m.shape[1], 4)
+        clean = [np.asarray(f.result()) for f in
+                 [srv.submit("A", x) for x in xs]]
+        with faults.inject("plan.spmm", nonfinite=True, times=None, column=2):
+            futs = [srv.submit("A", x) for x in xs]
+            srv.flush("A")
+        errs = [f.error() for f in futs]
+        assert isinstance(errs[2], KernelFault) and errs[2].nonfinite
+        for i in (0, 1, 3):
+            assert errs[i] is None
+            assert np.isfinite(np.asarray(futs[i].result())).all()
+            assert (np.asarray(futs[i].result()) == clean[i]).all()
+
+    def test_no_silent_nan_ever(self):
+        # the invariant behind check_finite: a resolved value is finite
+        m = make_csr()
+        srv = make_server(m)
+        xs = make_requests(m.shape[1], 4)
+        with faults.inject("plan.spmm", nonfinite=True, times=None, column=0):
+            for _ in range(3):
+                futs = [srv.submit("A", x) for x in xs]
+                srv.flush("A")
+                for f in futs:
+                    if f.error() is None:
+                        assert np.isfinite(np.asarray(f.result())).all()
+
+    def test_breaker_degrades_and_recovers(self):
+        m = make_csr()
+        srv = make_server(m, backend="xla",
+                          resilience=ResiliencePolicy(max_retries=0,
+                                                      breaker_threshold=2))
+        assert "loop_reference" in srv.stats()["A"]["ladder"]
+        xs = make_requests(m.shape[1], 4)
+        clean = [np.asarray(f.result()) for f in
+                 [srv.submit("A", x) for x in xs]]
+        # fail ONLY the xla kernel, persistently: the breaker must trip and
+        # the degraded loop_reference backend must serve the same answers
+        with faults.inject("plan.spmm", error=RuntimeError("xla broken"),
+                           times=None,
+                           when=lambda ctx: ctx.get("kernel") == "xla") as spec:
+            futs = [srv.submit("A", x) for x in xs]
+            got = [np.asarray(f.result()) for f in futs]
+        assert spec.fired == 2  # threshold firings before the trip
+        st = srv.stats()["A"]
+        assert st["degraded"] == 1 and st["breaker_trips"] == 1
+        assert st["ladder"] == ()  # the one rung was consumed
+        assert srv.plan("A").report.kernel == "loop"
+        for a, b in zip(clean, got):
+            assert np.allclose(a, b, atol=1e-5)
+
+    def test_queue_full_fault_sheds(self):
+        m = make_csr()
+        srv = make_server(m)
+        x = make_requests(m.shape[1], 1)[0]
+        assert srv.submit("A", x).done() is False
+        with faults.inject("serve.queue_full",
+                           error=BackpressureError("injected"), times=1):
+            with pytest.raises(BackpressureError):
+                srv.submit("A", x)
+        st = srv.stats()["A"]
+        assert st["shed"] == 1
+        assert st["requests"] == 1  # the shed request was not admitted
+        srv.flush("A")
+
+    def test_straggler_delay_then_deadline_shed(self):
+        clock = FakeClock()
+        m = make_csr()
+        srv = make_server(
+            m, clock=clock,
+            resilience=ResiliencePolicy(request_timeout_s=0.2))
+        xs = make_requests(m.shape[1], 2)
+        # a slow flush (straggler kernel) advances the injected clock
+        f1 = srv.submit("A", xs[0])
+        with faults.inject("serve.flush", delay_s=0.5, times=1) as spec:
+            srv.flush("A")
+        assert spec.fired == 1 and clock.t == pytest.approx(0.5)
+        assert np.isfinite(np.asarray(f1.result())).all()  # slow, not wrong
+        # a request that out-waits its deadline is shed unexecuted
+        f2 = srv.submit("A", xs[1])
+        clock.advance(1.0)
+        srv.flush("A")
+        err = f2.error()
+        assert isinstance(err, DeadlineExceeded)
+        assert err.waited_s == pytest.approx(1.0)
+        assert srv.stats()["A"]["deadline_missed"] == 1
+
+    def test_per_request_timeout_override(self):
+        clock = FakeClock()
+        m = make_csr()
+        srv = make_server(m, clock=clock,
+                          resilience=ResiliencePolicy(request_timeout_s=10.0))
+        xs = make_requests(m.shape[1], 2)
+        f_tight = srv.submit("A", xs[0], timeout_s=0.1)
+        f_loose = srv.submit("A", xs[1])
+        clock.advance(1.0)
+        srv.flush("A")
+        assert isinstance(f_tight.error(), DeadlineExceeded)
+        assert f_loose.error() is None
+
+    def test_resilience_disabled_is_legacy(self):
+        m = make_csr()
+        srv = make_server(m, resilience=ResiliencePolicy(enabled=False))
+        xs = make_requests(m.shape[1], 4)
+        with faults.inject("plan.spmm", error=RuntimeError("legacy"), times=1):
+            futs = [srv.submit("A", x) for x in xs[:3]]
+            with pytest.raises(RuntimeError, match="legacy"):
+                srv.submit("A", xs[3])  # width reached -> flush -> propagate
+        assert not any(f.done() for f in futs)  # stranded, the old contract
+
+
+# ---------------------------------------------------------------------------
+# distributed surface (emulated mesh)
+# ---------------------------------------------------------------------------
+
+DIST_CHAOS_SNIPPET = """
+import json
+import numpy as np
+import jax.numpy as jnp
+from repro.core.formats import COO, CSR
+from repro.core.distributed_plan import compile_distributed_spmv_plan
+from repro.serve import BatchingSpMVServer, KernelFault, ResiliencePolicy
+from repro.testing import faults
+
+rng = np.random.default_rng(0)
+n = 64
+dense = (rng.random((n, n)) < 0.15) * rng.standard_normal((n, n))
+rows, cols = np.nonzero(dense)
+m = CSR.from_coo(COO(rows.astype(np.int32), cols.astype(np.int32),
+                     dense[rows, cols].astype(np.float32), (n, n)))
+x = jnp.asarray(rng.standard_normal(n), jnp.float32)
+out = {}
+
+plan = compile_distributed_spmv_plan(m, variant="overlap")
+out["parts"] = plan.parts
+y0 = np.asarray(plan(x))
+
+# shard death raises through the executor, recovery is bitwise
+with faults.inject("dist.spmv", error=faults.ShardDeath(1), times=1) as spec:
+    try:
+        plan(x)
+        out["shard_death_raised"] = False
+    except faults.ShardDeath as e:
+        out["shard_death_raised"] = True
+        out["dead_part"] = e.part
+out["recovery_bitwise"] = bool((np.asarray(plan(x)) == y0).all())
+
+# serving over the distributed plan: transient collective failure retries
+srv = BatchingSpMVServer(max_batch=4,
+                         resilience=ResiliencePolicy(max_retries=1))
+srv.register_distributed("D", m, variant="allgather")
+xs = [jnp.asarray(rng.standard_normal(n), jnp.float32) for _ in range(4)]
+clean = [np.asarray(f.result()) for f in [srv.submit("D", v) for v in xs]]
+with faults.inject("dist.spmm", error=RuntimeError("collective died"), times=1):
+    futs = [srv.submit("D", v) for v in xs]
+    got = [np.asarray(f.result()) for f in futs]
+out["served_retry_bitwise"] = bool(all((a == b).all() for a, b in zip(clean, got)))
+st = srv.stats()["D"]
+out["retried"] = st["retried"]
+out["failed"] = st["failed"]
+
+# persistent slab fault scoped to xla -> degrade to the loop oracles
+srv2 = BatchingSpMVServer(max_batch=4,
+                          resilience=ResiliencePolicy(max_retries=0,
+                                                      breaker_threshold=2))
+srv2.register_distributed("D", m, variant="allgather")
+with faults.inject("dist.spmm", error=RuntimeError("xla slab broken"),
+                   times=None,
+                   when=lambda ctx: ctx.get("backend") == "xla"):
+    futs = [srv2.submit("D", v) for v in xs]
+    got2 = [np.asarray(f.result()) for f in futs]
+st2 = srv2.stats()["D"]
+out["degraded"] = st2["degraded"]
+out["degraded_backend"] = srv2.plan("D").slab_backend
+out["degraded_close"] = bool(all(np.allclose(a, b, atol=1e-4)
+                                 for a, b in zip(clean, got2)))
+print(json.dumps(out))
+"""
+
+
+def test_distributed_chaos_emulated_4dev(emulated_devices_run):
+    out = emulated_devices_run(4, DIST_CHAOS_SNIPPET)
+    assert out["parts"] == 4
+    assert out["shard_death_raised"] and out["dead_part"] == 1
+    assert out["recovery_bitwise"]
+    assert out["served_retry_bitwise"]
+    assert out["retried"] == 1 and out["failed"] == 0
+    assert out["degraded"] == 1
+    assert out["degraded_backend"] == "loop_reference"
+    assert out["degraded_close"]
+
+
+@pytest.mark.multi_device
+class TestDistributedChaosInProcess:
+    """The same contracts, in-process, when the session has >= 4 devices
+    (the CI chaos job runs with REPRO_FORCE_DEVICES=4)."""
+
+    def _dist_server(self, resilience=None):
+        m = make_csr(n=64)
+        srv = BatchingSpMVServer(max_batch=4, clock=FakeClock(),
+                                 resilience=resilience)
+        srv.register_distributed("D", m, variant="overlap")
+        return srv, m
+
+    def test_shard_death_structured_on_future(self):
+        srv, m = self._dist_server(ResiliencePolicy(max_retries=0,
+                                                    breaker_threshold=100))
+        xs = make_requests(m.shape[1], 4)
+        clean = [np.asarray(f.result()) for f in
+                 [srv.submit("D", x) for x in xs]]
+        with faults.inject("dist.spmm", error=faults.ShardDeath(2), times=None):
+            futs = [srv.submit("D", x) for x in xs]
+            srv.flush("D")
+        for f in futs:
+            assert isinstance(f.error(), KernelFault)
+            assert isinstance(f.error().__cause__, faults.ShardDeath)
+        got = [np.asarray(f.result()) for f in
+               [srv.submit("D", x) for x in xs]]
+        assert all((a == b).all() for a, b in zip(clean, got))
+
+    def test_transient_collective_failure_retries_bitwise(self):
+        srv, m = self._dist_server()
+        xs = make_requests(m.shape[1], 4)
+        clean = [np.asarray(f.result()) for f in
+                 [srv.submit("D", x) for x in xs]]
+        with faults.inject("dist.spmm", error=RuntimeError("flaky ICI"),
+                           times=1) as spec:
+            got = [np.asarray(f.result()) for f in
+                   [srv.submit("D", x) for x in xs]]
+        assert spec.fired == 1
+        assert all((a == b).all() for a, b in zip(clean, got))
+        assert srv.stats()["D"]["retried"] == 1

@@ -119,6 +119,68 @@ def test_cli_exit_codes_and_summary(tmp_path, baseline):
     assert "REGRESSION" in bad.stdout
 
 
+class TestBounds:
+    """--bound 'path<=value': absolute invariants on the fresh artifact."""
+
+    PAYLOAD = {"serving": {"guardrails": {"overhead_ratio": 1.02},
+                           "speedup_at_width8": 3.0}}
+
+    def test_lookup_path(self):
+        assert check_bench.lookup_path(
+            self.PAYLOAD, "serving/guardrails/overhead_ratio") == 1.02
+        with pytest.raises(KeyError, match="not found"):
+            check_bench.lookup_path(self.PAYLOAD, "serving/missing/x")
+        with pytest.raises(TypeError, match="not numeric"):
+            check_bench.lookup_path({"a": {"b": "str"}}, "a/b")
+
+    def test_upper_and_lower_bounds(self):
+        ok, _ = check_bench.check_bound(
+            self.PAYLOAD, "serving/guardrails/overhead_ratio<=1.05")
+        assert ok
+        ok, line = check_bench.check_bound(
+            self.PAYLOAD, "serving/guardrails/overhead_ratio<=1.01")
+        assert not ok and "FAILED" in line
+        ok, _ = check_bench.check_bound(
+            self.PAYLOAD, "serving/speedup_at_width8>=2.0")
+        assert ok
+        ok, _ = check_bench.check_bound(
+            self.PAYLOAD, "serving/speedup_at_width8>=5.0")
+        assert not ok
+
+    def test_missing_path_fails_not_skips(self):
+        # an invariant that stopped being measured is itself a regression
+        ok, line = check_bench.check_bound(self.PAYLOAD, "gone/metric<=1.0")
+        assert not ok and "FAILED" in line
+
+    def test_malformed_spec_raises(self):
+        with pytest.raises(ValueError, match="expected"):
+            check_bench.check_bound(self.PAYLOAD, "no-operator-here")
+        with pytest.raises(ValueError, match="not a number"):
+            check_bench.check_bound(self.PAYLOAD, "a/b<=abc")
+
+    def test_cli_bound_gates_exit_code(self, tmp_path, baseline):
+        new = copy.deepcopy(baseline)
+        new["serving"]["guardrails"] = {"overhead_ratio": 1.10}
+        new_p = tmp_path / "new.json"
+        new_p.write_text(json.dumps(new))
+        base_p = tmp_path / "base.json"
+        base_p.write_text(json.dumps(baseline))
+
+        def run(*bounds):
+            cmd = [sys.executable, str(REPO_ROOT / "tools" / "check_bench.py"),
+                   "--new", str(new_p), "--baseline", str(base_p)]
+            for b in bounds:
+                cmd += ["--bound", b]
+            return subprocess.run(cmd, capture_output=True, text=True)
+
+        # geomean passes (identical metrics) but the bound fails -> exit 1
+        r = run("serving/guardrails/overhead_ratio<=1.05")
+        assert r.returncode == 1 and "bound FAILED" in r.stdout
+        # relaxed bound passes
+        r = run("serving/guardrails/overhead_ratio<=1.20")
+        assert r.returncode == 0 and "bound ok" in r.stdout
+
+
 def test_committed_artifacts_are_gate_compatible():
     """The real committed trajectory must share metrics (the CI gate's
     comparison is not vacuous) and the PR3 artifact must pass against

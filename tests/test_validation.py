@@ -1,0 +1,282 @@
+"""Input-validation layer: matrix/vector checks, malformed-file provenance,
+per-dtype tree finiteness, and Lanczos breakdown detection."""
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core.eigensolver import LanczosBreakdown, lanczos  # noqa: E402
+from repro.core.formats import COO, CSR  # noqa: E402
+from repro.core.io import read_mtx, write_mtx  # noqa: E402
+from repro.core.plan import SpMVPlan  # noqa: E402
+from repro.core.validate import (  # noqa: E402
+    MatrixFormatError,
+    MatrixValidationError,
+    VectorValidationError,
+    dtype_overflow_count,
+    inspect_matrix,
+    validate_matrix,
+    validate_vector,
+)
+from repro.utils.tree import tree_any_nan, tree_any_nonfinite  # noqa: E402
+
+MALFORMED = __import__("pathlib").Path(__file__).parent / "fixtures" / "malformed"
+
+
+def _clean_csr(n=8):
+    rng = np.random.default_rng(3)
+    dense = (rng.random((n, n)) < 0.4) * rng.standard_normal((n, n))
+    rows, cols = np.nonzero(dense)
+    return CSR.from_coo(COO(rows.astype(np.int32), cols.astype(np.int32),
+                            dense[rows, cols].astype(np.float32), (n, n)))
+
+
+# ---------------------------------------------------------------------------
+# matrix validation policies
+# ---------------------------------------------------------------------------
+
+
+class TestValidateMatrix:
+    def test_clean_matrix_passes_strict(self):
+        m = _clean_csr()
+        assert validate_matrix(m, policy="strict") is m
+
+    def test_off_returns_untouched(self):
+        bad = CSR(np.array([0, 1], np.int32), np.array([99], np.int32),
+                  np.array([1.0], np.float32), (1, 4))
+        assert validate_matrix(bad, policy="off") is bad
+
+    def test_unknown_policy_rejected(self):
+        with pytest.raises(ValueError, match="unknown validation policy"):
+            validate_matrix(_clean_csr(), policy="lenient")
+
+    def test_oob_index_strict(self):
+        bad = CSR(np.array([0, 2], np.int32), np.array([0, 99], np.int32),
+                  np.array([1.0, 2.0], np.float32), (1, 4))
+        with pytest.raises(MatrixValidationError, match="out of range"):
+            validate_matrix(bad)
+
+    def test_oob_index_repaired(self):
+        bad = CSR(np.array([0, 2], np.int32), np.array([0, 99], np.int32),
+                  np.array([1.0, 2.0], np.float32), (1, 4))
+        fixed = validate_matrix(bad, policy="repair")
+        assert fixed.nnz == 1
+        assert "dropped 1 out-of-range entries" in fixed._repairs
+
+    def test_duplicates_merged_by_repair(self):
+        dup = COO(np.array([0, 0, 1], np.int32), np.array([1, 1, 0], np.int32),
+                  np.array([2.0, 3.0, 1.0], np.float32), (2, 2))
+        with pytest.raises(MatrixValidationError, match="duplicate"):
+            validate_matrix(dup)
+        fixed = validate_matrix(dup, policy="repair")
+        assert fixed.nnz == 2
+        dense = np.zeros((2, 2), np.float32)
+        dense[np.asarray(fixed.rows), np.asarray(fixed.cols)] = np.asarray(fixed.vals)
+        assert dense[0, 1] == 5.0  # duplicate values summed
+
+    def test_nonfinite_values_strict_and_repair(self):
+        bad = COO(np.array([0, 1], np.int32), np.array([0, 1], np.int32),
+                  np.array([np.nan, 2.0], np.float32), (2, 2))
+        with pytest.raises(MatrixValidationError, match="non-finite"):
+            validate_matrix(bad)
+        fixed = validate_matrix(bad, policy="repair")
+        assert np.isfinite(np.asarray(fixed.vals)).all()
+
+    def test_unsorted_csr_detected(self):
+        m = CSR(np.array([0, 2], np.int32), np.array([3, 1], np.int32),
+                np.array([1.0, 2.0], np.float32), (1, 4))
+        rep = inspect_matrix(m)
+        assert any("not sorted" in p for p in rep.problems)
+        fixed = validate_matrix(m, policy="repair")
+        assert np.all(np.diff(np.asarray(fixed.col_idx)) > 0)
+
+    def test_broken_row_ptr(self):
+        m = CSR(np.array([0, 2, 1], np.int32), np.array([0, 1], np.int32),
+                np.array([1.0, 2.0], np.float32), (2, 2))
+        with pytest.raises(MatrixValidationError, match="monotone"):
+            validate_matrix(m)
+
+    def test_dtype_overflow_counted(self):
+        vals = np.array([1.0, 1e300, -4e38], np.float64)
+        assert dtype_overflow_count(vals, np.float32) == 2
+        assert dtype_overflow_count(vals, np.float64) == 0
+        big = COO(np.arange(3, dtype=np.int32), np.arange(3, dtype=np.int32),
+                  vals, (3, 3))
+        with pytest.raises(MatrixValidationError, match="overflow"):
+            validate_matrix(big, value_dtype=np.float32)
+
+    def test_plan_compile_validates(self):
+        bad = CSR(np.array([0, 1], np.int32), np.array([99], np.int32),
+                  np.array([1.0], np.float32), (1, 4))
+        with pytest.raises(MatrixValidationError):
+            SpMVPlan.compile(bad, validate="strict")
+        plan = SpMVPlan.compile(bad, validate="repair")
+        assert plan.report.nnz == 0  # the one bad entry was dropped
+
+
+class TestValidateVector:
+    def test_bad_shape_raises_under_every_policy(self):
+        for policy in ("strict", "repair", "off"):
+            with pytest.raises(VectorValidationError, match="expected"):
+                validate_vector(jnp.zeros(3), 4, policy=policy)
+
+    def test_strict_rejects_nan(self):
+        x = jnp.asarray([1.0, np.nan, 3.0], jnp.float32)
+        with pytest.raises(VectorValidationError, match="non-finite"):
+            validate_vector(x, 3, policy="strict")
+
+    def test_repair_zeroes_nonfinite(self):
+        x = jnp.asarray([1.0, np.nan, np.inf], jnp.float32)
+        y = validate_vector(x, 3, policy="repair")
+        assert np.array_equal(np.asarray(y), [1.0, 0.0, 0.0])
+
+    def test_off_passes_anything_finite_shaped(self):
+        x = jnp.asarray([np.nan], jnp.float32)
+        assert validate_vector(x, 1, policy="off") is x
+
+
+# ---------------------------------------------------------------------------
+# malformed MatrixMarket files: error class + line provenance
+# ---------------------------------------------------------------------------
+
+
+class TestMalformedFiles:
+    @pytest.mark.parametrize("fixture, line, match", [
+        ("bad_banner.mtx", 1, "not a MatrixMarket file"),
+        ("bad_size_line.mtx", 3, "bad size line"),
+        ("nonnumeric_entry.mtx", 4, "not numeric"),
+        ("oob_entry.mtx", 5, "out of range"),
+        ("count_mismatch.mtx", 2, "declares 5 entries"),
+        ("too_few_fields.mtx", 4, "fields"),
+    ])
+    def test_line_provenance(self, fixture, line, match):
+        path = MALFORMED / fixture
+        with pytest.raises(MatrixFormatError, match=match) as ei:
+            read_mtx(path)
+        assert ei.value.line == line
+        assert str(path) in str(ei.value)
+        assert f":{line}:" in str(ei.value)
+
+    def test_format_error_is_value_error(self):
+        with pytest.raises(ValueError):
+            read_mtx(MALFORMED / "bad_banner.mtx")
+
+    def test_nan_value_policy(self):
+        path = MALFORMED / "nan_value.mtx"
+        with pytest.raises(MatrixValidationError, match="non-finite"):
+            read_mtx(path)
+        coo = read_mtx(path, validate="off")
+        assert np.isnan(np.asarray(coo.vals)).any()
+        fixed = read_mtx(path, validate="repair")
+        assert np.isfinite(np.asarray(fixed.vals)).all()
+        assert fixed._source == str(path)  # provenance survives the repair
+
+    def test_duplicate_entries_policy(self):
+        path = MALFORMED / "duplicate_entries.mtx"
+        with pytest.raises(MatrixValidationError, match="duplicate"):
+            read_mtx(path)
+        fixed = read_mtx(path, validate="repair")
+        assert fixed.nnz == 3
+
+    def test_clean_roundtrip_still_works(self, tmp_path):
+        m = _clean_csr()
+        p = write_mtx(tmp_path / "ok.mtx", m.to_coo())
+        coo = read_mtx(p)
+        assert coo.nnz == m.nnz
+
+
+# ---------------------------------------------------------------------------
+# per-dtype tree finiteness (the f32-upcast regression)
+# ---------------------------------------------------------------------------
+
+
+class TestTreeFiniteness:
+    def test_nan_detected_in_native_dtype(self):
+        for dt in (jnp.float16, jnp.bfloat16, jnp.float32):
+            tree = {"w": jnp.asarray([1.0, np.nan], dt)}
+            assert tree_any_nan(tree)
+            assert tree_any_nonfinite(tree)
+
+    def test_inf_detected_without_upcast(self):
+        # f16 Inf: the old ``.astype(jnp.float32)`` path kept this finite
+        # under isnan; tree_any_nonfinite must flag it in the leaf's dtype
+        tree = {"w": jnp.asarray([1.0, np.inf], jnp.float16)}
+        assert not tree_any_nan(tree)
+        assert tree_any_nonfinite(tree)
+
+    def test_f16_overflow_scale_is_nonfinite(self):
+        # a value representable in f32 but not f16 can only exist in the
+        # tree as f16 Inf — the check must see it without any cast
+        x = np.float16(70000.0)  # overflows f16 -> inf at construction
+        tree = {"w": jnp.asarray([x], jnp.float16)}
+        assert tree_any_nonfinite(tree)
+
+    def test_clean_and_nonfloat_trees(self):
+        tree = {"a": jnp.ones(3, jnp.float16), "b": jnp.arange(3)}
+        assert not tree_any_nan(tree)
+        assert not tree_any_nonfinite(tree)
+        assert not tree_any_nonfinite({"ints": jnp.arange(4)})
+
+
+# ---------------------------------------------------------------------------
+# Lanczos breakdown detection + restart
+# ---------------------------------------------------------------------------
+
+
+class TestLanczosBreakdown:
+    def _matrix(self, n=32):
+        rng = np.random.default_rng(5)
+        dense = rng.standard_normal((n, n)).astype(np.float32)
+        dense = (dense + dense.T) / 2
+        return dense
+
+    def test_nan_operator_raises_structured(self):
+        dense = self._matrix()
+        calls = {"n": 0}
+
+        def apply_A(v):
+            calls["n"] += 1
+            y = jnp.asarray(dense) @ v
+            return y.at[0].set(jnp.nan)
+
+        with pytest.raises(LanczosBreakdown) as ei:
+            lanczos(apply_A, dense.shape[0], m=8, dtype=jnp.float32)
+        assert ei.value.iteration == 0
+        assert not np.isfinite(ei.value.alpha) or not np.isfinite(ei.value.beta)
+
+    def test_transient_fault_restart_recovers(self):
+        dense = self._matrix()
+        calls = {"n": 0}
+
+        def apply_A(v):
+            calls["n"] += 1
+            y = jnp.asarray(dense) @ v
+            if calls["n"] == 1:  # only the very first SpMV is poisoned
+                y = y.at[0].set(jnp.nan)
+            return y
+
+        r = lanczos(apply_A, dense.shape[0], m=32, dtype=jnp.float32,
+                    on_breakdown="restart")
+        ref = np.linalg.eigvalsh(dense)
+        assert abs(r.eigenvalues[0] - ref[0]) < 1e-2
+        assert r.n_spmv == calls["n"]  # failed attempt's SpMVs are counted
+
+    def test_persistent_fault_exhausts_restarts(self):
+        def apply_A(v):
+            return jnp.full_like(v, jnp.nan)
+
+        with pytest.raises(LanczosBreakdown):
+            lanczos(apply_A, 16, m=4, dtype=jnp.float32,
+                    on_breakdown="restart", max_restarts=2)
+
+    def test_unknown_on_breakdown_rejected(self):
+        with pytest.raises(ValueError, match="on_breakdown"):
+            lanczos(lambda v: v, 4, m=2, on_breakdown="ignore")
+
+    def test_clean_solve_unchanged(self):
+        dense = self._matrix()
+        r = lanczos(jnp.asarray(dense).__matmul__, dense.shape[0], m=32,
+                    dtype=jnp.float32)
+        ref = np.linalg.eigvalsh(dense)
+        assert abs(r.eigenvalues[0] - ref[0]) < 1e-2

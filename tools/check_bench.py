@@ -21,10 +21,19 @@ Regenerate and commit the baseline from the same runner class as CI (the
 lineage in docs/BENCHMARKS.md does exactly this), or widen --tolerance
 when the runner fleet changes.
 
+Besides the relative geomean gate, ``--bound`` asserts *absolute*
+invariants on the fresh artifact alone — machine-independent ratios the
+baseline comparison cannot express (e.g. the serving guardrails must cost
+at most 5% throughput: ``--bound "serving/guardrails/overhead_ratio<=1.05"``).
+The path navigates the nested JSON with ``/`` separators; a missing path
+fails the gate (an invariant that silently stops being measured is itself
+a regression).
+
 Usage::
 
     PYTHONPATH=src python tools/check_bench.py \
-        --new BENCH_PR4.json --baseline BENCH_PR3.json --tolerance 0.25 \
+        --new BENCH_PR6.json --baseline BENCH_PR5.json --tolerance 0.25 \
+        --bound "serving/guardrails/overhead_ratio<=1.05" \
         --summary-file "$GITHUB_STEP_SUMMARY"
 
 Exit code 1 = regression (build fails), 0 = within tolerance.
@@ -125,6 +134,48 @@ def compare(new: dict, baseline: dict, tolerance: float = 0.25) -> Comparison:
     )
 
 
+def lookup_path(payload: dict, path: str) -> float:
+    """Resolve a ``/``-separated path to a numeric leaf of the artifact.
+
+    Raises KeyError (missing key / non-dict intermediate) or TypeError
+    (non-numeric leaf) — both mean the bound cannot be checked, which the
+    gate treats as a failure, not a skip.
+    """
+    node = payload
+    for part in path.split("/"):
+        if not isinstance(node, dict) or part not in node:
+            raise KeyError(f"path {path!r} not found in artifact (at {part!r})")
+        node = node[part]
+    if isinstance(node, bool) or not isinstance(node, (int, float)):
+        raise TypeError(f"path {path!r} is not numeric: {node!r}")
+    return float(node)
+
+
+def check_bound(payload: dict, spec: str) -> tuple[bool, str]:
+    """Evaluate one ``--bound`` spec ("path<=value" or "path>=value").
+
+    Returns (ok, human-readable line).  A malformed spec raises ValueError
+    at parse time; an unresolvable path reports ok=False (see
+    ``lookup_path``).
+    """
+    for op in ("<=", ">="):
+        if op in spec:
+            path, _, raw = spec.partition(op)
+            path, raw = path.strip(), raw.strip()
+            try:
+                limit = float(raw)
+            except ValueError:
+                raise ValueError(f"bound {spec!r}: limit {raw!r} is not a number")
+            try:
+                value = lookup_path(payload, path)
+            except (KeyError, TypeError) as e:
+                return False, f"bound FAILED  {spec} ({e})"
+            ok = value <= limit if op == "<=" else value >= limit
+            verdict = "ok" if ok else "FAILED"
+            return ok, f"bound {verdict:6s}  {path} = {value:.4f} {op} {limit}"
+    raise ValueError(f"bound {spec!r}: expected 'path<=value' or 'path>=value'")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--new", required=True, help="fresh artifact JSON path")
@@ -134,6 +185,10 @@ def main(argv=None) -> int:
     ap.add_argument("--summary-file", default=None,
                     help="append the one-line verdict here (e.g. "
                          "$GITHUB_STEP_SUMMARY)")
+    ap.add_argument("--bound", action="append", default=[],
+                    help="absolute invariant on the fresh artifact, "
+                         "'path<=value' or 'path>=value' with /-separated "
+                         "path (repeatable); a missing path fails the gate")
     args = ap.parse_args(argv)
 
     with open(args.new) as fh:
@@ -142,17 +197,26 @@ def main(argv=None) -> int:
         baseline = json.load(fh)
     cmp = compare(new, baseline, tolerance=args.tolerance)
 
-    print(cmp.summary_line())
+    lines = [cmp.summary_line()]
+    print(lines[0])
     if cmp.n_shared == 0:
         print("note: artifacts share no metrics; nothing to gate on")
     worst = sorted(cmp.ratios.items(), key=lambda kv: kv[1])[:8]
     for k, r in worst:
         marker = "REGRESSED" if k in cmp.regressions else "ok"
         print(f"  {r:6.2f}x  {marker:9s} {k}")
+
+    bounds_ok = True
+    for spec in args.bound:
+        ok, line = check_bound(new, spec)
+        bounds_ok &= ok
+        lines.append(line)
+        print(line)
+
     if args.summary_file:
         with open(args.summary_file, "a") as fh:
-            fh.write(cmp.summary_line() + "\n")
-    return 0 if cmp.ok else 1
+            fh.write("\n".join(lines) + "\n")
+    return 0 if (cmp.ok and bounds_ok) else 1
 
 
 if __name__ == "__main__":
