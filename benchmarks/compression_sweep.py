@@ -1,0 +1,198 @@
+"""Value-compression sweep — the error-vs-speed receipt for ``value_dtype``.
+
+The balance model says narrowing the stored values attacks SpMV's largest
+byte term directly (DESIGN.md "Value compression").  On one host thread
+that win is invisible here — a single core is compute-bound (~2 GFlop/s
+through XLA:CPU) and never saturates the bus — which is exactly the
+paper's multicore argument.  So this module measures where the paper
+measures: a slab-parallel SpMV ``pmap``'d across every local device
+(the CI distributed job forces 8 host devices on one memory bus, the
+``fig8_parallel_scaling`` setup), on out-of-cache scaled variants of the
+corpus banded family, where the value stream dominates the traffic.
+
+Two receipts per dtype:
+
+* **speed** — slab SpMV wall time vs the f32 twin of the same matrix
+  (``speedup_vs_f32``; the PR 7 acceptance bar is >= 1.3x for bf16/int8
+  on >= 3 matrices);
+* **error** — max output relerr vs the f32 slab result, plus the
+  physics gate: the Holstein Lanczos ground-state eigenvalue error per
+  dtype on the corpus ``holstein_surrogate``
+  (``compression/holstein/<dtype>/eig_err``, bounded in CI via
+  ``check_bench --bound``).
+
+Feeds the ``compression`` section of BENCH_PR7.json; keys are
+``compression/<matrix>/<dtype>/{speedup_vs_f32,relerr}``.
+"""
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import corpus
+from repro.core import formats as F
+from repro.core.eigensolver import lanczos
+from repro.core.matrices import random_banded
+
+from .common import row
+
+#: storage dtypes swept (f32 is the baseline the speedups are against)
+DTYPES = ("f32", "bf16", "f16", "fp8_e4m3", "int8")
+
+#: out-of-cache scaled variants of the corpus ``banded_narrow`` family:
+#: (name, per-slab builder).  Rows per slab are sized so the aggregate f32
+#: value stream (~60-160 MB across 8 slabs) spills every cache level.
+MATRICES = (
+    ("banded_narrow_xl", lambda s, n: random_banded(n, 8, 0.9, seed=10 + s)),
+    ("banded_tri_xl", lambda s, n: random_banded(n, 1, 1.0, seed=20 + s)),
+    ("banded_penta_xl", lambda s, n: random_banded(n, 2, 1.0, seed=30 + s)),
+)
+
+#: per-slab rows (quick mode); ``--full`` doubles them
+SLAB_ROWS = {"banded_narrow_xl": 300_000, "banded_tri_xl": 600_000,
+             "banded_penta_xl": 400_000}
+
+
+def _slab_dia_spmv(offsets, n, d, x, sc):
+    """One slab's DIA SpMV: static per-diagonal loop of dynamic slices
+    (no gather index table), f32 accumulation, post-multiply scale."""
+    acc = jnp.zeros(n, jnp.float32)
+    for k, off in enumerate(offsets):
+        dk = d[k].astype(jnp.float32)
+        if sc is not None:
+            dk = dk * sc[k]
+        if off >= 0:
+            if off >= n:
+                continue
+            seg = jax.lax.dynamic_slice(x, (off,), (n - off,))
+            acc = acc.at[:n - off].add(dk[:n - off] * seg)
+        else:
+            o = -off
+            if o >= n:
+                continue
+            seg = jax.lax.dynamic_slice(x, (0,), (n - o,))
+            acc = acc.at[o:].add(dk[o:] * seg)
+    return acc
+
+
+def _stack_slabs(slabs, vd):
+    """Convert each slab to DIA, then quantize in DIA's per-diagonal scale
+    layout (``convert`` refuses the other order), stack to pmap operands."""
+    dias = [F.convert(m, "dia", value_dtype=vd) for m in slabs]
+    nd = min(len(np.asarray(d.offsets)) for d in dias)
+    data = jnp.stack([d.data[:nd] for d in dias])
+    scale = (None if dias[0].scale is None
+             else jnp.stack([jnp.asarray(d.scale)[:nd].astype(jnp.float32)
+                             for d in dias]))
+    offsets = tuple(int(o) for o in np.asarray(dias[0].offsets)[:nd])
+    return offsets, data, scale
+
+
+def _time_pmap(fn, args, iters: int, repeats: int = 5) -> float:
+    jax.block_until_ready(fn(*args))
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        y = None
+        for _ in range(iters):
+            y = fn(*args)
+        jax.block_until_ready(y)
+        best = min(best, (time.perf_counter() - t0) / iters)
+    return best
+
+
+def sweep_matrix(name: str, builder, *, full: bool = False,
+                 iters: int = 4) -> dict:
+    n_dev = jax.local_device_count()
+    n = SLAB_ROWS[name] * (2 if full else 1)
+    slabs = [builder(s, n) for s in range(n_dev)]
+    nnz = sum(m.nnz for m in slabs)
+    xs = jnp.stack([jnp.asarray(np.random.default_rng(s)
+                                .standard_normal(n).astype(np.float32))
+                    for s in range(n_dev)])
+    out = {"devices": n_dev, "n_per_slab": n, "nnz_total": nnz}
+    base_t = base_y = None
+    for vd in DTYPES:
+        offsets, data, scale = _stack_slabs(slabs, vd)
+        body = functools.partial(_slab_dia_spmv, offsets, n)
+        if scale is None:
+            fn = jax.pmap(lambda d, x: body(d, x, None))
+            args = (data, xs)
+        else:
+            fn = jax.pmap(body)
+            args = (data, xs, scale)
+        t = _time_pmap(fn, args, iters)
+        y = np.asarray(fn(*args))
+        if vd == "f32":
+            base_t, base_y = t, y
+        relerr = float(np.max(np.abs(y - base_y)) / np.max(np.abs(base_y)))
+        out[vd] = {
+            "t_measured_s": t,
+            "gflops": 2.0 * nnz / t / 1e9,
+            "speedup_vs_f32": base_t / t,
+            "relerr": relerr,
+            "value_bytes": int(np.dtype(F.VALUE_DTYPES[vd]).itemsize),
+        }
+    return out
+
+
+def holstein_eig_errors(*, steps: int = 48) -> dict:
+    """Lanczos ground-state relative error per value dtype on the corpus
+    Holstein surrogate — the accuracy side of the error-vs-speed frontier,
+    and the quantity CI bounds."""
+    m = corpus.build("holstein_surrogate")
+    e_ref = lanczos(m, m.shape[0], m=steps, format="sell").eigenvalues[0]
+    out = {"e_ref": float(e_ref), "steps": steps}
+    for vd in DTYPES:
+        e = lanczos(m, m.shape[0], m=steps, format="sell",
+                    value_dtype=vd).eigenvalues[0]
+        out[vd] = {"eig": float(e),
+                   "eig_err": float(abs(e - e_ref) / abs(e_ref))}
+    return out
+
+
+def measure(*, full: bool = False) -> dict:
+    out = {"backend": jax.default_backend(),
+           "devices": jax.local_device_count(),
+           "matrices": {}}
+    for name, builder in MATRICES:
+        out["matrices"][name] = sweep_matrix(name, builder, full=full)
+    out["holstein"] = holstein_eig_errors()
+    ok = sum(1 for e in out["matrices"].values()
+             if max(e["bf16"]["speedup_vs_f32"],
+                    e["int8"]["speedup_vs_f32"]) >= 1.3)
+    out["summary"] = {
+        "n_matrices": len(out["matrices"]),
+        "n_compression_wins": ok,
+        "geomean_int8_speedup": float(np.exp(np.mean(
+            [np.log(e["int8"]["speedup_vs_f32"])
+             for e in out["matrices"].values()]))),
+    }
+    return out
+
+
+def run(full: bool = False):
+    res = measure(full=full)
+    rows = []
+    for name, e in res["matrices"].items():
+        for vd in DTYPES:
+            rows.append(row("compression", f"{name}/{vd}",
+                            e[vd]["speedup_vs_f32"],
+                            f"{e[vd]['gflops']:.3f}GF",
+                            f"relerr={e[vd]['relerr']:.2e}"))
+    for vd in DTYPES:
+        rows.append(row("compression", f"holstein/{vd}/eig_err",
+                        res["holstein"][vd]["eig_err"]))
+    rows.append(row("compression", "summary",
+                    res["summary"]["n_compression_wins"],
+                    f"geomean_int8={res['summary']['geomean_int8_speedup']:.2f}x"))
+    return rows
+
+
+def run_json(full: bool = False) -> dict:
+    """The ``compression`` section of the BENCH_PR7.json artifact."""
+    return measure(full=full)

@@ -38,10 +38,11 @@ MODULES = [
     "serve_throughput",
     "corpus_sweep",
     "backend_sweep",
+    "compression_sweep",
 ]
 
 #: current perf-trajectory tag; --json with no PATH writes BENCH_<tag>.json
-DEFAULT_BENCH_TAG = "PR6"
+DEFAULT_BENCH_TAG = "PR7"
 
 
 def main(argv=None) -> int:
@@ -58,6 +59,7 @@ def main(argv=None) -> int:
 
     if args.json is not None:
         from benchmarks.backend_sweep import run_json as backend_json
+        from benchmarks.compression_sweep import run_json as compression_json
         from benchmarks.corpus_sweep import run_json as corpus_json
         from benchmarks.plan_bench import run_json
         from benchmarks.serve_throughput import run_json as serve_json
@@ -66,6 +68,7 @@ def main(argv=None) -> int:
         payload["serving"] = serve_json(full=args.full)
         payload["corpus"] = corpus_json(full=args.full)
         payload["backends"] = backend_json(full=args.full)
+        payload["compression"] = compression_json(full=args.full)
         out_path.parent.mkdir(parents=True, exist_ok=True)
         with open(out_path, "w") as fh:
             json.dump(payload, fh, indent=2, sort_keys=True)
@@ -94,6 +97,13 @@ def main(argv=None) -> int:
         print(f"# backends: {payload['backends']['registered_entries']} "
               f"registry entries, auto-backend match rate "
               f"{bs['auto_match_rate']:.2f} over {bs['n_matrices']} matrices",
+              file=sys.stderr)
+        comp = payload["compression"]["summary"]
+        print(f"# compression: bf16/int8 >= 1.3x on "
+              f"{comp['n_compression_wins']}/{comp['n_matrices']} matrices, "
+              f"geomean int8 speedup {comp['geomean_int8_speedup']:.2f}x, "
+              f"holstein int8 eig_err "
+              f"{payload['compression']['holstein']['int8']['eig_err']:.2e}",
               file=sys.stderr)
         return 0
 

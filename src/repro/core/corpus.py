@@ -33,7 +33,7 @@ from typing import Callable
 import numpy as np
 
 from . import io as mio
-from .formats import CSR, matrix_stats
+from .formats import CSR, DEFAULT_SELL_SIGMA, matrix_stats
 from .matrices import (
     HolsteinHubbardParams,
     block_sparse_dense,
@@ -76,7 +76,7 @@ class MatrixSpec:
     build: Callable[[], CSR]
     formats: tuple = BASE_FORMATS
     sell_C: int = 8
-    sell_sigma: int = 256
+    sell_sigma: int = DEFAULT_SELL_SIGMA
     convert_kwargs: dict = field(default_factory=dict)
 
     def sell_kwargs(self) -> dict:
@@ -142,7 +142,8 @@ def row_length_histogram(lens: np.ndarray) -> dict:
     return {"edges": edges, "counts": counts.tolist()}
 
 
-def corpus_stats(m: CSR, C: int = 8, sigma: int | None = 256) -> dict:
+def corpus_stats(m: CSR, C: int = 8,
+                 sigma: int | None = DEFAULT_SELL_SIGMA) -> dict:
     """``formats.matrix_stats`` plus the corpus-level structural numbers.
 
     Adds the nnz/row histogram, the populated-diagonal count, and the
@@ -154,7 +155,10 @@ def corpus_stats(m: CSR, C: int = 8, sigma: int | None = 256) -> dict:
     lens = m.row_lengths()
     coo = m.to_coo()
     offs = np.asarray(coo.cols, np.int64) - np.asarray(coo.rows, np.int64)
-    sig = sigma if sigma is not None else m.shape[0]
+    # mirror SELL.from_csr's sigma=None resolution exactly: the stats must
+    # describe the packing the conversion would actually execute
+    sig = max(1, min(m.shape[0], DEFAULT_SELL_SIGMA)) if sigma is None \
+        else max(1, min(m.shape[0], sigma))
     s["nnz_per_row_hist"] = row_length_histogram(lens)
     s["n_populated_diags"] = int(len(np.unique(offs)))
     s["ell_occupancy"] = 1.0 / max(1e-9, ell_pad_ratio(lens))

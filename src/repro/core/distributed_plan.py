@@ -90,7 +90,7 @@ def plan_shard_formats(
     bounds: np.ndarray,
     *,
     C: int = 8,
-    am: PM.AccessModel = PM.TPU_FP32,
+    am: PM.AccessModel | None = None,
     chip: ChipSpec = TPU_V5E,
     formats: tuple = SLAB_FORMATS,
 ) -> list[ShardReport]:
@@ -113,6 +113,8 @@ def plan_shard_formats(
         predicted times and the per-shard best choice.
     """
     _PACK_STATS["format_selections"] += 1
+    if am is None:
+        am = PM.access_model_for(m, chip)
     parts = len(bounds) - 1
     lens = m.row_lengths()
     rp = np.asarray(m.row_ptr, dtype=np.int64)
@@ -653,7 +655,7 @@ def compile_distributed_spmv_plan(
     axis: str = "data",
     C: int = 8,
     chip: ChipSpec = TPU_V5E,
-    am: PM.AccessModel = PM.TPU_FP32,
+    am: PM.AccessModel | None = None,
     backend: str = "auto",
 ) -> DistributedSpMVPlan:
     """Partition ``m`` over the mesh and return a memoized distributed plan.
@@ -671,6 +673,8 @@ def compile_distributed_spmv_plan(
         raise ValueError(f"unknown variant {variant!r}; expected one of {VARIANTS}")
     be = _resolve_slab_backend(backend)
     m = _as_csr(m)
+    if am is None:  # dtype-honest default: charge the stored value bytes
+        am = PM.access_model_for(m, chip)
     mesh = mesh if mesh is not None else make_mesh_1d(axis)
     parts = int(mesh.shape[axis])
     dev_ids = tuple(int(d.id) for d in np.asarray(mesh.devices).flat)

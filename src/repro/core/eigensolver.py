@@ -48,7 +48,8 @@ class LanczosBreakdown(RuntimeError):
 
 
 def as_apply(op, *, mesh=None, variant: str = "overlap",
-             format: str | None = None, backend: str = "auto") -> Apply:
+             format: str | None = None, value_dtype: str | None = None,
+             backend: str = "auto") -> Apply:
     """Normalize the injected operator: a callable (closure, jitted fn,
     ``SpMVPlan``, or ``DistributedSpMVPlan``) passes through; a bare format
     container is compiled into a plan once, so every Lanczos iteration
@@ -62,14 +63,17 @@ def as_apply(op, *, mesh=None, variant: str = "overlap",
     ``format`` is forwarded to ``SpMVPlan.compile`` for bare containers:
     ``format="auto"`` lets ``perfmodel.select_format`` choose the storage
     scheme from the Hamiltonian's own structure before planning.
+    ``value_dtype`` compresses the stored matrix values before planning
+    (Lanczos tolerates surprisingly low precision in the matrix apply —
+    the recurrence coefficients are still accumulated in f64).
     ``backend`` (default ``"auto"``: capability probes + the roofline
     ranking through ``kernels.registry``) is forwarded to both the local
     and the distributed compile.
     """
     if mesh is not None and not callable(op):
-        if format is not None:
+        if format is not None or value_dtype is not None:
             raise ValueError(
-                "format= applies to local plans only; distributed compiles "
+                "format=/value_dtype= apply to local plans only; distributed compiles "
                 "pick their slab packing per partition (see "
                 "compile_distributed_spmv_plan's slab_format)")
         from .distributed_plan import compile_distributed_spmv_plan
@@ -80,7 +84,8 @@ def as_apply(op, *, mesh=None, variant: str = "overlap",
         return op
     from .plan import SpMVPlan
 
-    return SpMVPlan.compile(op, format=format, backend=backend)
+    return SpMVPlan.compile(op, format=format, value_dtype=value_dtype,
+                            backend=backend)
 
 
 @dataclass
@@ -103,6 +108,7 @@ def lanczos(
     dtype=jnp.float64,
     mesh=None,
     format: str | None = None,
+    value_dtype: str | None = None,
     backend: str = "auto",
     on_breakdown: str = "raise",
     max_restarts: int = 2,
@@ -131,7 +137,8 @@ def lanczos(
     if on_breakdown not in ("raise", "restart"):
         raise ValueError(f"on_breakdown={on_breakdown!r}; "
                          "expected 'raise' or 'restart'")
-    apply_A = as_apply(apply_A, mesh=mesh, format=format, backend=backend)
+    apply_A = as_apply(apply_A, mesh=mesh, format=format,
+                       value_dtype=value_dtype, backend=backend)
     attempts = 1 + (max_restarts if on_breakdown == "restart" else 0)
     n_spmv_prior = 0
     for attempt in range(attempts):

@@ -30,6 +30,7 @@ import dataclasses
 from dataclasses import dataclass
 from typing import Any
 
+import ml_dtypes
 import numpy as np
 
 try:  # register pytrees if jax present (always true in this repo)
@@ -38,6 +39,11 @@ except Exception:  # pragma: no cover
     jax = None
 
 Array = Any
+
+#: one default sorting window for SELL-C-sigma, shared by ``SELL.from_csr``,
+#: ``corpus.corpus_stats``, ``corpus.MatrixSpec`` and the perfmodel's format
+#: selector -- the advisor must score the packing that actually executes.
+DEFAULT_SELL_SIGMA = 256
 
 # ---------------------------------------------------------------------------
 # helpers
@@ -70,6 +76,191 @@ def _as_np(a, dtype=None):
 
 
 # ---------------------------------------------------------------------------
+# value dtypes: storage precision is orthogonal to the sparsity format
+# ---------------------------------------------------------------------------
+
+#: canonical name -> numpy dtype of every supported value-storage precision.
+#: SpMV is bandwidth-bound (paper Sec. 2-3), so value bytes are the lever:
+#: bf16/f16 halve the value stream, fp8/int8 quarter it.  Kernels always
+#: multiply-accumulate in >= f32 regardless of storage dtype.
+VALUE_DTYPES = {
+    "f64": np.float64,
+    "f32": np.float32,
+    "bf16": ml_dtypes.bfloat16,
+    "f16": np.float16,
+    "fp8_e4m3": ml_dtypes.float8_e4m3fn,
+    "int8": np.int8,
+}
+
+#: dtypes that need a per-group fp32 scale stored alongside ``val``
+#: (symmetric quantization; the others are plain casts).
+_QMAX = {"int8": 127.0, "fp8_e4m3": 448.0}  # max representable magnitude
+QUANTIZED_DTYPES = tuple(_QMAX)
+
+
+def value_dtype_name(dtype) -> str:
+    """Canonical name ("f32", "int8", ...) of a numpy/jax value dtype."""
+    dt = np.dtype(dtype)
+    for name, d in VALUE_DTYPES.items():
+        if dt == np.dtype(d):
+            return name
+    return dt.name
+
+
+def container_values(obj) -> Array:
+    """The stored value array of any container (val / vals / blocks / data)."""
+    for attr in ("val", "vals", "blocks", "data"):
+        if hasattr(obj, attr):
+            return getattr(obj, attr)
+    raise TypeError(f"{type(obj).__name__} has no value array")
+
+
+def container_value_dtype(obj) -> str:
+    """Canonical value-dtype name of a container (hybrid: the SELL part)."""
+    if isinstance(obj, HybridDIA):
+        obj = obj.rest
+    return value_dtype_name(np.asarray(container_values(obj)).dtype)
+
+
+def _group_scales(amax: np.ndarray, value_dtype: str) -> np.ndarray:
+    """fp32 scale per group from per-group |v| maxima; all-zero groups get
+    scale 1.0 so quantize/dequantize round-trips them to exact zeros."""
+    qmax = _QMAX[value_dtype]
+    return np.where(amax > 0, amax / qmax, 1.0).astype(np.float32)
+
+
+def _quantize_flat(v: np.ndarray, group_ids: np.ndarray, n_groups: int,
+                   value_dtype: str) -> tuple[np.ndarray, np.ndarray]:
+    """Symmetric per-group quantization of a flat value array."""
+    amax = np.zeros(n_groups, np.float64)
+    if v.size:
+        np.maximum.at(amax, group_ids, np.abs(v.astype(np.float64)))
+    scale = _group_scales(amax, value_dtype)
+    qv = v.astype(np.float64) / scale[group_ids] if v.size else v.astype(np.float64)
+    if value_dtype == "int8":
+        q = np.clip(np.rint(qv), -127, 127).astype(np.int8)
+    else:
+        q = qv.astype(VALUE_DTYPES[value_dtype])
+    return q, scale
+
+
+def _quantize_axis0(v: np.ndarray, value_dtype: str) -> tuple[np.ndarray, np.ndarray]:
+    """Per-leading-axis-group quantization (ELL rows, BSR blocks, DIA diags)."""
+    n = v.shape[0]
+    flat = np.abs(v.astype(np.float64)).reshape(n, -1)
+    amax = flat.max(axis=1) if flat.size else np.zeros(n)
+    scale = _group_scales(amax, value_dtype)
+    bshape = (n,) + (1,) * (v.ndim - 1)
+    qv = v.astype(np.float64) / scale.reshape(bshape)
+    if value_dtype == "int8":
+        q = np.clip(np.rint(qv), -127, 127).astype(np.int8)
+    else:
+        q = qv.astype(VALUE_DTYPES[value_dtype])
+    return q, scale
+
+
+def _flat_group_ids(obj) -> tuple[np.ndarray, int]:
+    """(group id per stored element, n_groups) for flat-value containers."""
+    if isinstance(obj, CSR):
+        lens = obj.row_lengths()
+        return np.repeat(np.arange(obj.n_rows), lens), obj.n_rows
+    if isinstance(obj, COO):
+        return _as_np(obj.rows).astype(np.int64), obj.shape[0]
+    if isinstance(obj, JDS):
+        # group = *permuted* row: jagged diagonal d holds rows 0..n_active-1
+        segs = [np.arange(L) for L in obj.diag_lengths()]
+        ids = np.concatenate(segs) if segs else np.zeros(0, np.int64)
+        return ids, obj.shape[0]
+    if isinstance(obj, SELL):
+        cp = _as_np(obj.chunk_ptr)
+        return np.repeat(np.arange(obj.n_chunks), np.diff(cp)), obj.n_chunks
+    raise TypeError(f"no flat grouping for {type(obj).__name__}")
+
+
+def dequantize(obj):
+    """Undo ``with_value_dtype``: an f32-valued, scale-free copy of ``obj``.
+
+    For float storage dtypes this is a plain upcast; for int8/fp8 the
+    per-group scale is folded back into the values.
+    """
+    if isinstance(obj, HybridDIA):
+        return HybridDIA(dequantize(obj.dia), dequantize(obj.rest), obj.shape)
+    v = np.asarray(container_values(obj), dtype=None)
+    scale = getattr(obj, "scale", None)
+    if scale is None:
+        vf = v.astype(np.float32) if v.dtype != np.float64 else v
+    elif isinstance(obj, (ELL, BSR, DIA)):
+        bshape = (v.shape[0],) + (1,) * (v.ndim - 1)
+        vf = v.astype(np.float32) * _as_np(scale).reshape(bshape)
+    else:
+        ids, _ = _flat_group_ids(obj)
+        vf = v.astype(np.float32) * _as_np(scale)[ids]
+    return _replace_values(obj, vf, None)
+
+
+def _replace_values(obj, new_values, new_scale):
+    """Same container, new value array (+ scale); preserves everything else."""
+    if isinstance(obj, COO):
+        return COO(obj.rows, obj.cols, new_values, obj.shape, new_scale)
+    if isinstance(obj, CSR):
+        return CSR(obj.row_ptr, obj.col_idx, new_values, obj.shape, new_scale)
+    if isinstance(obj, ELL):
+        return ELL(obj.col_idx, new_values, obj.shape, obj.nnz, new_scale)
+    if isinstance(obj, JDS):
+        return JDS(obj.jd_ptr, obj.col_idx, new_values, obj.perm, obj.shape, new_scale)
+    if isinstance(obj, SELL):
+        return SELL(obj.chunk_ptr, obj.chunk_width, obj.col_idx, new_values,
+                    obj.perm, obj.shape, obj.C, obj.sigma, obj.nnz, new_scale)
+    if isinstance(obj, BSR):
+        return BSR(obj.block_row_ptr, obj.block_col_idx, new_values, obj.shape,
+                   obj.block_shape, new_scale)
+    if isinstance(obj, DIA):
+        return DIA(obj.offsets, new_values, obj.shape, new_scale)
+    raise TypeError(f"cannot replace values on {type(obj).__name__}")
+
+
+def _require_unquantized(obj, where: str):
+    """Refuse quantized sources in structural conversions: the per-group
+    scale layout (row/chunk/block/diagonal) does not survive the reordering
+    a conversion performs, so codes would silently lose their scales."""
+    if getattr(obj, "scale", None) is not None:
+        raise TypeError(
+            f"{where}: source is quantized (scale is set) and its scale "
+            "groups would not survive the conversion -- dequantize() first, "
+            "or use convert(m, fmt, value_dtype=...) which re-quantizes in "
+            "the target format's own group layout")
+
+
+def with_value_dtype(obj, value_dtype: str):
+    """A copy of ``obj`` storing its values in ``value_dtype``.
+
+    f64/f32/bf16/f16 are plain casts (``scale`` stays None).  int8 and
+    fp8_e4m3 store symmetrically quantized values plus an fp32 ``scale``
+    per group -- row for CSR/COO/ELL, permuted row for JDS, chunk for
+    SELL, block for BSR, diagonal for DIA -- chosen so kernels can apply
+    the scale to the *reduced* output instead of per stored element.
+    Kernels accumulate in >= f32 regardless of the storage dtype.
+    """
+    if value_dtype not in VALUE_DTYPES:
+        raise ValueError(
+            f"value_dtype={value_dtype!r}; expected one of {tuple(VALUE_DTYPES)}")
+    if isinstance(obj, HybridDIA):
+        return HybridDIA(with_value_dtype(obj.dia, value_dtype),
+                         with_value_dtype(obj.rest, value_dtype), obj.shape)
+    if getattr(obj, "scale", None) is not None:
+        obj = dequantize(obj)  # re-quantize from the dequantized values
+    v = np.asarray(container_values(obj))
+    if value_dtype not in _QMAX:
+        return _replace_values(obj, v.astype(VALUE_DTYPES[value_dtype]), None)
+    if isinstance(obj, (ELL, BSR, DIA)):
+        q, scale = _quantize_axis0(v, value_dtype)
+    else:
+        ids, n_groups = _flat_group_ids(obj)
+        q, scale = _quantize_flat(v, ids, n_groups, value_dtype)
+    return _replace_values(obj, q, scale)
+
+
+# ---------------------------------------------------------------------------
 # COO / CSR  (paper's CRS)
 # ---------------------------------------------------------------------------
 
@@ -82,6 +273,7 @@ class COO:
     cols: Array  # (nnz,) int32
     vals: Array  # (nnz,) float
     shape: tuple[int, int]
+    scale: Array = None  # (n_rows,) fp32 per-row scale for int8/fp8 values
 
     _static = ("shape",)
 
@@ -113,6 +305,7 @@ class CSR:
     col_idx: Array  # (nnz,) int32
     val: Array  # (nnz,) float
     shape: tuple[int, int]
+    scale: Array = None  # (n_rows,) fp32 per-row scale for int8/fp8 values
 
     _static = ("shape",)
 
@@ -170,6 +363,7 @@ class ELL:
     val: Array  # (n_rows, width) float
     shape: tuple[int, int]
     nnz: int
+    scale: Array = None  # (n_rows,) fp32 per-row scale for int8/fp8 values
 
     _static = ("shape", "nnz")
 
@@ -179,6 +373,7 @@ class ELL:
 
     @staticmethod
     def from_csr(m: CSR, width: int | None = None, pad_to: int = 1) -> "ELL":
+        _require_unquantized(m, "ELL.from_csr")
         lens = m.row_lengths()
         w = int(lens.max()) if lens.size else 0
         if width is not None:
@@ -224,6 +419,7 @@ class JDS:
     val: Array  # (nnz,) float
     perm: Array  # (n_rows,) int32 permuted->original row map
     shape: tuple[int, int]
+    scale: Array = None  # (n_rows,) fp32 per-*permuted*-row scale (int8/fp8)
 
     _static = ("shape",)
 
@@ -241,6 +437,7 @@ class JDS:
 
     @staticmethod
     def from_csr(m: CSR) -> "JDS":
+        _require_unquantized(m, "JDS.from_csr")
         lens = m.row_lengths()
         perm = np.argsort(-lens, kind="stable").astype(np.int32)
         sorted_lens = lens[perm]
@@ -301,6 +498,7 @@ class SELL:
     C: int
     sigma: int
     nnz: int
+    scale: Array = None  # (n_chunks,) fp32 per-chunk scale for int8/fp8 values
 
     _static = ("shape", "C", "sigma", "nnz")
 
@@ -311,8 +509,11 @@ class SELL:
     @staticmethod
     def from_csr(m: CSR, C: int = 8, sigma: int | None = None, sort_cols: bool = False,
                  pad_width_to: int = 1) -> "SELL":
+        _require_unquantized(m, "SELL.from_csr")
         n = m.n_rows
-        sigma = n if sigma is None else max(1, sigma)
+        # sigma=None -> the repo-wide default window (capped at n; pass
+        # sigma=n_rows explicitly for the full-JDS sort)
+        sigma = max(1, min(n, DEFAULT_SELL_SIGMA)) if sigma is None else max(1, sigma)
         lens = m.row_lengths()
         n_pad = -(-n // C) * C
         # sigma-window sort (stable) by decreasing length
@@ -408,6 +609,7 @@ class BSR:
     blocks: Array  # (n_blocks, bm, bn) float
     shape: tuple[int, int]
     block_shape: tuple[int, int]
+    scale: Array = None  # (n_blocks,) fp32 per-block scale for int8/fp8 values
 
     _static = ("shape", "block_shape")
 
@@ -472,6 +674,7 @@ class DIA:
     offsets: Array  # (n_diags,) int32
     data: Array  # (n_diags, n_rows) float; out-of-range entries are 0
     shape: tuple[int, int]
+    scale: Array = None  # (n_diags,) fp32 per-diagonal scale for int8/fp8
 
     _static = ("shape",)
 
@@ -487,6 +690,7 @@ class DIA:
         stencil patterns); ``max_diags`` guards against accidentally
         materializing thousands of near-empty diagonals.
         """
+        _require_unquantized(m, "DIA.from_csr")
         coo = m.to_coo()
         rows = _as_np(coo.rows).astype(np.int64)
         cols = _as_np(coo.cols).astype(np.int64)
@@ -536,6 +740,7 @@ def split_dia(m: CSR, min_occupancy: float = 0.5, max_diags: int = 16,
     ``min_occupancy`` is the fraction of the diagonal's full length that must
     be populated for it to be promoted to dense-diagonal storage.
     """
+    _require_unquantized(m, "split_dia")
     n, ncols = m.shape
     coo = m.to_coo()
     rows, cols, vals = map(_as_np, (coo.rows, coo.cols, coo.vals))
@@ -570,7 +775,25 @@ def split_dia(m: CSR, min_occupancy: float = 0.5, max_diags: int = 16,
 FORMATS = {"csr": CSR, "ell": ELL, "jds": JDS, "sell": SELL, "bsr": BSR, "dia": DIA, "hybrid": HybridDIA}
 
 
-def convert(m: CSR, fmt: str, **kw):
+def convert(m: CSR, fmt: str, value_dtype: str | None = None, **kw):
+    """Convert ``m`` to ``fmt``, optionally storing values as ``value_dtype``.
+
+    A quantized source is dequantized first and re-quantized in the target
+    format's own scale-group layout (per-row scales cannot be reinterpreted
+    as per-diagonal ones); without an explicit ``value_dtype`` the source's
+    storage dtype is preserved.
+    """
+    if getattr(m, "scale", None) is not None:
+        if value_dtype is None:
+            value_dtype = container_value_dtype(m)
+        m = dequantize(m)
+    out = _convert(m, fmt, **kw)
+    if value_dtype is not None:
+        out = with_value_dtype(out, value_dtype)
+    return out
+
+
+def _convert(m: CSR, fmt: str, **kw):
     if fmt == "csr":
         return m
     if fmt == "ell":

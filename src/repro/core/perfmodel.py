@@ -153,6 +153,37 @@ TPU_BF16 = AccessModel(value_bytes=2, index_bytes=4, line_elems=64,
                        invec_waste=1.0, invec_reuse=1.0)
 
 
+def value_bytes_of(fmt_obj) -> int:
+    """itemsize of the container's *stored* value array (hybrid: SELL part).
+
+    The per-group fp32 scale of int8/fp8 containers is ignored: one scale
+    per row/chunk/block/diagonal amortizes to well under a byte per stored
+    element for any matrix the balance model is meaningful on.
+    """
+    from . import formats as F
+
+    if isinstance(fmt_obj, F.HybridDIA):
+        fmt_obj = fmt_obj.rest
+    return int(np.dtype(np.asarray(F.container_values(fmt_obj)).dtype).itemsize)
+
+
+def access_model_for(fmt_obj, chip: ChipSpec | None = None,
+                     base: AccessModel | None = None) -> AccessModel:
+    """An ``AccessModel`` whose ``value_bytes`` matches the container's
+    stored dtype (the fix for charging every container 4-byte values).
+
+    ``line_elems`` keeps the 128-byte access granule of the TPU presets
+    (f32 -> ``TPU_FP32`` exactly, bf16 -> ``TPU_BF16`` exactly), so f32
+    paths are byte-identical to the historical default.  ``chip`` is
+    accepted for signature stability; the byte widths are chip-independent
+    today.
+    """
+    del chip  # granule size is uniform across the supported chips
+    vb = value_bytes_of(fmt_obj)
+    b = base if base is not None else TPU_FP32
+    return replace(b, value_bytes=vb, line_elems=max(1, 128 // vb))
+
+
 # ---------------------------------------------------------------------------
 # roofline predictor
 # ---------------------------------------------------------------------------
@@ -312,7 +343,7 @@ def advise(
     return out
 
 
-def balance_of(fmt_obj, am: AccessModel = TPU_FP32, backend: str = "xla") -> float:
+def balance_of(fmt_obj, am: AccessModel | None = None, backend: str = "xla") -> float:
     """Algorithmic balance (bytes/Flop) for a *concrete* converted matrix —
     the post-conversion analogue of ``advise``'s pattern-only estimates.
     Pad/fill ratios are exact because the container is in hand.
@@ -320,9 +351,15 @@ def balance_of(fmt_obj, am: AccessModel = TPU_FP32, backend: str = "xla") -> flo
     ``backend`` selects the stream-byte regime where formats differ per
     executor — today that is SELL (flat chunk-local layout for the Pallas
     kernels and the loop oracle vs globally padded views for XLA; see
-    ``sell_streamed_elements``)."""
+    ``sell_streamed_elements``).
+
+    ``am=None`` derives the byte widths from the container's stored value
+    dtype (``access_model_for``) — an f64 container is charged 8-byte
+    values, a bf16 one 2-byte values."""
     from . import formats as F
 
+    if am is None:
+        am = access_model_for(fmt_obj)
     if isinstance(fmt_obj, F.CSR):
         npr = fmt_obj.nnz / max(1, fmt_obj.shape[0])
         return balance_csr(am, npr)
@@ -432,7 +469,7 @@ def resolve_stream_backend(backend: str = "auto") -> str:
 def select_format(
     m,
     *,
-    am: AccessModel = TPU_FP32,
+    am: AccessModel | None = None,
     chip: ChipSpec = TPU_V5E,
     C: int = 8,
     sigma: int | None = None,
@@ -493,11 +530,15 @@ def select_format(
             raise TypeError(f"select_format: unsupported container {type(m).__name__}")
         return FormatChoice(name, {}, {}, {})
 
+    if am is None:
+        am = access_model_for(m)
     stats = F.matrix_stats(m)
     lens = m.row_lengths()
     nnz = max(1, m.nnz)
     npr = float(stats["nnz_per_row_mean"])
-    sig = sigma if sigma is not None else m.shape[0]
+    # score the packing that will actually execute: SELL.from_csr resolves
+    # sigma=None to the same shared default window
+    sig = sigma if sigma is not None else min(m.shape[0], F.DEFAULT_SELL_SIGMA)
     be = resolve_stream_backend(backend)
     sell_ratio = (sell_pad_ratio(lens, C, sig) if be in FLAT_SELL_BACKENDS
                   else sell_padded_view_ratio(lens, C))
@@ -640,7 +681,7 @@ def select_pallas_blocks(
 # ---------------------------------------------------------------------------
 
 
-def matrix_stream_bytes(fmt_obj, am: AccessModel = TPU_FP32,
+def matrix_stream_bytes(fmt_obj, am: AccessModel | None = None,
                         backend: str = "xla") -> float:
     """Bytes of the *matrix* stream alone (values + indices, padding included).
 
@@ -654,10 +695,13 @@ def matrix_stream_bytes(fmt_obj, am: AccessModel = TPU_FP32,
         backend: stream-byte regime (see ``balance_of``); affects SELL.
 
     Returns:
-        Modelled bytes of one pass over the stored matrix.
+        Modelled bytes of one pass over the stored matrix.  ``am=None``
+        derives byte widths from the stored value dtype.
     """
     from . import formats as F
 
+    if am is None:
+        am = access_model_for(fmt_obj)
     if isinstance(fmt_obj, (F.CSR, F.JDS)):
         return float((am.value_bytes + am.index_bytes) * fmt_obj.nnz)
     if isinstance(fmt_obj, F.COO):
@@ -680,7 +724,7 @@ def matrix_stream_bytes(fmt_obj, am: AccessModel = TPU_FP32,
     raise TypeError(type(fmt_obj))
 
 
-def spmm_balance_of(fmt_obj, k: int, am: AccessModel = TPU_FP32,
+def spmm_balance_of(fmt_obj, k: int, am: AccessModel | None = None,
                     backend: str = "xla") -> float:
     """Algorithmic balance (bytes per Flop) of an SpMM at batch width ``k``.
 
@@ -702,6 +746,8 @@ def spmm_balance_of(fmt_obj, k: int, am: AccessModel = TPU_FP32,
         Modelled bytes moved per useful Flop at width k.
     """
     k = max(1, int(k))
+    if am is None:
+        am = access_model_for(fmt_obj)
     total1 = balance_of(fmt_obj, am, backend) * 2.0 * fmt_obj.nnz  # one SpMV
     mat = matrix_stream_bytes(fmt_obj, am, backend)
     vec = max(0.0, total1 - mat)                           # invec + resvec share
@@ -731,7 +777,7 @@ class BatchWidthChoice:
 def select_batch_width(
     fmt_obj,
     *,
-    am: AccessModel = TPU_FP32,
+    am: AccessModel | None = None,
     chip: ChipSpec = TPU_V5E,
     k_max: int = 64,
     efficiency: float = 0.9,
@@ -760,6 +806,8 @@ def select_batch_width(
     Returns:
         A ``BatchWidthChoice``; ``choice.width`` is the flush width.
     """
+    if am is None:
+        am = access_model_for(fmt_obj)
     ks = []
     k = 1
     while k < k_max:
@@ -778,11 +826,15 @@ def select_batch_width(
                             balance=bal, saturation=qps[width] / best)
 
 
-def spmv_streamed_bytes(fmt_obj, am: AccessModel, backend: str = "xla") -> float:
+def spmv_streamed_bytes(fmt_obj, am: AccessModel | None = None,
+                        backend: str = "xla") -> float:
     """Model-side byte count for a *concrete* converted matrix (used to
-    validate predictions against measured/compiled traffic)."""
+    validate predictions against measured/compiled traffic).  ``am=None``
+    derives byte widths from the container's stored value dtype."""
     from . import formats as F
 
+    if am is None:
+        am = access_model_for(fmt_obj)
     if isinstance(fmt_obj, F.CSR):
         return (am.value_bytes + am.index_bytes + am.invec_bytes_per_access()) * fmt_obj.nnz \
             + 2 * am.value_bytes * fmt_obj.shape[0]

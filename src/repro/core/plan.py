@@ -127,8 +127,9 @@ class SpMVPlan:
         matrix,
         *,
         format: str | None = None,
+        value_dtype: str | None = None,
         chip: ChipSpec = TPU_V5E,
-        am: PM.AccessModel = PM.TPU_FP32,
+        am: PM.AccessModel | None = None,
         backend: str = "auto",
         chunk_block: int | None = None,
         width_block: int | None = None,
@@ -144,8 +145,17 @@ class SpMVPlan:
                 ``perfmodel.select_format`` pick from the matrix's own
                 structure.  Conversions (and the auto choice) are cached
                 on the source container, so repeated compiles are free.
+            value_dtype: value-storage precision for the compiled
+                container ("f64" | "f32" | "bf16" | "f16" | "fp8_e4m3" |
+                "int8"); ``None`` keeps the stored values as-is.  Narrow
+                dtypes cut streamed value bytes (the paper's balance);
+                int8/fp8 quantize with per-group fp32 scales; every kernel
+                still accumulates in at least f32 (``kernels.accum``).
             chip: roofline parameters (bandwidth, peak, VMEM budget).
-            am: access-model byte widths for the balance computation.
+            am: access-model byte widths for the balance computation;
+                ``None`` (default) derives ``value_bytes`` from the
+                resolved container's actual stored dtype
+                (``perfmodel.access_model_for``).
             backend: "auto" | "xla" | "pallas" ("ref" aliases "xla").
             chunk_block / width_block: override the model's Pallas tiling
                 choice; leave None for ``perfmodel.select_pallas_blocks``.
@@ -168,10 +178,18 @@ class SpMVPlan:
         if format is not None:
             matrix = resolve_format(matrix, format, chip=chip, am=am,
                                     backend=backend)
+        if value_dtype is not None:
+            from . import formats as F
+            matrix = _convert_cached(matrix, _FMT_NAMES.get(type(matrix)),
+                                     {}, value_dtype=value_dtype) \
+                if type(matrix) in (F.CSR, F.COO) \
+                else F.with_value_dtype(matrix, value_dtype)
         fmt = _FMT_NAMES.get(type(matrix))
         if fmt is None:
             raise TypeError(f"no plan for {type(matrix).__name__}")
         _resolve_backend(backend)  # validate for every format, not just SELL
+        if am is None:
+            am = PM.access_model_for(matrix, chip)
         key = (fmt, backend, chunk_block, width_block, chip.name,
                am.value_bytes, am.index_bytes)
         cache = getattr(matrix, "_spmv_plans", None)
@@ -191,7 +209,7 @@ class SpMVPlan:
 
 
 def resolve_format(matrix, format: str, *, chip: ChipSpec = TPU_V5E,
-                   am: PM.AccessModel = PM.TPU_FP32, backend: str = "auto",
+                   am: PM.AccessModel | None = None, backend: str = "auto",
                    **select_kw):
     """Return ``matrix`` converted to ``format`` (``"auto"`` = model's pick).
 
@@ -226,17 +244,19 @@ def _as_csr_container(matrix):
     return _convert_cached(matrix, "csr", {})
 
 
-def _convert_cached(matrix, fmt: str, kw: dict):
-    from .formats import COO, CSR, convert
+def _convert_cached(matrix, fmt: str, kw: dict, value_dtype: str | None = None):
+    from .formats import COO, CSR, convert, with_value_dtype
     cache = getattr(matrix, "_fmt_cache", None)
     if cache is None:
         cache = {}
         object.__setattr__(matrix, "_fmt_cache", cache)
-    key = (fmt, tuple(sorted(kw.items())))
+    key = (fmt, value_dtype, tuple(sorted(kw.items())))
     obj = cache.get(key)
     if obj is None:
         src = CSR.from_coo(matrix) if isinstance(matrix, COO) else matrix
         obj = src if fmt == "csr" else convert(src, fmt, **kw)
+        if value_dtype is not None:
+            obj = with_value_dtype(obj, value_dtype)
         cache[key] = obj
     return obj
 

@@ -1,0 +1,29 @@
+"""The accumulation-dtype contract shared by every kernel backend.
+
+Value storage precision (``core.formats.VALUE_DTYPES``) is a *streaming*
+choice: it sets the bytes an SpMV moves, never the arithmetic it does.
+Kernels multiply-accumulate in at least f32 regardless of how narrow the
+stored values are — ``jnp.result_type(f16, f16)`` is f16, and an f16
+accumulator overflows at 65504, i.e. on any long row of O(1) values
+(the PR6 ``utils/tree.py`` f16 reduction fix, generalized to the kernels).
+
+``acc_dtype`` is that floor in one place: f64 stays f64 (the x64 parity
+oracles need it), everything else accumulates in f32.  Pallas kernels get
+the same contract through their ``out_dtype`` static argument defaulting
+to ``acc_dtype`` and casting operands with
+``.astype(o_ref.dtype)`` / ``preferred_element_type`` before the reduce.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def acc_dtype(*dtypes):
+    """The accumulator dtype for reducing products of the given operand
+    dtypes: f64 if any operand is f64, else f32.  Deliberately not
+    ``jnp.result_type`` — fp8 storage dtypes have no implicit promotion
+    path, and f16/bf16 must widen rather than accumulate natively."""
+    if any(np.dtype(d) == np.float64 for d in dtypes):
+        return jnp.float64
+    return jnp.float32

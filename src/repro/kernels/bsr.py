@@ -11,10 +11,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core import formats as F
 from ..core.formats import BSR
 from . import bsr_spmm as KP
+from .accum import acc_dtype
 from .cache import cached, is_traced, register_stat
-from .registry import CompiledKernel, KernelContext, register_kernel
+from .registry import (
+    FLOAT_PALLAS_VALUE_DTYPES,
+    CompiledKernel,
+    KernelContext,
+    register_kernel,
+)
 
 register_stat("bsr_block_row_ids")
 register_stat("bsr_bell_pack")
@@ -41,8 +48,11 @@ def bsr_spmv(m: BSR, x: jnp.ndarray) -> jnp.ndarray:
     bm, bn = m.block_shape
     blocks = jnp.asarray(m.blocks)  # (nb, bm, bn)
     bci = jnp.asarray(m.block_col_idx)
+    acc = acc_dtype(blocks.dtype, x.dtype)
     xb = jnp.take(x.reshape(-1, bn), bci, axis=0)  # (nb, bn)
-    partial = jnp.einsum("kmn,kn->km", blocks, xb)  # (nb, bm)
+    partial = jnp.einsum("kmn,kn->km", blocks.astype(acc), xb.astype(acc))  # (nb, bm)
+    if m.scale is not None:  # per-block dequant scale on the block partials
+        partial = partial * jnp.asarray(m.scale).astype(acc)[:, None]
     rows = bsr_block_row_ids(m)
     ybl = jax.ops.segment_sum(partial, rows, num_segments=m.shape[0] // bm)
     return ybl.reshape(-1)
@@ -53,8 +63,11 @@ def bsr_spmm(m: BSR, X: jnp.ndarray) -> jnp.ndarray:
     bm, bn = m.block_shape
     blocks = jnp.asarray(m.blocks)
     bci = jnp.asarray(m.block_col_idx)
+    acc = acc_dtype(blocks.dtype, X.dtype)
     Xb = jnp.take(X.reshape(-1, bn, X.shape[1]), bci, axis=0)  # (nb, bn, K)
-    partial = jnp.einsum("kmn,knj->kmj", blocks, Xb)  # (nb, bm, K)
+    partial = jnp.einsum("kmn,knj->kmj", blocks.astype(acc), Xb.astype(acc))  # (nb, bm, K)
+    if m.scale is not None:
+        partial = partial * jnp.asarray(m.scale).astype(acc)[:, None, None]
     rows = bsr_block_row_ids(m)
     ybl = jax.ops.segment_sum(partial, rows, num_segments=m.shape[0] // bm)
     return ybl.reshape(m.shape[0], X.shape[1])
@@ -67,13 +80,17 @@ def bell_pack(m: BSR):
 
 def bsr_spmm_slotloop(m: BSR, X: jnp.ndarray) -> jnp.ndarray:
     """Loop-reference oracle: one pass per BELL block-column slot (the
-    block-granular jagged-diagonal traversal; padded slots are zero)."""
+    block-granular jagged-diagonal traversal; padded slots are zero).
+    Quantized containers are dequantized up front — the BELL pack reorders
+    blocks into slots, losing the per-block scale alignment."""
+    if m.scale is not None:
+        m = F.dequantize(m)
     bcols, slab = bell_pack(m)
     bm, bk = m.block_shape
     nbr, nbpp = bcols.shape
     Xb = X.reshape(-1, bk, X.shape[1])
     Y = jnp.zeros((nbr, bm, X.shape[1]),
-                  dtype=jnp.result_type(np.asarray(slab).dtype, X.dtype))
+                  dtype=acc_dtype(np.asarray(slab).dtype, X.dtype))
     bc = jnp.asarray(bcols)
     sl = jnp.asarray(slab)
     for j in range(nbpp):
@@ -112,6 +129,8 @@ def _build_spmm_loop(m: BSR, ctx) -> CompiledKernel:
 
 
 def _build_bell_spmm(m: BSR, ctx: KernelContext, interpret: bool) -> CompiledKernel:
+    if m.scale is not None:  # probe should have rejected; belt-and-braces
+        m = F.dequantize(m)
     bcols, slab = bell_pack(m)
     bc, bl = jnp.asarray(bcols), jnp.asarray(slab)  # device-put once
     M = m.shape[0]
@@ -124,13 +143,15 @@ def _build_bell_spmm(m: BSR, ctx: KernelContext, interpret: bool) -> CompiledKer
 
 
 @register_kernel("bsr", "spmm", "pallas",
-                 description="BELL scalar-prefetch MXU kernel")
+                 description="BELL scalar-prefetch MXU kernel",
+                 value_dtypes=FLOAT_PALLAS_VALUE_DTYPES)
 def _build_bell_compiled(m: BSR, ctx) -> CompiledKernel:
     return _build_bell_spmm(m, ctx, interpret=False)
 
 
 @register_kernel("bsr", "spmm", "pallas_interpret",
-                 description="BELL scalar-prefetch kernel via the interpreter")
+                 description="BELL scalar-prefetch kernel via the interpreter",
+                 value_dtypes=FLOAT_PALLAS_VALUE_DTYPES)
 def _build_bell_interpret(m: BSR, ctx) -> CompiledKernel:
     return _build_bell_spmm(m, ctx, interpret=True)
 
@@ -146,12 +167,14 @@ def _build_bell_spmv(m: BSR, ctx: KernelContext, interpret: bool) -> CompiledKer
 
 
 @register_kernel("bsr", "spmv", "pallas",
-                 description="BELL kernel over a lane-padded column panel")
+                 description="BELL kernel over a lane-padded column panel",
+                 value_dtypes=FLOAT_PALLAS_VALUE_DTYPES)
 def _build_bell_spmv_compiled(m: BSR, ctx) -> CompiledKernel:
     return _build_bell_spmv(m, ctx, interpret=False)
 
 
 @register_kernel("bsr", "spmv", "pallas_interpret",
-                 description="lane-padded BELL panel via the interpreter")
+                 description="lane-padded BELL panel via the interpreter",
+                 value_dtypes=FLOAT_PALLAS_VALUE_DTYPES)
 def _build_bell_spmv_interpret(m: BSR, ctx) -> CompiledKernel:
     return _build_bell_spmv(m, ctx, interpret=True)

@@ -26,6 +26,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from ..core.formats import BSR
+from .accum import acc_dtype
 
 
 def _bell_kernel(bc_ref, blk_ref, x_ref, o_ref):
@@ -51,7 +52,7 @@ def bell_spmm_arrays(
     nbr, nbpp, bm, bk = blocks.shape
     K, N = X.shape
     assert K % bk == 0
-    odt = out_dtype or jnp.result_type(blocks.dtype, X.dtype)
+    odt = out_dtype or acc_dtype(blocks.dtype, X.dtype)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(nbr, nbpp),

@@ -10,25 +10,41 @@ import jax
 import jax.numpy as jnp
 
 from ..core.formats import COO
+from .accum import acc_dtype
 from .cache import spmm_by_columns
 from .registry import CompiledKernel, register_kernel
 
 
 def coo_spmv(m: COO, x: jnp.ndarray) -> jnp.ndarray:
-    prod = jnp.asarray(m.vals) * jnp.take(x, jnp.asarray(m.cols), axis=0)
-    return jax.ops.segment_sum(prod, jnp.asarray(m.rows), num_segments=m.shape[0])
+    acc = acc_dtype(jnp.asarray(m.vals).dtype, x.dtype)
+    prod = (jnp.asarray(m.vals).astype(acc)
+            * jnp.take(x, jnp.asarray(m.cols), axis=0).astype(acc))
+    y = jax.ops.segment_sum(prod, jnp.asarray(m.rows), num_segments=m.shape[0])
+    if m.scale is not None:
+        y = y * jnp.asarray(m.scale).astype(acc)
+    return y
 
 
 def coo_spmm(m: COO, X: jnp.ndarray) -> jnp.ndarray:
-    prod = jnp.asarray(m.vals)[:, None] * jnp.take(X, jnp.asarray(m.cols), axis=0)
-    return jax.ops.segment_sum(prod, jnp.asarray(m.rows), num_segments=m.shape[0])
+    acc = acc_dtype(jnp.asarray(m.vals).dtype, X.dtype)
+    prod = (jnp.asarray(m.vals).astype(acc)[:, None]
+            * jnp.take(X, jnp.asarray(m.cols), axis=0).astype(acc))
+    Y = jax.ops.segment_sum(prod, jnp.asarray(m.rows), num_segments=m.shape[0])
+    if m.scale is not None:
+        Y = Y * jnp.asarray(m.scale).astype(acc)[:, None]
+    return Y
 
 
 def coo_spmv_scatter(m: COO, x: jnp.ndarray) -> jnp.ndarray:
     """Scatter-add formulation — the loop-reference oracle."""
-    prod = jnp.asarray(m.vals) * jnp.take(x, jnp.asarray(m.cols), axis=0)
-    y = jnp.zeros(m.shape[0], dtype=prod.dtype)
-    return y.at[jnp.asarray(m.rows)].add(prod)
+    acc = acc_dtype(jnp.asarray(m.vals).dtype, x.dtype)
+    prod = (jnp.asarray(m.vals).astype(acc)
+            * jnp.take(x, jnp.asarray(m.cols), axis=0).astype(acc))
+    y = jnp.zeros(m.shape[0], dtype=acc)
+    y = y.at[jnp.asarray(m.rows)].add(prod)
+    if m.scale is not None:
+        y = y * jnp.asarray(m.scale).astype(acc)
+    return y
 
 
 # --- registry entries -------------------------------------------------------

@@ -14,6 +14,7 @@ import numpy as np
 
 from ..core.formats import CSR
 from . import csr_spmv as KP
+from .accum import acc_dtype
 from .cache import cached, is_traced, register_stat, spmm_by_columns
 from .registry import CompiledKernel, KernelContext, register_kernel
 
@@ -44,10 +45,19 @@ def csr_row_ids(m: CSR) -> jnp.ndarray:
 
 
 def csr_spmv(m: CSR, x: jnp.ndarray) -> jnp.ndarray:
-    """Gather + segment-sum formulation of the CRS kernel."""
+    """Gather + segment-sum formulation of the CRS kernel.
+
+    Products and the segment reduction run in ``acc_dtype`` (>= f32); a
+    quantized container's per-row scale is applied to the *reduced* row
+    sums, so only the narrow value array is streamed per element."""
     row_ids = csr_row_ids(m)
-    prod = jnp.asarray(m.val) * jnp.take(x, jnp.asarray(m.col_idx), axis=0)
-    return jax.ops.segment_sum(prod, row_ids, num_segments=m.shape[0])
+    acc = acc_dtype(jnp.asarray(m.val).dtype, x.dtype)
+    prod = (jnp.asarray(m.val).astype(acc)
+            * jnp.take(x, jnp.asarray(m.col_idx), axis=0).astype(acc))
+    y = jax.ops.segment_sum(prod, row_ids, num_segments=m.shape[0])
+    if m.scale is not None:
+        y = y * jnp.asarray(m.scale).astype(acc)
+    return y
 
 
 def csr_spmv_searchsorted(m: CSR, x: jnp.ndarray) -> jnp.ndarray:
@@ -62,14 +72,24 @@ def csr_spmv_searchsorted(m: CSR, x: jnp.ndarray) -> jnp.ndarray:
         ).astype(jnp.int32)
         - 1
     )
-    prod = jnp.asarray(m.val) * jnp.take(x, jnp.asarray(m.col_idx), axis=0)
-    return jax.ops.segment_sum(prod, row_ids, num_segments=m.shape[0])
+    acc = acc_dtype(jnp.asarray(m.val).dtype, x.dtype)
+    prod = (jnp.asarray(m.val).astype(acc)
+            * jnp.take(x, jnp.asarray(m.col_idx), axis=0).astype(acc))
+    y = jax.ops.segment_sum(prod, row_ids, num_segments=m.shape[0])
+    if m.scale is not None:
+        y = y * jnp.asarray(m.scale).astype(acc)
+    return y
 
 
 def csr_spmm(m: CSR, X: jnp.ndarray) -> jnp.ndarray:
     row_ids = csr_row_ids(m)
-    prod = jnp.asarray(m.val)[:, None] * jnp.take(X, jnp.asarray(m.col_idx), axis=0)
-    return jax.ops.segment_sum(prod, row_ids, num_segments=m.shape[0])
+    acc = acc_dtype(jnp.asarray(m.val).dtype, X.dtype)
+    prod = (jnp.asarray(m.val).astype(acc)[:, None]
+            * jnp.take(X, jnp.asarray(m.col_idx), axis=0).astype(acc))
+    Y = jax.ops.segment_sum(prod, row_ids, num_segments=m.shape[0])
+    if m.scale is not None:
+        Y = Y * jnp.asarray(m.scale).astype(acc)[:, None]
+    return Y
 
 
 # --- registry entries -------------------------------------------------------
@@ -142,10 +162,14 @@ def _build_rowsplit(m: CSR, ctx: KernelContext, interpret: bool) -> CompiledKern
     n = m.n_rows
     tune = csr_rowsplit_autotune(m, ctx)
 
+    scale = None if m.scale is None else jnp.asarray(m.scale)
+
     def fn(x):
         y = KP.csr_rowsplit_arrays(col2, val2, rid2, x, R=R, tile_block=tb,
                                    interpret=interpret)
-        return y.reshape(-1)[:n]
+        y = y.reshape(-1)[:n]
+        # per-row scale applies to the finished row sums, outside the kernel
+        return y if scale is None else y * scale.astype(y.dtype)
 
     return CompiledKernel(fn, "pallas-interpret" if interpret else "pallas", tune)
 

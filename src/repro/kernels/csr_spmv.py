@@ -27,6 +27,7 @@ from jax.experimental import pallas as pl
 
 from ..core.formats import CSR
 from .cache import cached, register_stat
+from .accum import acc_dtype
 
 register_stat("csr_rowsplit_slabs")
 
@@ -67,7 +68,7 @@ def csr_rowsplit_arrays(
         interpret = pallas_interpret_default()
     T, E = col2.shape
     assert T % tile_block == 0, (T, tile_block)
-    odt = out_dtype or jnp.result_type(val2.dtype, x.dtype)
+    odt = out_dtype or acc_dtype(val2.dtype, x.dtype)
     kernel = functools.partial(_csr_rowsplit_kernel, R=R)
     return pl.pallas_call(
         kernel,

@@ -12,6 +12,7 @@ import numpy as np
 
 from ..core.formats import DIA
 from . import dia_spmv as KP
+from .accum import acc_dtype
 from .cache import cached, register_stat, spmm_by_columns
 from .registry import (
     CAP_OK,
@@ -39,26 +40,37 @@ def dia_gather_tables(m: DIA):
         idx = i[None, :] + offs[:, None]                      # (nd, n)
         valid = (idx >= 0) & (idx < ncols)
         idx = np.clip(idx, 0, max(0, ncols - 1))
-        data = np.asarray(m.data)[:, :n] * valid
+        # np.where, not * valid: bool multiply is undefined for ml_dtypes fp8
+        d = np.asarray(m.data)[:, :n]
+        data = np.where(valid, d, np.zeros((), dtype=d.dtype))
         return idx.astype(np.int32), data
 
     return cached(m, "_gather_tables", "dia_gather_tables", build)
 
 
 def dia_spmv(m: DIA, x: jnp.ndarray) -> jnp.ndarray:
-    """Vectorized DIA: one shift-gather of shape (nd, n), one reduction."""
+    """Vectorized DIA: one shift-gather of shape (nd, n), one reduction.
+    Quantized containers carry a per-diagonal fp32 scale, applied to the
+    (nd, n) product table before the reduction over diagonals."""
     idx, data = dia_gather_tables(m)
     if data.shape[0] == 0:
         return jnp.zeros(m.shape[0], dtype=x.dtype)
-    return jnp.sum(jnp.asarray(data) * jnp.take(x, jnp.asarray(idx), axis=0), axis=0)
+    acc = acc_dtype(data.dtype, x.dtype)
+    prod = jnp.asarray(data).astype(acc) * jnp.take(x, jnp.asarray(idx), axis=0).astype(acc)
+    if m.scale is not None:
+        prod = prod * jnp.asarray(m.scale).astype(acc)[:, None]
+    return jnp.sum(prod, axis=0)
 
 
 def dia_spmm(m: DIA, X: jnp.ndarray) -> jnp.ndarray:
     idx, data = dia_gather_tables(m)
     if data.shape[0] == 0:
         return jnp.zeros((m.shape[0], X.shape[1]), dtype=X.dtype)
-    return jnp.einsum("kn,knj->nj", jnp.asarray(data),
-                      jnp.take(X, jnp.asarray(idx), axis=0))
+    acc = acc_dtype(data.dtype, X.dtype)
+    d = jnp.asarray(data).astype(acc)
+    if m.scale is not None:
+        d = d * jnp.asarray(m.scale).astype(acc)[:, None]
+    return jnp.einsum("kn,knj->nj", d, jnp.take(X, jnp.asarray(idx), axis=0).astype(acc))
 
 
 def dia_spmv_loop(m: DIA, x: jnp.ndarray) -> jnp.ndarray:
@@ -66,14 +78,19 @@ def dia_spmv_loop(m: DIA, x: jnp.ndarray) -> jnp.ndarray:
     per-diagonal dynamic_slice chain, kept as the paper-fidelity oracle."""
     n, ncols = m.shape
     offsets = np.asarray(m.offsets)
-    data = jnp.asarray(m.data)
-    y = jnp.zeros(n, dtype=jnp.result_type(data.dtype, x.dtype))
+    acc = acc_dtype(jnp.asarray(m.data).dtype, x.dtype)
+    data = jnp.asarray(m.data).astype(acc)
+    scale = None if m.scale is None else np.asarray(m.scale, dtype=np.float64)
+    y = jnp.zeros(n, dtype=acc)
     for k, off in enumerate(offsets.tolist()):
         lo = max(0, -off)
         hi = min(n, ncols - off)
         if hi <= lo:
             continue
-        y = y.at[lo:hi].add(data[k, lo:hi] * jax.lax.dynamic_slice(x, (lo + off,), (hi - lo,)))
+        contrib = data[k, lo:hi] * jax.lax.dynamic_slice(x, (lo + off,), (hi - lo,)).astype(acc)
+        if scale is not None:
+            contrib = contrib * float(scale[k])
+        y = y.at[lo:hi].add(contrib)
     return y
 
 
@@ -140,11 +157,15 @@ def _build_dia_pallas(m: DIA, ctx: KernelContext, interpret: bool) -> CompiledKe
         return CompiledKernel(lambda x: jnp.zeros(n, dtype=x.dtype), label)
     dataj = jnp.asarray(data)  # device-put once
     n_pad = data.shape[1]
+    # per-diagonal scales ride into the kernel as a static float tuple,
+    # exactly like the offsets (both are per-diagonal compile-time facts)
+    scales = None if m.scale is None else tuple(
+        float(v) for v in np.asarray(m.scale, dtype=np.float64))
 
     def fn(x):
         x_pad = jnp.pad(x, (pad0, pad1 + (n_pad - n)))
         y = KP.dia_spmv_arrays(dataj, x_pad, offsets=offsets, tile=tile,
-                               pad0=pad0, interpret=interpret)
+                               pad0=pad0, interpret=interpret, scales=scales)
         return y[:n]
 
     return CompiledKernel(fn, label)

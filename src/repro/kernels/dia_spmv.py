@@ -20,21 +20,26 @@ import numpy as np
 from jax.experimental import pallas as pl
 
 from ..core.formats import DIA
+from .accum import acc_dtype
 
 
-def _dia_kernel(data_ref, x_ref, o_ref, *, offsets, tile, pad0):
+def _dia_kernel(data_ref, x_ref, o_ref, *, offsets, tile, pad0, scales):
     i = pl.program_id(0)
     base = i * tile
     x = x_ref[...]
     acc = jnp.zeros((tile,), dtype=o_ref.dtype)
     for k, off in enumerate(offsets):  # static unroll over stored diagonals
         xs = jax.lax.dynamic_slice(x, (base + pad0 + off,), (tile,))
-        acc = acc + data_ref[k, :].astype(o_ref.dtype) * xs.astype(o_ref.dtype)
+        contrib = data_ref[k, :].astype(o_ref.dtype) * xs.astype(o_ref.dtype)
+        if scales is not None:  # static per-diagonal dequant scale
+            contrib = contrib * scales[k]
+        acc = acc + contrib
     o_ref[...] = acc
 
 
 @functools.partial(
-    jax.jit, static_argnames=("offsets", "tile", "pad0", "interpret", "out_dtype")
+    jax.jit,
+    static_argnames=("offsets", "tile", "pad0", "interpret", "out_dtype", "scales"),
 )
 def dia_spmv_arrays(
     data: jnp.ndarray,   # (nd, n_pad) — columns padded to tile multiple
@@ -45,14 +50,16 @@ def dia_spmv_arrays(
     pad0: int,
     interpret: bool | None = None,
     out_dtype=None,
+    scales: tuple[float, ...] | None = None,
 ) -> jnp.ndarray:
     if interpret is None:  # compiled on TPU, interpreter elsewhere
         from ..utils.hw import pallas_interpret_default
         interpret = pallas_interpret_default()
     nd, n_pad = data.shape
     assert n_pad % tile == 0
-    odt = out_dtype or jnp.result_type(data.dtype, x_pad.dtype)
-    kernel = functools.partial(_dia_kernel, offsets=offsets, tile=tile, pad0=pad0)
+    odt = out_dtype or acc_dtype(data.dtype, x_pad.dtype)
+    kernel = functools.partial(_dia_kernel, offsets=offsets, tile=tile, pad0=pad0,
+                               scales=scales)
     return pl.pallas_call(
         kernel,
         grid=(n_pad // tile,),

@@ -9,28 +9,43 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from ..core.formats import ELL
+from .accum import acc_dtype
 from .cache import spmm_by_columns
 from .registry import CompiledKernel, register_kernel
 
 
 def ell_spmv(m: ELL, x: jnp.ndarray) -> jnp.ndarray:
-    """Row-major ELL: one gather of shape (M, W), one reduction over W."""
+    """Row-major ELL: one gather of shape (M, W), one reduction over W.
+    Reduces in ``acc_dtype`` (>= f32); a quantized container's per-row
+    scale is applied to the reduced row sums."""
+    acc = acc_dtype(jnp.asarray(m.val).dtype, x.dtype)
     gathered = jnp.take(x, jnp.asarray(m.col_idx), axis=0)  # (M, W)
-    return jnp.sum(jnp.asarray(m.val) * gathered, axis=1)
+    y = jnp.sum(jnp.asarray(m.val).astype(acc) * gathered.astype(acc), axis=1)
+    if m.scale is not None:
+        y = y * jnp.asarray(m.scale).astype(acc)
+    return y
 
 
 def ell_spmm(m: ELL, X: jnp.ndarray) -> jnp.ndarray:
+    acc = acc_dtype(jnp.asarray(m.val).dtype, X.dtype)
     gathered = jnp.take(X, jnp.asarray(m.col_idx), axis=0)  # (M, W, K)
-    return jnp.einsum("mw,mwk->mk", jnp.asarray(m.val), gathered)
+    Y = jnp.einsum("mw,mwk->mk", jnp.asarray(m.val).astype(acc),
+                   gathered.astype(acc))
+    if m.scale is not None:
+        Y = Y * jnp.asarray(m.scale).astype(acc)[:, None]
+    return Y
 
 
 def ell_spmv_loop(m: ELL, x: jnp.ndarray) -> jnp.ndarray:
     """One pass per padded jagged column (host loop over W)."""
     col = jnp.asarray(m.col_idx)
-    val = jnp.asarray(m.val)
-    y = jnp.zeros(m.shape[0], dtype=jnp.result_type(val.dtype, x.dtype))
+    acc = acc_dtype(jnp.asarray(m.val).dtype, x.dtype)
+    val = jnp.asarray(m.val).astype(acc)
+    y = jnp.zeros(m.shape[0], dtype=acc)
     for j in range(m.width):
-        y = y + val[:, j] * jnp.take(x, col[:, j], axis=0)
+        y = y + val[:, j] * jnp.take(x, col[:, j], axis=0).astype(acc)
+    if m.scale is not None:
+        y = y * jnp.asarray(m.scale).astype(acc)
     return y
 
 

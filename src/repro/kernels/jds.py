@@ -10,6 +10,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.formats import JDS
+from .accum import acc_dtype
 from .cache import cached, register_stat, spmm_by_columns
 from .registry import CompiledKernel, register_kernel
 
@@ -35,8 +36,12 @@ def jds_spmv(m: JDS, x: jnp.ndarray) -> jnp.ndarray:
     seg = jds_segment_ids(m)
     n_rows = m.shape[0]
     n_perm = int(np.asarray(m.perm).shape[0])
-    prod = jnp.asarray(m.val) * jnp.take(x, jnp.asarray(m.col_idx), axis=0)
+    acc = acc_dtype(jnp.asarray(m.val).dtype, x.dtype)
+    prod = (jnp.asarray(m.val).astype(acc)
+            * jnp.take(x, jnp.asarray(m.col_idx), axis=0).astype(acc))
     y_perm = jax.ops.segment_sum(prod, seg, num_segments=n_perm)
+    if m.scale is not None:  # per-*permuted*-row scale, before the scatter
+        y_perm = y_perm * jnp.asarray(m.scale).astype(acc)
     y = jnp.zeros(n_rows, dtype=y_perm.dtype)
     return y.at[jnp.asarray(m.perm)[:n_rows]].set(y_perm[:n_rows])
 
@@ -45,8 +50,12 @@ def jds_spmm(m: JDS, X: jnp.ndarray) -> jnp.ndarray:
     seg = jds_segment_ids(m)
     n_rows = m.shape[0]
     n_perm = int(np.asarray(m.perm).shape[0])
-    prod = jnp.asarray(m.val)[:, None] * jnp.take(X, jnp.asarray(m.col_idx), axis=0)
+    acc = acc_dtype(jnp.asarray(m.val).dtype, X.dtype)
+    prod = (jnp.asarray(m.val).astype(acc)[:, None]
+            * jnp.take(X, jnp.asarray(m.col_idx), axis=0).astype(acc))
     Y_perm = jax.ops.segment_sum(prod, seg, num_segments=n_perm)
+    if m.scale is not None:
+        Y_perm = Y_perm * jnp.asarray(m.scale).astype(acc)[:, None]
     Y = jnp.zeros((n_rows, X.shape[1]), dtype=Y_perm.dtype)
     return Y.at[jnp.asarray(m.perm)[:n_rows]].set(Y_perm[:n_rows])
 
@@ -57,14 +66,17 @@ def jds_spmv_loop(m: JDS, x: jnp.ndarray) -> jnp.ndarray:
     jp = np.asarray(m.jd_ptr)
     n_rows = m.shape[0]
     n_pad = int(np.asarray(m.perm).shape[0])
-    y_perm = jnp.zeros(n_pad, dtype=jnp.result_type(jnp.asarray(m.val).dtype, x.dtype))
-    val = jnp.asarray(m.val)
+    acc = acc_dtype(jnp.asarray(m.val).dtype, x.dtype)
+    y_perm = jnp.zeros(n_pad, dtype=acc)
+    val = jnp.asarray(m.val).astype(acc)
     ci = jnp.asarray(m.col_idx)
     for d in range(m.n_diags):
         lo, hi = int(jp[d]), int(jp[d + 1])
         seg_val = val[lo:hi]
-        seg_x = jnp.take(x, ci[lo:hi], axis=0)
+        seg_x = jnp.take(x, ci[lo:hi], axis=0).astype(acc)
         y_perm = y_perm.at[: hi - lo].add(seg_val * seg_x)
+    if m.scale is not None:
+        y_perm = y_perm * jnp.asarray(m.scale).astype(acc)
     y = jnp.zeros(n_rows, dtype=y_perm.dtype)
     return y.at[jnp.asarray(m.perm)[:n_rows]].set(y_perm[:n_rows])
 

@@ -60,6 +60,15 @@ from ..utils.hw import TPU_V5E, ChipSpec
 OPS = ("spmv", "spmm")
 BACKENDS = ("xla", "pallas", "pallas_interpret", "loop_reference")
 
+#: canonical value-dtype names (mirrors ``core.formats.VALUE_DTYPES`` —
+#: restated here so the registry stays import-light at module load)
+ALL_VALUE_DTYPES = ("f64", "f32", "bf16", "f16", "fp8_e4m3", "int8")
+#: the TPU vector unit has no f64; everything narrower upcasts to f32
+PALLAS_VALUE_DTYPES = ("f32", "bf16", "f16", "fp8_e4m3", "int8")
+#: the BELL MXU kernel streams blocks with no per-block scale plumbing, so
+#: its Pallas entries take native float storage only
+FLOAT_PALLAS_VALUE_DTYPES = ("f32", "bf16", "f16")
+
 #: ranking derates for backends whose execution mode the perfmodel's
 #: efficiency tables don't cover: the Pallas interpreter evaluates the grid
 #: step-by-step through jax ops (orders slower than either real backend),
@@ -136,6 +145,9 @@ class KernelEntry:
     autotune: Callable | None = None      # autotune(matrix, ctx) -> choice
     auto: bool = True                     # eligible for backend="auto"
     description: str = ""
+    #: value-storage dtypes this entry accepts; the registered probe is
+    #: wrapped with a gate that rejects containers stored outside this set
+    value_dtypes: tuple = ALL_VALUE_DTYPES
 
     @property
     def key(self) -> tuple:
@@ -194,6 +206,32 @@ def _probe_pallas_compiled(matrix, ctx) -> Capability:
     return compiled_probe(_probe_pallas_dtype)(matrix, ctx)
 
 
+def _operand_value_dtype(matrix) -> str | None:
+    """Canonical value-dtype name of a format-container operand, or None
+    for operands without a stored value array (slab metas, placeholders)."""
+    if matrix is None:
+        return None
+    try:
+        from ..core import formats as F
+        return F.container_value_dtype(matrix)
+    except TypeError:
+        return None
+
+
+def dtype_gated_probe(base_probe, value_dtypes: tuple):
+    """Wrap a probe with the per-entry value-dtype capability gate."""
+
+    def probe(matrix, ctx) -> Capability:
+        name = _operand_value_dtype(matrix)
+        if name is not None and name not in value_dtypes:
+            return Capability(
+                False, f"value dtype {name} unsupported here "
+                       f"(supported: {', '.join(value_dtypes)})")
+        return base_probe(matrix, ctx)
+
+    return probe
+
+
 def _probe_pallas_dtype(matrix, ctx) -> Capability:
     import numpy as np
     val = getattr(matrix, "val", None)
@@ -217,7 +255,9 @@ def default_cost(fmt: str, stream_backend: str, backend: str | None = None):
 
     def cost(matrix, ctx: KernelContext) -> float:
         from ..core import perfmodel as PM
-        am = ctx.access_model()
+        # dtype-honest default: with no explicit access model in the ctx,
+        # charge value bytes at the container's actual stored dtype
+        am = ctx.am if ctx.am is not None else PM.access_model_for(matrix)
         balance = PM.balance_of(matrix, am, backend=stream_backend)
         eff = PM.exec_efficiency(ctx.chip).get(fmt, 1.0)
         eff *= _BACKEND_DERATE.get(backend or stream_backend, 1.0)
@@ -242,7 +282,7 @@ def register(entry: KernelEntry) -> KernelEntry:
 
 def register_kernel(format: str, op: str, backend: str, *, probe=None,
                     cost=None, autotune=None, auto: bool = True,
-                    description: str = ""):
+                    description: str = "", value_dtypes: tuple | None = None):
     """Decorator form: the decorated function is the entry's build hook."""
 
     def deco(build):
@@ -254,12 +294,20 @@ def register_kernel(format: str, op: str, backend: str, *, probe=None,
             pr = _probe_pallas_dtype
         else:
             pr = _probe_ok
+        if value_dtypes is not None:
+            vd = tuple(value_dtypes)
+        elif backend in ("pallas", "pallas_interpret"):
+            vd = PALLAS_VALUE_DTYPES
+        else:
+            vd = ALL_VALUE_DTYPES
         stream = "pallas" if backend in ("pallas", "pallas_interpret") else backend
         register(KernelEntry(
-            format=format, op=op, backend=backend, build=build, probe=pr,
+            format=format, op=op, backend=backend, build=build,
+            probe=dtype_gated_probe(pr, vd),
             cost=cost if cost is not None else default_cost(format, stream,
                                                             backend),
             autotune=autotune, auto=auto, description=description,
+            value_dtypes=vd,
         ))
         return build
 
@@ -397,16 +445,19 @@ def table_rows() -> list[dict]:
             "format": e.format, "op": e.op, "backend": e.backend,
             "auto": e.auto, "available": cap.ok,
             "reason": cap.reason, "description": e.description,
+            "value_dtypes": e.value_dtypes,
         })
     return rows
 
 
 def format_table(markdown: bool = False) -> str:
     rows = table_rows()
-    head = ("format", "op", "backend", "auto", "available", "description")
+    head = ("format", "op", "backend", "auto", "available", "dtypes",
+            "description")
     data = [[r["format"], r["op"], r["backend"],
              "yes" if r["auto"] else "no",
              "yes" if r["available"] else f"no ({r['reason']})",
+             ",".join(r["value_dtypes"]),
              r["description"]] for r in rows]
     widths = [max([len(h)] + [len(str(row[i])) for row in data])
               for i, h in enumerate(head)]

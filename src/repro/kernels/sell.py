@@ -22,6 +22,7 @@ import numpy as np
 
 from ..core.formats import SELL
 from . import sell_spmv as KP
+from .accum import acc_dtype
 from .cache import cached, register_stat, spmm_by_columns
 from .registry import (
     CAP_OK,
@@ -45,13 +46,19 @@ def sell_padded_views(m: SELL, pad_width_to: int = 1):
 
 
 def sell_spmv_padded(col3: jnp.ndarray, val3: jnp.ndarray, perm: jnp.ndarray,
-                     x: jnp.ndarray, n_rows: int) -> jnp.ndarray:
+                     x: jnp.ndarray, n_rows: int, scale=None) -> jnp.ndarray:
     """Vectorised SELL on the fully padded (n_chunks, W, C) views.
 
     This is the shape the Pallas kernel consumes; also a fast XLA fallback.
+    Reduces in ``acc_dtype`` (>= f32); ``scale`` is the optional per-chunk
+    fp32 scale of a quantized container, applied to the reduced (nc, C)
+    tiles before the perm-scatter.
     """
+    acc = acc_dtype(val3.dtype, x.dtype)
     gathered = jnp.take(x, col3, axis=0)  # (nc, W, C)
-    tiles = jnp.sum(val3 * gathered, axis=1)  # (nc, C)
+    tiles = jnp.sum(val3.astype(acc) * gathered.astype(acc), axis=1)  # (nc, C)
+    if scale is not None:
+        tiles = tiles * scale.astype(acc)[:, None]
     y = jnp.zeros(n_rows + 1, dtype=tiles.dtype)
     y = y.at[perm.reshape(-1)].add(tiles.reshape(-1))
     return y[:n_rows]
@@ -61,16 +68,21 @@ def sell_spmv(m: SELL, x: jnp.ndarray) -> jnp.ndarray:
     """Vectorized SELL via the cached padded 3-D views: one gather + one
     reduction over W + one perm-scatter (no host loop over chunks)."""
     col3, val3, _ = sell_padded_views(m)
+    scale = None if m.scale is None else jnp.asarray(m.scale)
     return sell_spmv_padded(jnp.asarray(col3), jnp.asarray(val3),
-                            jnp.asarray(m.perm), x, m.shape[0])
+                            jnp.asarray(m.perm), x, m.shape[0], scale)
 
 
 def sell_spmm_padded(col3: jnp.ndarray, val3: jnp.ndarray, perm: jnp.ndarray,
-                     X: jnp.ndarray, n_rows: int) -> jnp.ndarray:
+                     X: jnp.ndarray, n_rows: int, scale=None) -> jnp.ndarray:
     """Multi-vector SELL on the padded (nc, W, C) views (any padding works:
     extra zero columns contribute nothing)."""
+    acc = acc_dtype(val3.dtype, X.dtype)
     gathered = jnp.take(X, col3, axis=0)  # (nc, W, C, K)
-    tiles = jnp.einsum("nwc,nwck->nck", val3, gathered)  # (nc, C, K)
+    tiles = jnp.einsum("nwc,nwck->nck", val3.astype(acc),
+                       gathered.astype(acc))  # (nc, C, K)
+    if scale is not None:
+        tiles = tiles * scale.astype(acc)[:, None, None]
     Y = jnp.zeros((n_rows + 1, X.shape[1]), dtype=tiles.dtype)
     Y = Y.at[perm.reshape(-1)].add(tiles.reshape(-1, X.shape[1]))
     return Y[:n_rows]
@@ -78,8 +90,9 @@ def sell_spmm_padded(col3: jnp.ndarray, val3: jnp.ndarray, perm: jnp.ndarray,
 
 def sell_spmm(m: SELL, X: jnp.ndarray) -> jnp.ndarray:
     col3, val3, _ = sell_padded_views(m)
+    scale = None if m.scale is None else jnp.asarray(m.scale)
     return sell_spmm_padded(jnp.asarray(col3), jnp.asarray(val3),
-                            jnp.asarray(m.perm), X, m.shape[0])
+                            jnp.asarray(m.perm), X, m.shape[0], scale)
 
 
 def sell_spmv_loop(m: SELL, x: jnp.ndarray) -> jnp.ndarray:
@@ -94,16 +107,20 @@ def sell_spmv_loop(m: SELL, x: jnp.ndarray) -> jnp.ndarray:
     cw = np.asarray(m.chunk_width)
     C = m.C
     n_rows = m.shape[0]
-    val = jnp.asarray(m.val)
+    acc = acc_dtype(jnp.asarray(m.val).dtype, x.dtype)
+    val = jnp.asarray(m.val).astype(acc)
     ci = jnp.asarray(m.col_idx)
     perm = jnp.asarray(m.perm)
-    y = jnp.zeros(n_rows + 1, dtype=jnp.result_type(val.dtype, x.dtype))
+    scale = None if m.scale is None else np.asarray(m.scale)
+    y = jnp.zeros(n_rows + 1, dtype=acc)
     for c in range(m.n_chunks):
         w = int(cw[c])
         lo, hi = int(cp[c]), int(cp[c + 1])
         slab_v = val[lo:hi].reshape(w, C)
-        slab_x = jnp.take(x, ci[lo:hi], axis=0).reshape(w, C)
+        slab_x = jnp.take(x, ci[lo:hi], axis=0).reshape(w, C).astype(acc)
         tile = jnp.sum(slab_v * slab_x, axis=0)  # (C,)
+        if scale is not None:
+            tile = tile * float(scale[c])
         rows = perm[c * C : (c + 1) * C]  # original row ids; pad rows -> n_rows
         y = y.at[rows].add(tile)
     return y[:n_rows]
@@ -169,10 +186,13 @@ def _build_pallas_spmv(m: SELL, ctx: KernelContext, interpret: bool) -> Compiled
     choice, col3, val3, perm = _pallas_operands(m, ctx)
     cb, wb = choice.chunk_block, choice.width_block
     n = m.shape[0]
+    scale = None if m.scale is None else jnp.asarray(m.scale)
 
     def fn(x):
         tiles = KP.sell_spmv_arrays(col3, val3, x, chunk_block=cb,
                                     width_block=wb, interpret=interpret)
+        if scale is not None:  # per-chunk scale on the reduced (nc, C) tiles
+            tiles = tiles * scale.astype(tiles.dtype)[:, None]
         return KP.sell_spmv_scatter(tiles, perm, n)
 
     return CompiledKernel(fn, "pallas-interpret" if interpret else "pallas",
@@ -185,6 +205,7 @@ def _build_pallas_spmm(m: SELL, ctx: KernelContext, interpret: bool) -> Compiled
     n = m.shape[0]
     vb = int(np.dtype(np.asarray(m.val).dtype).itemsize)
     budget = int(ctx.chip.vmem_bytes * 0.5)
+    scale = None if m.scale is None else jnp.asarray(m.scale)
 
     def fn(X):
         # the probe claims VMEM at k=1 (batch width is unknown until call
@@ -194,9 +215,11 @@ def _build_pallas_spmm(m: SELL, ctx: KernelContext, interpret: bool) -> Compiled
         k = int(X.shape[1])
         claim = KP.vmem_bytes(cb, wb, m.C, m.shape[1], vb, k=k)
         if claim > budget:
-            return sell_spmm_padded(col3, val3, perm, X, n)
+            return sell_spmm_padded(col3, val3, perm, X, n, scale)
         tiles = KP.sell_spmm_arrays(col3, val3, X, chunk_block=cb,
                                     width_block=wb, interpret=interpret)
+        if scale is not None:
+            tiles = tiles * scale.astype(tiles.dtype)[:, None, None]
         return KP.sell_spmm_scatter(tiles, perm, n)
 
     return CompiledKernel(fn, "pallas-interpret" if interpret else "pallas",

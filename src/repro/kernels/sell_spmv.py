@@ -46,6 +46,7 @@ def _sell_kernel(col_ref, val_ref, x_ref, o_ref):
 
 
 from ..utils.hw import pallas_interpret_default as _auto_interpret
+from .accum import acc_dtype
 
 
 @functools.partial(
@@ -73,7 +74,7 @@ def sell_spmv_arrays(
     wb = width_block or W
     assert nc % chunk_block == 0, (nc, chunk_block)
     assert W % wb == 0, (W, wb)
-    odt = out_dtype or jnp.result_type(val3.dtype, x.dtype)
+    odt = out_dtype or acc_dtype(val3.dtype, x.dtype)
     grid = (nc // chunk_block, W // wb)
     return pl.pallas_call(
         _sell_kernel,
@@ -139,7 +140,7 @@ def sell_spmm_arrays(
     assert nc % chunk_block == 0, (nc, chunk_block)
     assert W % wb == 0, (W, wb)
     K = X.shape[1]
-    odt = out_dtype or jnp.result_type(val3.dtype, X.dtype)
+    odt = out_dtype or acc_dtype(val3.dtype, X.dtype)
     grid = (nc // chunk_block, W // wb)
     return pl.pallas_call(
         _sell_mm_kernel,

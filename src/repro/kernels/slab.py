@@ -20,6 +20,7 @@ from dataclasses import dataclass
 import jax
 import jax.numpy as jnp
 
+from .accum import acc_dtype
 from .registry import CompiledKernel, register_kernel
 
 
@@ -36,17 +37,21 @@ class SlabMeta:
 
 def _ell_mult(rows_pp: int):
     def mult(colb, valb, ridb, x):
-        g = jnp.take(x, colb, axis=0)          # (rows_pp, W[, K])
+        acc = acc_dtype(valb.dtype, x.dtype)
+        g = jnp.take(x, colb, axis=0).astype(acc)  # (rows_pp, W[, K])
+        v = valb.astype(acc)
         if x.ndim == 1:
-            return jnp.sum(valb * g, axis=1)
-        return jnp.sum(valb[..., None] * g, axis=1)
+            return jnp.sum(v * g, axis=1)
+        return jnp.sum(v[..., None] * g, axis=1)
     return mult
 
 
 def _sell_mult(rows_pp: int):
     def mult(colb, valb, ridb, x):
-        g = jnp.take(x, colb, axis=0)          # (L[, K])
-        prod = valb * g if x.ndim == 1 else valb[:, None] * g
+        acc = acc_dtype(valb.dtype, x.dtype)
+        g = jnp.take(x, colb, axis=0).astype(acc)  # (L[, K])
+        v = valb.astype(acc)
+        prod = v * g if x.ndim == 1 else v[:, None] * g
         return jax.ops.segment_sum(prod, ridb, num_segments=rows_pp + 1)[:rows_pp]
     return mult
 
@@ -55,11 +60,13 @@ def _ell_mult_loop(rows_pp: int):
     """Loop oracle: one pass per slab width column."""
     def mult(colb, valb, ridb, x):
         W = colb.shape[1]
+        acc = acc_dtype(valb.dtype, x.dtype)
+        v = valb.astype(acc)
         shape = (rows_pp,) if x.ndim == 1 else (rows_pp, x.shape[1])
-        y = jnp.zeros(shape, dtype=jnp.result_type(valb.dtype, x.dtype))
+        y = jnp.zeros(shape, dtype=acc)
         for j in range(W):
-            g = jnp.take(x, colb[:, j], axis=0)
-            y = y + (valb[:, j] * g if x.ndim == 1 else valb[:, j, None] * g)
+            g = jnp.take(x, colb[:, j], axis=0).astype(acc)
+            y = y + (v[:, j] * g if x.ndim == 1 else v[:, j, None] * g)
         return y
     return mult
 
@@ -68,8 +75,10 @@ def _sell_mult_loop(rows_pp: int):
     """Loop oracle: scatter-add over partition-local row ids (independent
     of the segment-sum formulation it validates)."""
     def mult(colb, valb, ridb, x):
-        g = jnp.take(x, colb, axis=0)
-        prod = valb * g if x.ndim == 1 else valb[:, None] * g
+        acc = acc_dtype(valb.dtype, x.dtype)
+        g = jnp.take(x, colb, axis=0).astype(acc)
+        v = valb.astype(acc)
+        prod = v * g if x.ndim == 1 else v[:, None] * g
         shape = (rows_pp + 1,) if x.ndim == 1 else (rows_pp + 1, x.shape[1])
         y = jnp.zeros(shape, dtype=prod.dtype)
         return y.at[ridb].add(prod)[:rows_pp]

@@ -67,7 +67,7 @@ class SparseLinear:
         y2d = self._apply_fn(x2d)                              # (d_out, B)
         return y2d.T.reshape(*lead, self.d_out).astype(x.dtype)
 
-    def streamed_bytes(self, am: PM.AccessModel = PM.TPU_FP32) -> float:
+    def streamed_bytes(self, am: PM.AccessModel | None = None) -> float:
         return PM.spmv_streamed_bytes(self.matrix, am)
 
 

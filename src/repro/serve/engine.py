@@ -137,7 +137,7 @@ class BatchingSpMVServer:
     """
 
     def __init__(self, *, backend: str = "auto", chip=None,
-                 am: PM.AccessModel = PM.TPU_FP32,
+                 am: PM.AccessModel | None = None,
                  max_batch: int | None = None, deadline_s: float = 1e-3,
                  max_pending: int = 256, pad_partial: bool = True,
                  clock=time.monotonic, validate: str = "strict",

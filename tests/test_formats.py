@@ -51,7 +51,8 @@ def test_sell_chunk_geometry(hh_small):
 
 
 def test_sell_sigma_full_matches_jds_order(hh_small):
-    sell = F.SELL.from_csr(hh_small, C=8, sigma=None)  # sigma = n
+    # explicit sigma = n: full sort (sigma=None now means DEFAULT_SELL_SIGMA)
+    sell = F.SELL.from_csr(hh_small, C=8, sigma=hh_small.n_rows)
     jds = F.JDS.from_csr(hh_small)
     n = hh_small.n_rows
     np.testing.assert_array_equal(np.asarray(sell.perm)[:n], np.asarray(jds.perm))

@@ -128,6 +128,77 @@ def test_parity_suite_spans_six_corpus_matrices():
     assert set(PARITY_MATRIX.values()) <= set(corpus.names())
 
 
+# --- value-dtype x backend grid (compressed-value containers) ---------------
+
+#: error budget per storage dtype, relative to the f64 loop oracle and the
+#: oracle's max magnitude.  Rounding error for the float dtypes is
+#: ~eps * sqrt(nnz/row); the quantized dtypes add the per-group scale error.
+VALUE_DTYPE_TOL = {
+    "f32": 1e-5, "bf16": 3e-2, "f16": 1e-2, "fp8_e4m3": 2e-1, "int8": 5e-2,
+}
+
+_VD_CONTAINERS: dict = {}
+
+
+def _vd_container(fmt: str, vd: str):
+    key = (fmt, vd)
+    if key not in _VD_CONTAINERS:
+        _VD_CONTAINERS[key] = F.with_value_dtype(_container(fmt, np.float64), vd)
+    return _VD_CONTAINERS[key]
+
+
+def _vd_cases():
+    cases = []
+    for fmt in PARITY_MATRIX:
+        for vd in VALUE_DTYPE_TOL:
+            for backend in ("xla", "loop_reference", "pallas_interpret"):
+                if not R.has(fmt, "spmv", backend):
+                    continue
+                cases.append(pytest.param(fmt, vd, backend,
+                                          id=f"{fmt}-{vd}-{backend}"))
+    return cases
+
+
+@pytest.mark.parametrize("fmt,vd,backend", _vd_cases())
+def test_value_dtype_entry_matches_f64_oracle(fmt, vd, backend):
+    """Every entry on a value-compressed container reproduces the f64 loop
+    oracle within the dtype's error budget; unsupported (backend, dtype)
+    combinations skip via their probes, never crash."""
+    obj = _vd_container(fmt, vd)
+    assert F.container_value_dtype(obj) == vd
+    cap = R.get(fmt, "spmv", backend).probe(obj, R.KernelContext())
+    if not cap.ok:
+        assert cap.reason  # a probe rejection always says why
+        pytest.skip(f"({fmt}, spmv, {backend}, {vd}): {cap.reason}")
+    x64 = _container(fmt, np.float64)
+    x = _operand(x64, "spmv", np.float32)
+    out = np.asarray(R.build(obj, fmt, "spmv", backend).fn(jnp.asarray(x)))
+    ref = _oracle(fmt, "spmv", np.float64)
+    scale = max(1e-9, float(np.abs(ref).max()))
+    assert out.shape == ref.shape
+    assert float(np.abs(out - ref).max()) / scale < VALUE_DTYPE_TOL[vd]
+
+
+def test_value_dtype_gate_rejects_quantized_bsr_pallas():
+    """The BELL Pallas entries stream raw blocks (no per-block scale
+    plumbing): their capability gate must reject quantized containers with
+    the dtype named in the reason."""
+    obj = _vd_container("bsr", "int8")
+    cap = R.get("bsr", "spmm", "pallas_interpret").probe(obj, R.KernelContext())
+    assert not cap.ok and "int8" in cap.reason
+    assert R.get("bsr", "spmm", "pallas_interpret").value_dtypes == \
+        R.FLOAT_PALLAS_VALUE_DTYPES
+
+
+def test_registry_table_has_value_dtype_column():
+    rows = R.table_rows()
+    assert all("value_dtypes" in r for r in rows)
+    md = R.format_table(markdown=True)
+    assert "dtypes" in md.splitlines()[0]
+    # the BELL restriction is visible in the published table
+    assert "f32,bf16,f16" in md
+
+
 # --- slab entries (the distributed executors' inner multiplies) -------------
 
 

@@ -1,0 +1,290 @@
+"""Value-compression layer: quantization round-trips, the dtype-honest
+access model, the f32 accumulation floor, and the unified default sigma.
+
+The paper's balance argument makes value bytes the dominant stream for
+every index-light format, so storing values narrow is the one lever that
+moves the roofline without touching the pattern.  These tests pin the
+three contracts that make that safe: (1) quantize/dequantize round-trips
+within the dtype's grid resolution (including the all-zero tensor), (2)
+the perfmodel charges the *stored* dtype's bytes — an f64 DIA container
+models exactly 2x the stream bytes of its f32 twin — and (3) kernels
+accumulate in at least f32 regardless of how narrow the values are.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import corpus
+from repro.core import formats as F
+from repro.core import perfmodel as PM
+from repro.core.plan import SpMVPlan
+
+
+def _csr(n=64, seed=0, nnz_per_row=6, scale=1.0):
+    rng = np.random.default_rng(seed)
+    rows, cols, vals = [], [], []
+    for r in range(n):
+        c = rng.choice(n, size=nnz_per_row, replace=False)
+        rows.extend([r] * nnz_per_row)
+        cols.extend(c.tolist())
+        vals.extend((rng.standard_normal(nnz_per_row) * scale).tolist())
+    order = np.lexsort((cols, rows))
+    rp = np.zeros(n + 1, np.int64)
+    np.add.at(rp[1:], np.asarray(rows)[order], 1)
+    return F.CSR(np.cumsum(rp), np.asarray(cols)[order].astype(np.int32),
+                 np.asarray(vals)[order], (n, n))
+
+
+# --- quantize/dequantize round-trip -----------------------------------------
+
+
+@pytest.mark.parametrize("vd", F.QUANTIZED_DTYPES)
+@pytest.mark.parametrize("fmt", ["csr", "ell", "jds", "sell", "dia", "bsr",
+                                 "hybrid"])
+def test_quantize_dequantize_round_trip(fmt, vd):
+    m = corpus.build("banded_narrow")
+    obj = F.convert(m, fmt, value_dtype=vd)
+    assert F.container_value_dtype(obj) == vd
+    dq = F.dequantize(obj)
+    assert F.container_value_dtype(dq) == "f32"
+    a = np.asarray(m.to_dense(), np.float64)
+    b = np.asarray(dq.to_dense() if hasattr(dq, "to_dense") else None,
+                   np.float64) if hasattr(dq, "to_dense") else None
+    if b is None:
+        return
+    # symmetric quantization: error bounded by half a grid step per group
+    amax = np.abs(a).max()
+    tol = amax / (127.0 if vd == "int8" else 448.0) * 0.75 + 1e-12
+    # fp8's grid is non-uniform (4 mantissa bits near amax): widen to ~6%
+    if vd == "fp8_e4m3":
+        tol = amax * 0.07
+    assert np.abs(a - b).max() <= tol
+
+
+@pytest.mark.parametrize("vd", F.QUANTIZED_DTYPES)
+def test_quantize_all_zero_tensor_round_trips_exactly(vd):
+    n = 16
+    rp = np.arange(n + 1, dtype=np.int64) * 2
+    ci = np.tile(np.array([0, 1], np.int32), n)
+    m = F.CSR(rp, ci, np.zeros(2 * n, np.float32), (n, n))
+    q = F.with_value_dtype(m, vd)
+    assert np.asarray(q.scale).min() == 1.0  # all-zero groups get scale 1
+    dq = F.dequantize(q)
+    assert np.abs(np.asarray(dq.val)).max() == 0.0
+    y = np.asarray(jnp.asarray(dq.to_dense()) @ jnp.ones(n, jnp.float32))
+    assert np.abs(y).max() == 0.0
+
+
+def test_quantize_property_round_trip():
+    hyp = pytest.importorskip(
+        "hypothesis", reason="property tests need the 'hypothesis' extra")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 10_000), scale=st.floats(1e-6, 1e6),
+           vd=st.sampled_from(list(F.QUANTIZED_DTYPES)))
+    def inner(seed, scale, vd):
+        m = _csr(n=24, seed=seed, nnz_per_row=4, scale=scale)
+        q = F.with_value_dtype(m, vd)
+        dq = F.dequantize(q)
+        a = np.asarray(m.val, np.float64)
+        b = np.asarray(dq.val, np.float64)
+        # per-row symmetric grids: relative error bounded per row by the
+        # grid step of that row's amax
+        lens = np.diff(np.asarray(m.row_ptr))
+        row_of = np.repeat(np.arange(len(lens)), lens)
+        amax = np.zeros(len(lens))
+        np.maximum.at(amax, row_of, np.abs(a))
+        step = amax / (127.0 if vd == "int8" else 448.0)
+        bound = (0.75 * step + 1e-30)[row_of]
+        if vd == "fp8_e4m3":
+            bound = np.maximum(bound, 0.07 * np.abs(a))
+        assert (np.abs(a - b) <= bound + 1e-30).all()
+
+    inner()
+
+
+def test_requantizing_requires_dequantize_first():
+    """with_value_dtype on an already-quantized container re-quantizes from
+    the dequantized values, not from the raw codes."""
+    m = _csr(n=32, seed=3)
+    q8 = F.with_value_dtype(m, "int8")
+    q16 = F.with_value_dtype(q8, "bf16")
+    assert q16.scale is None
+    ref = F.with_value_dtype(F.dequantize(q8), "bf16")
+    np.testing.assert_array_equal(np.asarray(q16.val, np.float32),
+                                  np.asarray(ref.val, np.float32))
+
+
+def test_structural_conversion_refuses_quantized_source():
+    """Raw converters must reject quantized CSRs (per-row scales cannot be
+    reinterpreted in the target layout); ``convert`` instead round-trips
+    through floats and re-quantizes in the target's own group layout."""
+    m = _csr(n=48, seed=7)
+    q = F.with_value_dtype(m, "int8")
+    for raw in (F.DIA.from_csr, F.ELL.from_csr, F.JDS.from_csr,
+                F.SELL.from_csr, F.split_dia):
+        with pytest.raises(TypeError, match="quantized"):
+            raw(q)
+    d = F.convert(q, "ell")          # dequantize -> convert -> re-quantize
+    assert F.container_value_dtype(d) == "int8"
+    assert d.scale is not None
+    np.testing.assert_allclose(
+        np.asarray(F.dequantize(d).to_dense(), np.float64),
+        np.asarray(m.to_dense(), np.float64),
+        atol=2.1 * np.abs(m.to_dense()).max() / 127.0)
+
+
+# --- the dtype-honest access model (satellite bugfix 1) ---------------------
+
+
+def test_access_model_reads_stored_dtype():
+    m = corpus.build("banded_narrow")
+    for vd, vb in [("f64", 8), ("f32", 4), ("bf16", 2), ("int8", 1)]:
+        obj = F.with_value_dtype(m, vd)
+        assert PM.value_bytes_of(obj) == vb
+        am = PM.access_model_for(obj)
+        assert am.value_bytes == vb
+    # f32 resolves byte-identically to the historical default
+    assert PM.access_model_for(F.with_value_dtype(m, "f32")) == PM.TPU_FP32
+
+
+def test_f64_dia_models_twice_the_stream_bytes_of_f32():
+    """Acceptance criterion: an f64 container's modeled stream bytes are 2x
+    its f32 counterpart.  DIA is the format where this is exact — it
+    streams no indices, so every modeled byte is a value byte."""
+    m = corpus.build("banded_narrow")
+    d64 = F.DIA.from_csr(F.with_value_dtype(m, "f64"))
+    d32 = F.DIA.from_csr(F.with_value_dtype(m, "f32"))
+    b64 = PM.spmv_streamed_bytes(d64)
+    b32 = PM.spmv_streamed_bytes(d32)
+    assert b64 == pytest.approx(2.0 * b32)
+    # balance (bytes/flop) doubles with it
+    assert PM.balance_of(d64) == pytest.approx(2.0 * PM.balance_of(d32))
+
+
+def test_compression_halves_modeled_bytes_monotonically():
+    m = corpus.build("banded_narrow")
+    d = {vd: PM.spmv_streamed_bytes(F.convert(m, "dia", value_dtype=vd))
+         for vd in ("f64", "f32", "bf16", "int8")}
+    assert d["f64"] > d["f32"] > d["bf16"] > d["int8"]
+    assert d["f32"] == pytest.approx(4.0 * d["int8"])
+
+
+# --- the f32 accumulation floor (satellite bugfix 2) ------------------------
+
+
+def test_long_row_f16_does_not_overflow():
+    """An f16 accumulator saturates at 65504; a 70k-entry row of ones must
+    still sum exactly because kernels accumulate in f32."""
+    n_long = 70_000
+    rp = np.array([0, n_long, n_long + 1], np.int64)
+    ci = np.concatenate([np.arange(n_long), [0]]).astype(np.int32)
+    val = np.ones(n_long + 1, np.float16)
+    m = F.CSR(rp, ci, val, (2, n_long))
+    x = jnp.ones(n_long, jnp.float16)
+    from repro.kernels import registry as R
+    for backend in ("xla", "loop_reference"):
+        y = np.asarray(R.build(m, "csr", "spmv", backend).fn(x))
+        assert np.isfinite(y).all()
+        assert y[0] == pytest.approx(n_long, rel=1e-6)
+
+
+def test_acc_dtype_floor():
+    from repro.kernels.accum import acc_dtype
+    assert acc_dtype(np.float16, np.float16) == jnp.float32
+    assert acc_dtype(jnp.bfloat16, np.float32) == jnp.float32
+    assert acc_dtype(np.int8, np.float32) == jnp.float32
+    assert acc_dtype(jnp.float8_e4m3fn, np.float32) == jnp.float32
+    assert acc_dtype(np.float64, np.float32) == jnp.float64
+
+
+# --- the unified default sigma (satellite bugfix 3) -------------------------
+
+
+def test_default_sigma_agrees_between_stats_conversion_and_spec():
+    m = corpus.build("holstein_surrogate")  # n > DEFAULT_SELL_SIGMA
+    st_ = corpus.corpus_stats(m, C=8, sigma=None)
+    sell = F.SELL.from_csr(m, C=8, sigma=None)
+    assert st_["sell_sigma"] == F.DEFAULT_SELL_SIGMA
+    assert sell.sigma == F.DEFAULT_SELL_SIGMA
+    assert corpus.MatrixSpec.__dataclass_fields__["sell_sigma"].default \
+        == F.DEFAULT_SELL_SIGMA
+    # the occupancy the stats report is the occupancy the packing executes
+    lens = m.row_lengths()
+    pad = PM.sell_pad_ratio(lens, 8, F.DEFAULT_SELL_SIGMA)
+    assert st_["sell_occupancy"] == pytest.approx(1.0 / pad)
+
+
+# --- plan / eigensolver pass-through ----------------------------------------
+
+
+def test_plan_value_dtype_compresses_and_models_it():
+    m = corpus.build("banded_narrow")
+    p32 = SpMVPlan.compile(m, format="dia", value_dtype="f32")
+    p16 = SpMVPlan.compile(m, format="dia", value_dtype="bf16")
+    assert F.container_value_dtype(p16.matrix) == "bf16"
+    # the report's balance reflects the halved value stream
+    assert p16.report.balance_bytes_per_flop \
+        == pytest.approx(p32.report.balance_bytes_per_flop / 2.0)
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(
+        m.shape[1]).astype(np.float32))
+    np.testing.assert_allclose(np.asarray(p16(x)), np.asarray(p32(x)),
+                               rtol=2e-2, atol=5e-2)
+
+
+def test_plan_value_dtype_int8_quantizes():
+    m = corpus.build("banded_narrow")
+    p = SpMVPlan.compile(m, format="sell", value_dtype="int8")
+    assert F.container_value_dtype(p.matrix) == "int8"
+    assert p.matrix.scale is not None
+    x = jnp.asarray(np.random.default_rng(1).standard_normal(
+        m.shape[1]).astype(np.float32))
+    ref = SpMVPlan.compile(m, format="sell")
+    scale = float(np.abs(np.asarray(ref(x))).max())
+    assert float(np.abs(np.asarray(p(x)) - np.asarray(ref(x))).max()) \
+        < 5e-2 * scale
+
+
+def test_lanczos_tolerates_bf16_apply():
+    from repro.core.eigensolver import lanczos
+    from repro.core.matrices import holstein_hubbard_surrogate
+    m = holstein_hubbard_surrogate(400, seed=0)
+    e64 = lanczos(m, m.shape[0], m=48, format="sell").eigenvalues[0]
+    e16 = lanczos(m, m.shape[0], m=48, format="sell",
+                  value_dtype="bf16").eigenvalues[0]
+    spread = max(1e-9, abs(e64))
+    assert abs(e16 - e64) / spread < 5e-2
+
+
+def test_backend_auto_ranks_quantized_container(hh_small):
+    """select_backend runs end to end on a quantized container — the cost
+    hooks read the narrow value bytes through access_model_for."""
+    from repro.kernels import registry as R
+    q = F.convert(hh_small, "sell", value_dtype="int8")
+    be, costs = R.select_backend(q, "sell", "spmv")
+    assert be in costs and costs
+    f = F.convert(hh_small, "sell", value_dtype="f32")
+    _, costs_f = R.select_backend(f, "sell", "spmv")
+    # the modeled cost of the quantized container is strictly lower
+    assert costs[be] < costs_f[be]
+
+
+def test_hybrid_value_dtype_recurses_to_both_parts():
+    m = corpus.build("holstein_surrogate")
+    hyb = F.convert(m, "hybrid", value_dtype="bf16")
+    assert F.value_dtype_name(np.asarray(hyb.dia.data).dtype) == "bf16"
+    assert F.value_dtype_name(np.asarray(hyb.rest.val).dtype) == "bf16"
+
+
+def test_pytree_roundtrip_preserves_scale():
+    m = corpus.build("banded_narrow")
+    q = F.convert(m, "sell", value_dtype="int8")
+    leaves, treedef = jax.tree_util.tree_flatten(q)
+    q2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert q2.scale is not None
+    np.testing.assert_array_equal(np.asarray(q2.scale), np.asarray(q.scale))
+    f = F.convert(m, "sell", value_dtype="f32")
+    leaves, treedef = jax.tree_util.tree_flatten(f)
+    assert jax.tree_util.tree_unflatten(treedef, leaves).scale is None

@@ -58,6 +58,7 @@ HIGHER_BETTER_KEYS = frozenset({
     "speedup_vs_sequential",
     "speedup_at_width8",
     "kernel_speedup_at_width8",
+    "speedup_vs_f32",
 })
 
 
