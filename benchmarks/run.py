@@ -42,7 +42,7 @@ MODULES = [
 ]
 
 #: current perf-trajectory tag; --json with no PATH writes BENCH_<tag>.json
-DEFAULT_BENCH_TAG = "PR7"
+DEFAULT_BENCH_TAG = "PR8"
 
 
 def main(argv=None) -> int:
@@ -59,6 +59,7 @@ def main(argv=None) -> int:
 
     if args.json is not None:
         from benchmarks.backend_sweep import run_json as backend_json
+        from benchmarks.backend_sweep import tune_json
         from benchmarks.compression_sweep import run_json as compression_json
         from benchmarks.corpus_sweep import run_json as corpus_json
         from benchmarks.plan_bench import run_json
@@ -69,6 +70,7 @@ def main(argv=None) -> int:
         payload["corpus"] = corpus_json(full=args.full)
         payload["backends"] = backend_json(full=args.full)
         payload["compression"] = compression_json(full=args.full)
+        payload["tuning"] = tune_json(full=args.full)
         out_path.parent.mkdir(parents=True, exist_ok=True)
         with open(out_path, "w") as fh:
             json.dump(payload, fh, indent=2, sort_keys=True)
@@ -104,6 +106,12 @@ def main(argv=None) -> int:
               f"geomean int8 speedup {comp['geomean_int8_speedup']:.2f}x, "
               f"holstein int8 eig_err "
               f"{payload['compression']['holstein']['int8']['eig_err']:.2e}",
+              file=sys.stderr)
+        ts = payload["tuning"]["summary"]
+        print(f"# tuning: geomean chosen-vs-best "
+              f"{ts['geomean_chosen_vs_best']:.3f} (model-only "
+              f"{ts['geomean_model_vs_best']:.3f}), warm hit rate "
+              f"{ts['warm_hit_rate']:.2f} over {ts['n_matrices']} matrices",
               file=sys.stderr)
         return 0
 

@@ -423,10 +423,39 @@ EXEC_EFFICIENCY = {
     },
 }
 
+#: chip-name substrings that resolve to the ``cpu`` efficiency table (the
+#: paper's x86 systems plus the calibrated host runner).
+CPU_CHIP_MARKERS = ("cpu", "host", "woodcrest", "shanghai", "nehalem", "x86")
+
+#: family an *unknown accelerator* resolves to.  The cpu table encodes the
+#: measured gather/segment-sum penalties of a compiler CPU backend —
+#: applying it to an unrecognized accelerator (a future GPU/TPU name) is a
+#: silent miscalibration; the structural ``tpu`` table is the safe default
+#: for anything that is not recognizably a CPU.
+DEFAULT_CHIP_FAMILY = "tpu"
+
+
+def chip_family(chip: ChipSpec | None) -> str:
+    """Resolve a chip to its ``EXEC_EFFICIENCY`` family (never raises).
+
+    ``"tpu"`` anywhere in the name wins; the known CPU markers (including
+    the paper's x86 systems, whose names contain no "cpu") map to
+    ``"cpu"``; everything else — unknown accelerators — pins to
+    ``DEFAULT_CHIP_FAMILY`` instead of a KeyError or a silent cpu
+    miscalibration.  The tuning DB uses the same resolution for its
+    entry keys (``core.tunedb``).
+    """
+    name = chip.name.lower() if chip is not None else ""
+    if "tpu" in name:
+        return "tpu"
+    if any(marker in name for marker in CPU_CHIP_MARKERS):
+        return "cpu"
+    return DEFAULT_CHIP_FAMILY
+
 
 def exec_efficiency(chip: ChipSpec) -> dict:
     """The formulation-efficiency table matching a chip family."""
-    return EXEC_EFFICIENCY["tpu" if "tpu" in chip.name.lower() else "cpu"]
+    return EXEC_EFFICIENCY[chip_family(chip)]
 
 
 @dataclass(frozen=True)
@@ -436,16 +465,20 @@ class FormatChoice:
     Attributes:
         format: chosen format name (a ``formats.convert`` key).
         predicted_time_s: {format: efficiency-adjusted roofline seconds}
-            over every candidate that was considered.
+            over every candidate that was considered (warm picks report
+            the *measured* seconds the tuning DB recorded instead).
         convert_kwargs: kwargs to pass to ``formats.convert`` for the
             chosen format (chunk/block geometry).
         stats: the ``matrix_stats`` snapshot the decision used.
+        source: ``"model"`` (cold path: roofline ranking) or
+            ``"measured"`` (warm path: a fresh tuning-DB entry decided).
     """
 
     format: str
     predicted_time_s: dict
     convert_kwargs: dict
     stats: dict
+    source: str = "model"
 
 
 def predict_exec(fmt: str, balance: float, nnz: int, chip: ChipSpec = TPU_V5E,
@@ -478,6 +511,7 @@ def select_format(
     max_dia_diags: int = 256,
     bsr_block: tuple[int, int] = (8, 128),
     backend: str = "auto",
+    tuning=None,
 ) -> FormatChoice:
     """Pick the storage format for a concrete CSR/COO container.
 
@@ -514,6 +548,13 @@ def select_format(
             ``backend="xla"`` the SELL candidate is charged
             ``sell_padded_view_ratio`` instead of the flat chunk-local
             ratio — this closes the BENCH_PR4 power-law misprediction.
+        tuning: a ``core.tunedb.TuneDB`` (or a path to one) holding
+            measured winners.  A fresh entry for this matrix decides the
+            pick directly (the **warm path**, ``choice.source ==
+            "measured"``); otherwise the DB's re-fit ``EXEC_EFFICIENCY``
+            factors refine the roofline ranking when no explicit
+            ``efficiency`` override was given.  ``None`` (default) is the
+            cold path — bitwise-identical to the model-only behavior.
 
     Returns:
         A ``FormatChoice``; compile the pick with
@@ -529,6 +570,18 @@ def select_format(
         if name is None:
             raise TypeError(f"select_format: unsupported container {type(m).__name__}")
         return FormatChoice(name, {}, {}, {})
+
+    if tuning is not None:
+        from . import tunedb as _tunedb
+        db = _tunedb.open_db(tuning)
+        hit = (db.lookup_format(m, chip=chip, allowed=allowed)
+               if db is not None else None)
+        if hit is not None:
+            fmt, kw, times = hit
+            return FormatChoice(fmt, times, kw, F.matrix_stats(m),
+                                source="measured")
+        if db is not None and efficiency is None:
+            efficiency = db.efficiency_for(chip)
 
     if am is None:
         am = access_model_for(m)
@@ -598,6 +651,55 @@ def select_format(
              for fmt, b in balances.items()}
     best = min(preds, key=preds.get)
     return FormatChoice(best, preds, kwargs[best], stats)
+
+
+def fit_efficiency_from_db(db, *, chip: ChipSpec | None = None,
+                           family: str | None = None,
+                           clamp: tuple = (0.01, 1.5)) -> dict:
+    """Re-fit the ``EXEC_EFFICIENCY`` factors from tuning-DB measurements.
+
+    For every recorded candidate, the achieved efficiency is the ratio of
+    the *efficiency-1* roofline prediction (pure byte model) to the
+    measured time::
+
+        eff = t_model_eff1_s / t_measured_s
+
+    (a kernel measuring 2x slower than the byte model achieved 0.5 of the
+    modelled bandwidth).  Per format, the fitted factor is the geometric
+    mean of the achieved efficiencies across matrices and backends —
+    robust to the order-of-magnitude spread between regular and
+    irregular patterns — clamped to ``clamp`` so one degenerate timing
+    cannot zero a format out of contention.
+
+    Only entries of the requested chip family contribute (timings from
+    another family are a different machine).  Formats with no
+    measurements keep their hand-calibrated default, so the fitted table
+    is always complete.
+
+    Args:
+        db: a ``core.tunedb.TuneDB`` populated by ``backend_sweep --tune``.
+        chip / family: which ``EXEC_EFFICIENCY`` family to fit (pass one;
+            ``family`` wins; default: the family of ``TPU_V5E``).
+        clamp: (lo, hi) bounds on each fitted factor.
+
+    Returns:
+        {format: efficiency} — the default table overlaid with the fit.
+    """
+    fam = family if family is not None else chip_family(chip or TPU_V5E)
+    ratios: dict[str, list] = {}
+    for entry in db.entries.values():
+        if entry.get("chip_family") != fam:
+            continue
+        for c in entry.get("candidates", ()):
+            t, t1 = c.get("t_measured_s"), c.get("t_model_eff1_s")
+            if t and t1 and t > 0 and t1 > 0:
+                ratios.setdefault(c["format"], []).append(t1 / t)
+    fitted = dict(EXEC_EFFICIENCY.get(fam, EXEC_EFFICIENCY[DEFAULT_CHIP_FAMILY]))
+    lo, hi = clamp
+    for fmt, rs in ratios.items():
+        geo = float(np.exp(np.mean(np.log(rs))))
+        fitted[fmt] = float(np.clip(geo, lo, hi))
+    return fitted
 
 
 # ---------------------------------------------------------------------------

@@ -134,6 +134,7 @@ class SpMVPlan:
         chunk_block: int | None = None,
         width_block: int | None = None,
         validate: str = "off",
+        tuning=None,
     ) -> "SpMVPlan":
         """Build (or fetch the memoized) plan for ``matrix``.
 
@@ -167,6 +168,14 @@ class SpMVPlan:
                 compiles as-is.  Compiled executors gather with clamped
                 indices, so an out-of-bounds ``col_idx`` silently reads
                 the wrong x entry — validation is where that surfaces.
+            tuning: a ``core.tunedb.TuneDB`` instance or a path to one
+                (the on-disk measured-autotuning database written by
+                ``benchmarks/backend_sweep.py --tune``).  A fresh entry
+                for this matrix overrides both the ``format="auto"``
+                ranking and the ``backend="auto"`` ranking with measured
+                winners (the warm path); everything else — including a
+                missing, corrupt, or stale DB — behaves exactly as
+                ``tuning=None`` (the cold path).
 
         Returns:
             The compiled (memoized) ``SpMVPlan``; ``plan.report`` records
@@ -175,9 +184,12 @@ class SpMVPlan:
         if validate != "off":
             from .validate import validate_matrix
             matrix = validate_matrix(matrix, policy=validate)
+        if tuning is not None:
+            from .tunedb import open_db
+            tuning = open_db(tuning)
         if format is not None:
             matrix = resolve_format(matrix, format, chip=chip, am=am,
-                                    backend=backend)
+                                    backend=backend, tuning=tuning)
         if value_dtype is not None:
             from . import formats as F
             matrix = _convert_cached(matrix, _FMT_NAMES.get(type(matrix)),
@@ -191,14 +203,16 @@ class SpMVPlan:
         if am is None:
             am = PM.access_model_for(matrix, chip)
         key = (fmt, backend, chunk_block, width_block, chip.name,
-               am.value_bytes, am.index_bytes)
+               am.value_bytes, am.index_bytes,
+               getattr(tuning, "token", None))
         cache = getattr(matrix, "_spmv_plans", None)
         if cache is None:
             cache = {}
             object.__setattr__(matrix, "_spmv_plans", cache)
         plan = cache.get(key)
         if plan is None:
-            plan = _compile(matrix, fmt, chip, am, backend, chunk_block, width_block)
+            plan = _compile(matrix, fmt, chip, am, backend, chunk_block,
+                            width_block, tuning)
             cache[key] = plan
         return plan
 
@@ -210,7 +224,7 @@ class SpMVPlan:
 
 def resolve_format(matrix, format: str, *, chip: ChipSpec = TPU_V5E,
                    am: PM.AccessModel | None = None, backend: str = "auto",
-                   **select_kw):
+                   tuning=None, **select_kw):
     """Return ``matrix`` converted to ``format`` (``"auto"`` = model's pick).
 
     A CSR/COO container is converted (and the converted container cached on
@@ -218,7 +232,9 @@ def resolve_format(matrix, format: str, *, chip: ChipSpec = TPU_V5E,
     conversion per format); a container already in a concrete format passes
     through when it matches, and is rejected otherwise (silently re-packing
     a hand-chosen format would hide a bug).  For ``"auto"`` on an already
-    concrete container the upstream choice stands.
+    concrete container the upstream choice stands.  ``tuning`` (a
+    ``core.tunedb.TuneDB``) lets the measured warm path decide the
+    ``"auto"`` pick; ``None`` keeps the model-only cold path.
     """
     fmt = _FMT_NAMES.get(type(matrix))
     if fmt is None:
@@ -227,7 +243,8 @@ def resolve_format(matrix, format: str, *, chip: ChipSpec = TPU_V5E,
         if fmt not in ("csr", "coo"):
             return matrix
         choice = PM.select_format(_as_csr_container(matrix), am=am, chip=chip,
-                                  backend=_resolve_backend(backend), **select_kw)
+                                  backend=_resolve_backend(backend),
+                                  tuning=tuning, **select_kw)
         return _convert_cached(matrix, choice.format, choice.convert_kwargs)
     if format == fmt:
         return matrix
@@ -257,6 +274,13 @@ def _convert_cached(matrix, fmt: str, kw: dict, value_dtype: str | None = None):
         obj = src if fmt == "csr" else convert(src, fmt, **kw)
         if value_dtype is not None:
             obj = with_value_dtype(obj, value_dtype)
+        if obj is not src:
+            # back-reference for the tuning DB: a converted container is
+            # signed through its source CSR's pattern (tunedb.signature_of)
+            try:
+                object.__setattr__(obj, "_tune_src", src)
+            except AttributeError:
+                pass
         cache[key] = obj
     return obj
 
@@ -326,9 +350,10 @@ def _pick_entry(matrix, fmt: str, op: str, backend: str,
     return "xla"
 
 
-def _compile(matrix, fmt, chip, am, backend, chunk_block, width_block) -> SpMVPlan:
+def _compile(matrix, fmt, chip, am, backend, chunk_block, width_block,
+             tuning=None) -> SpMVPlan:
     ctx = R.KernelContext(chip=chip, am=am, chunk_block=chunk_block,
-                          width_block=width_block)
+                          width_block=width_block, tuning=tuning)
     be = _resolve_backend(backend)
     # "pallas" off-TPU has always meant: SpMV through the interpreter (the
     # test-coverage path), SpMM on the fused XLA formulation — the

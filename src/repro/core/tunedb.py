@@ -1,0 +1,423 @@
+"""On-disk tuning database: the measured tier of the autotuner.
+
+The paper's method is *measure first* (STREAM, microbenchmarks), and only
+then trust the bandwidth model.  ``perfmodel.select_format`` and
+``kernels.registry.select_backend`` invert that: they rank purely by the
+analytically calibrated roofline, and the residual chosen-vs-best gap on
+the corpus is pure model error.  This module closes the loop:
+
+* ``benchmarks/backend_sweep.py --tune`` times the top-k registry
+  candidates per corpus matrix (through an injectable
+  ``testing.timing.Timer``) and records every measurement here;
+* on the next selection, the **warm path** consults the DB first — a hit
+  returns the measured winner (format + backend + conversion kwargs)
+  instead of the model's guess;
+* the measured-vs-predicted ratios re-fit the perfmodel's
+  ``EXEC_EFFICIENCY`` derating factors (``perfmodel.fit_efficiency_from_db``),
+  so even *cold* matrices benefit from the measurements;
+* with no DB (or a corrupt/stale one) every selection falls back to the
+  **cold path**, bitwise-identical to the model-only behavior — the DB is
+  an accelerant, never a dependency.
+
+Key schema
+----------
+One entry per ``(signature, chip_family, platform, value_dtype)``:
+
+* ``signature``   — a stable hash of the matrix's *pattern* statistics
+  (``corpus.corpus_stats`` fields that are chunk-geometry independent:
+  shape, nnz, bandwidth, nnz/row histogram, diagonal profile).  Two
+  builds of the same corpus matrix hash identically; a different matrix
+  practically never collides.
+* ``chip_family`` — ``perfmodel.chip_family`` of the roofline target
+  ("tpu" | "cpu"): timings from one family must not answer for another.
+* ``platform``    — ``jax.default_backend()`` at measurement time; an
+  entry measured on the CPU emulator never warms a real-TPU process.
+* ``value_dtype`` — the stored value dtype (``formats.container_value_dtype``);
+  an f32 winner says nothing about the int8 packing of the same pattern.
+
+Staleness: entries whose recorded winner no longer exists in the kernel
+registry, or whose probe rejects the operand here, are ignored (and will
+be re-tuned by the next ``--tune`` run) — the DB can be moved between
+machines without ever crashing a selection.
+"""
+from __future__ import annotations
+
+import hashlib
+import itertools
+import json
+import warnings
+from dataclasses import asdict, dataclass, field
+from pathlib import Path
+
+SCHEMA_VERSION = 1
+
+#: ``corpus_stats`` fields the signature hashes — deliberately independent
+#: of the SELL chunk geometry (C / sigma) so the same matrix signs
+#: identically regardless of which packing the caller is considering.
+SIGNATURE_KEYS = (
+    "n_rows", "n_cols", "nnz", "bandwidth", "n_populated_diags",
+    "nnz_per_row_mean", "nnz_per_row_max", "frac_nnz_top12_diags",
+    "nnz_per_row_hist", "top_diag_offsets", "top_diag_counts",
+)
+
+#: formats whose registered probes may legitimately accept an operand on
+#: one host and reject it on another (VMEM tiling, platform) — the reason
+#: lookup re-probes instead of trusting the record.
+_FRESHNESS_OPS = ("spmv",)
+
+_TOKENS = itertools.count()
+
+
+class TuneDBWarning(UserWarning):
+    """A tuning DB could not be read/used; selection degrades to the cold
+    (model-only) path instead of crashing."""
+
+
+def _sig_round(v):
+    if isinstance(v, float):
+        return f"{v:.6g}"
+    if isinstance(v, dict):
+        return {k: _sig_round(x) for k, x in sorted(v.items())}
+    if isinstance(v, (list, tuple)):
+        return [_sig_round(x) for x in v]
+    return v
+
+
+def signature_of(m) -> str | None:
+    """Stable pattern signature of a container, or None when it has none.
+
+    CSR/COO containers are signed directly from their ``corpus_stats``;
+    a converted container is signed through the source CSR the plan
+    layer's conversion cache stamped on it (``_tune_src``).  Containers
+    with neither (hand-built packings) return None — their selections
+    simply stay on the cold path.
+    """
+    from . import formats as F
+
+    if not isinstance(m, (F.CSR, F.COO)):
+        src = getattr(m, "_tune_src", None)
+        if src is None:
+            return None
+        m = src
+    cached = getattr(m, "_tune_sig", None)
+    if cached is not None:
+        return cached
+    from . import corpus
+    csr = F.CSR.from_coo(m) if isinstance(m, F.COO) else m
+    stats = corpus.corpus_stats(csr)
+    payload = json.dumps({k: _sig_round(stats[k]) for k in SIGNATURE_KEYS},
+                         sort_keys=True)
+    sig = hashlib.sha1(payload.encode()).hexdigest()[:16]
+    try:
+        object.__setattr__(m, "_tune_sig", sig)
+    except AttributeError:
+        pass
+    return sig
+
+
+def db_key(signature: str, chip_family: str, platform: str,
+           value_dtype: str) -> str:
+    return f"{signature}/{chip_family}/{platform}/{value_dtype}"
+
+
+def _platform() -> str:
+    import jax
+    return jax.default_backend()
+
+
+@dataclass
+class Candidate:
+    """One measured (format, backend) implementation of a matrix's SpMV.
+
+    ``t_model_s`` is the prediction of the *calibrated* roofline
+    (``predict_exec`` with the current ``EXEC_EFFICIENCY``) and feeds the
+    drift table; ``t_model_eff1_s`` is the prediction at efficiency 1.0
+    (pure byte model) and feeds the efficiency re-fit:
+    achieved efficiency = ``t_model_eff1_s / t_measured_s``.
+    """
+
+    format: str
+    backend: str
+    t_measured_s: float
+    t_model_s: float | None = None
+    t_model_eff1_s: float | None = None
+    convert_kwargs: dict = field(default_factory=dict)
+
+    @property
+    def label(self) -> str:
+        return f"{self.format}/{self.backend}"
+
+
+class TuneDB:
+    """The on-disk (JSON) tuning database.
+
+    Attributes:
+        path: where ``save()`` writes by default (None = in-memory only).
+        entries: {db_key: entry dict} — see the module docstring schema.
+        efficiency: {chip_family: {format: fitted efficiency}} — the
+            re-fit ``EXEC_EFFICIENCY`` factors persisted by ``--tune``.
+        token: process-unique identity string; selection memo keys use it
+            so choices warmed by one DB never answer for another.
+    """
+
+    def __init__(self, path: str | Path | None = None):
+        self.path = Path(path) if path is not None else None
+        self.entries: dict[str, dict] = {}
+        self.efficiency: dict[str, dict] = {}
+        self.token = f"tunedb-{next(_TOKENS)}"
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    # -- persistence --------------------------------------------------------
+
+    @classmethod
+    def load(cls, path: str | Path) -> "TuneDB":
+        """Read a DB from disk.  A missing file is an empty DB; a corrupt,
+        truncated, or wrong-schema file *warns* (``TuneDBWarning``) and
+        returns an empty DB — the cold path must always remain reachable.
+        """
+        db = cls(path)
+        p = Path(path)
+        if not p.exists():
+            return db
+        try:
+            payload = json.loads(p.read_text())
+            if not isinstance(payload, dict):
+                raise ValueError("top-level JSON value is not an object")
+            version = payload.get("version")
+            if version != SCHEMA_VERSION:
+                raise ValueError(f"schema version {version!r} != {SCHEMA_VERSION}")
+            entries = payload.get("entries", {})
+            efficiency = payload.get("efficiency", {})
+            if not isinstance(entries, dict) or not isinstance(efficiency, dict):
+                raise ValueError("'entries'/'efficiency' are not objects")
+        except (ValueError, OSError) as e:
+            warnings.warn(
+                f"tuning DB {p} unreadable ({e}); continuing with the cold "
+                f"(model-only) path", TuneDBWarning, stacklevel=2)
+            return db
+        db.entries = entries
+        db.efficiency = efficiency
+        return db
+
+    def save(self, path: str | Path | None = None) -> Path:
+        """Write the DB as deterministic, diff-friendly JSON."""
+        p = Path(path) if path is not None else self.path
+        if p is None:
+            raise ValueError("TuneDB has no path; pass save(path=...)")
+        p.parent.mkdir(parents=True, exist_ok=True)
+        payload = {"version": SCHEMA_VERSION, "entries": self.entries,
+                   "efficiency": self.efficiency}
+        p.write_text(json.dumps(payload, indent=1, sort_keys=True) + "\n")
+        self.path = p
+        return p
+
+    # -- recording ----------------------------------------------------------
+
+    def record(self, m, *, chip, candidates, matrix_name: str | None = None,
+               value_dtype: str | None = None,
+               platform: str | None = None) -> dict | None:
+        """Store the measured candidates for ``m`` (best = measured argmin).
+
+        Returns the stored entry, or None when ``m`` has no signature or
+        no candidate carries a finite measurement.
+        """
+        from . import formats as F
+        from . import perfmodel as PM
+
+        sig = signature_of(m)
+        if sig is None:
+            return None
+        cands = [asdict(c) if isinstance(c, Candidate) else dict(c)
+                 for c in candidates]
+        cands = [c for c in cands
+                 if c.get("t_measured_s") and c["t_measured_s"] > 0]
+        if not cands:
+            return None
+        vd = value_dtype or F.container_value_dtype(m)
+        best = min(cands, key=lambda c: c["t_measured_s"])
+        entry = {
+            "signature": sig,
+            "chip_family": PM.chip_family(chip),
+            "chip_name": chip.name,
+            "platform": platform or _platform(),
+            "value_dtype": vd,
+            "matrix": matrix_name,
+            "best": {"format": best["format"], "backend": best["backend"],
+                     "convert_kwargs": best.get("convert_kwargs", {})},
+            "candidates": cands,
+        }
+        key = db_key(sig, entry["chip_family"], entry["platform"], vd)
+        self.entries[key] = entry
+        return entry
+
+    # -- lookup (the warm path) ---------------------------------------------
+
+    def raw_lookup(self, m, *, chip, value_dtype: str | None = None,
+                   platform: str | None = None) -> dict | None:
+        """Key-exact entry for ``m`` with **no** freshness check."""
+        from . import formats as F
+        from . import perfmodel as PM
+
+        sig = signature_of(m)
+        if sig is None:
+            return None
+        try:
+            vd = value_dtype or F.container_value_dtype(m)
+        except TypeError:
+            return None
+        key = db_key(sig, PM.chip_family(chip), platform or _platform(), vd)
+        entry = self.entries.get(key)
+        if not isinstance(entry, dict) or "best" not in entry:
+            return None
+        return entry
+
+    def lookup(self, m, *, chip, value_dtype: str | None = None,
+               platform: str | None = None) -> dict | None:
+        """The warm path: entry for ``m`` whose winner is still buildable.
+
+        An entry is *stale* — ignored, never an error — when its recorded
+        best (format, backend) has no registry entry here or its
+        capability probe rejects the (converted) operand, e.g. a DB tuned
+        on TPU consulted by a CPU process, or a kernel that was removed.
+        """
+        entry = self.raw_lookup(m, chip=chip, value_dtype=value_dtype,
+                                platform=platform)
+        if entry is None:
+            return None
+        best = entry["best"]
+        if not self._candidate_fresh(m, best["format"], best["backend"],
+                                     best.get("convert_kwargs", {}), chip):
+            return None
+        return entry
+
+    def _candidate_fresh(self, m, fmt: str, backend: str,
+                         convert_kwargs: dict, chip) -> bool:
+        from ..kernels import registry as R
+        from . import formats as F
+
+        if not R.has(fmt, "spmv", backend):
+            return False
+        if isinstance(m, (F.CSR, F.COO)):
+            try:
+                from .plan import _convert_cached
+                obj = _convert_cached(m, fmt, dict(convert_kwargs))
+            except Exception:  # noqa: BLE001 - any conversion failure = stale
+                return False
+        else:
+            obj = m
+        ctx = R.KernelContext(chip=chip)
+        try:
+            return bool(R.get(fmt, "spmv", backend).probe(obj, ctx).ok)
+        except Exception:  # noqa: BLE001 - a raising probe is a stale entry
+            return False
+
+    def lookup_format(self, m, *, chip, allowed=None,
+                      value_dtype: str | None = None,
+                      platform: str | None = None) -> tuple | None:
+        """Warm ``select_format``: the measured-fastest *fresh* format.
+
+        Returns ``(format, convert_kwargs, {format: measured seconds})``
+        over the fresh candidates (fastest backend per format), or None
+        when there is no entry, ``allowed`` filters everything out, or no
+        surviving candidate still passes its registry probe.
+        """
+        entry = self.raw_lookup(m, chip=chip, value_dtype=value_dtype,
+                                platform=platform)
+        if entry is None:
+            return None
+        allow = set(allowed) if allowed is not None else None
+        times, kwargs = {}, {}
+        for c in sorted((c for c in entry.get("candidates", ())
+                         if c.get("t_measured_s")),
+                        key=lambda c: c["t_measured_s"]):
+            fmt = c["format"]
+            if (allow is not None and fmt not in allow) or fmt in times:
+                continue
+            if not self._candidate_fresh(m, fmt, c["backend"],
+                                         c.get("convert_kwargs", {}), chip):
+                continue
+            times[fmt] = c["t_measured_s"]
+            kwargs[fmt] = dict(c.get("convert_kwargs", {}))
+        if not times:
+            return None
+        best = min(times, key=times.get)
+        return best, kwargs[best], times
+
+    def lookup_backend(self, matrix, format: str, op: str, *,
+                       chip) -> dict | None:
+        """Warm ``select_backend``: the measured-fastest *fresh* candidate
+        recorded for this matrix under ``format`` (a candidate dict with
+        ``backend`` and ``t_measured_s``), or None (cold path).  Only
+        SpMV measurements are recorded, so other ops stay cold.
+        """
+        if op not in _FRESHNESS_OPS:
+            return None
+        entry = self.raw_lookup(matrix, chip=chip)
+        if entry is None:
+            return None
+        cands = sorted(
+            (c for c in entry.get("candidates", ())
+             if c.get("format") == format and c.get("t_measured_s")),
+            key=lambda c: c["t_measured_s"])
+        for c in cands:
+            if self._candidate_fresh(matrix, format, c["backend"],
+                                     c.get("convert_kwargs", {}), chip):
+                return c
+        return None
+
+    def efficiency_for(self, chip) -> dict | None:
+        """Re-fit ``EXEC_EFFICIENCY`` factors for ``chip``'s family, or
+        None when ``--tune`` has not persisted any."""
+        from . import perfmodel as PM
+
+        eff = self.efficiency.get(PM.chip_family(chip))
+        return dict(eff) if eff else None
+
+
+#: ``open_db`` cache: {(resolved path, mtime_ns): TuneDB} — reloads only
+#: when the file changes, so ``SpMVPlan.compile(tuning="tunedb.json")`` in
+#: a loop parses the JSON once.
+_OPEN_CACHE: dict[tuple, TuneDB] = {}
+
+
+def open_db(tuning) -> TuneDB | None:
+    """Coerce a ``tuning=`` argument (TuneDB | path | None) to a TuneDB."""
+    if tuning is None or isinstance(tuning, TuneDB):
+        return tuning
+    p = Path(tuning)
+    try:
+        mtime = p.stat().st_mtime_ns
+    except OSError:
+        mtime = None
+    key = (str(p.resolve()), mtime)
+    if key not in _OPEN_CACHE:
+        _OPEN_CACHE[key] = TuneDB.load(p)
+    return _OPEN_CACHE[key]
+
+
+def drift_table(db: TuneDB) -> list[dict]:
+    """Model-vs-measured drift rows, one per recorded candidate.
+
+    ``ratio`` = predicted / measured seconds (1.0 = the calibrated model
+    nailed it; < 1 = the kernel is slower than modelled).  This is the
+    table the CI tuning job publishes instead of hand-tuned constants.
+    """
+    rows = []
+    for entry in db.entries.values():
+        for c in entry.get("candidates", ()):
+            t, p = c.get("t_measured_s"), c.get("t_model_s")
+            rows.append({
+                "matrix": entry.get("matrix") or entry["signature"],
+                "chip_family": entry["chip_family"],
+                "value_dtype": entry["value_dtype"],
+                "format": c["format"],
+                "backend": c["backend"],
+                "t_measured_s": t,
+                "t_model_s": p,
+                "ratio_model_vs_measured": (p / t) if (p and t) else None,
+                "is_best": (c["format"] == entry["best"]["format"]
+                            and c["backend"] == entry["best"]["backend"]),
+            })
+    return rows

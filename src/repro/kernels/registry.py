@@ -89,7 +89,9 @@ class KernelContext:
 
     ``am`` is a ``perfmodel.AccessModel`` (left untyped to keep this module
     import-light); ``chunk_block``/``width_block``/``tile`` are optional
-    user overrides of the autotune hooks' choices.
+    user overrides of the autotune hooks' choices.  ``tuning`` is an
+    optional ``core.tunedb.TuneDB``: when set, ``select_backend`` consults
+    its measured winners before falling back to the cost-hook ranking.
     """
 
     chip: ChipSpec = TPU_V5E
@@ -97,6 +99,7 @@ class KernelContext:
     chunk_block: int | None = None
     width_block: int | None = None
     tile: int | None = None
+    tuning: object = None             # None -> cold (model-only) selection
 
     def access_model(self):
         if self.am is not None:
@@ -371,6 +374,11 @@ def select_backend(matrix, format: str, op: str,
     """``backend="auto"``: probe every eligible entry, rank survivors by the
     cost hook (``perfmodel.predict_exec`` seconds), memoize on the container.
 
+    With ``ctx.tuning`` set (a ``core.tunedb.TuneDB``), a fresh measured
+    winner recorded for this matrix under ``format`` decides first (the
+    warm path); the cost-hook ranking remains the cold fallback and is
+    bitwise-identical to the tuning-free behavior.
+
     Returns ``(backend, {backend: predicted_seconds})``.  Raises
     :class:`BackendUnavailable` if nothing survives the probes.
     """
@@ -379,9 +387,12 @@ def select_backend(matrix, format: str, op: str,
     # tiling overrides and the full access model are part of the key: probes
     # depend on the former (a VMEM re-claim for an overridden block can flip
     # a survivor) and costs on the latter, so a choice memoized for one ctx
-    # must not answer another (AccessModel is a frozen dataclass: hashable)
+    # must not answer another (AccessModel is a frozen dataclass: hashable).
+    # The tuning DB's identity token is part of the key too: a choice
+    # warmed by one DB must not answer for another (or for no DB).
     memo_key = (format, op, ctx.chip.name, am,
                 ctx.chunk_block, ctx.width_block, ctx.tile,
+                getattr(ctx.tuning, "token", None),
                 tuple(sorted(allowed)) if allowed is not None else None)
     memo = getattr(matrix, "_backend_choices", None)
     if memo is None:
@@ -392,6 +403,15 @@ def select_backend(matrix, format: str, op: str,
             memo = None
     if memo is not None and memo_key in memo:
         return memo[memo_key]
+    if ctx.tuning is not None:
+        tuned = ctx.tuning.lookup_backend(matrix, format, op, chip=ctx.chip)
+        if tuned is not None and (allowed is None or tuned["backend"] in allowed):
+            # report the *measured* seconds in the cost slot: the warm
+            # choice is a measurement, not a prediction
+            choice = (tuned["backend"], {tuned["backend"]: tuned["t_measured_s"]})
+            if memo is not None:
+                memo[memo_key] = choice
+            return choice
     costs = {}
     for e in entries(format, op):
         if not e.auto:

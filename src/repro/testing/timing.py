@@ -1,0 +1,93 @@
+"""Injectable timing for the measured-autotuning tier.
+
+Every code path that *measures* a kernel (``benchmarks/backend_sweep.py``'s
+sweep and ``--tune`` pass, and through them ``core.tunedb``) takes its
+clock from a ``Timer`` so the selection / re-fit / staleness logic is
+testable without wall-clock noise:
+
+* :class:`WallTimer` — the real thing: warm up (compile), then
+  best-of-``repeats`` steady-state seconds per call with
+  ``jax.block_until_ready`` fencing.  This is the exact discipline the
+  benchmark modules have always used, factored into one place.
+* :class:`FakeTimer` — deterministic scripted latencies keyed by the
+  candidate label (``"<matrix>/<format>/<backend>"``); never executes the
+  measured callable, records every key it was asked about, and supports
+  call-count asserts — CI tests drive the whole tuning-DB lifecycle
+  through it in milliseconds.
+
+The protocol is one method::
+
+    timer.measure(fn, args, key="powerlaw/jds/xla", iters=10) -> seconds
+
+``key`` is documentation for the real timer and the lookup handle for the
+fake one.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+
+@dataclass
+class WallTimer:
+    """Best-of-``repeats`` steady-state wall-clock seconds per call.
+
+    The first call is a warmup (jit compilation, host-cache builds) and is
+    excluded; each repeat times ``iters`` back-to-back calls and the
+    minimum per-call time is returned — the standard defense against
+    scheduler jitter on shared CPU runners.
+    """
+
+    repeats: int = 3
+
+    def measure(self, fn, args=(), *, key: str | None = None,
+                iters: int = 10) -> float:
+        import jax
+
+        del key  # provenance only; the wall clock times whatever it is given
+        jax.block_until_ready(fn(*args))
+        best = float("inf")
+        for _ in range(self.repeats):
+            t0 = time.perf_counter()
+            out = None
+            for _ in range(iters):
+                out = fn(*args)
+            jax.block_until_ready(out)
+            best = min(best, (time.perf_counter() - t0) / iters)
+        return best
+
+
+@dataclass
+class FakeTimer:
+    """Scripted latencies for deterministic tuning tests.
+
+    Args:
+        latencies: {candidate key: seconds} — what ``measure`` returns for
+            that key.  Keys follow ``"<matrix>/<format>/<backend>"``.
+        default_s: returned for keys not in ``latencies`` (a test that
+            wants unlisted candidates to lose just leaves them at the
+            large default).
+
+    ``measure`` never calls ``fn`` (candidates are built but not
+    executed), appends the key to ``calls``, and returns the scripted
+    value — so tests can assert both the selection outcome and exactly
+    which candidates were timed, with zero wall-clock noise.
+    """
+
+    latencies: dict = field(default_factory=dict)
+    default_s: float = 1.0
+    calls: list = field(default_factory=list)
+
+    def measure(self, fn, args=(), *, key: str | None = None,
+                iters: int = 10) -> float:
+        del fn, args, iters
+        self.calls.append(key)
+        return float(self.latencies.get(key, self.default_s))
+
+    def count(self, key: str) -> int:
+        """How many times ``measure`` was asked about ``key``."""
+        return self.calls.count(key)
+
+    @property
+    def n_calls(self) -> int:
+        return len(self.calls)

@@ -59,6 +59,9 @@ HIGHER_BETTER_KEYS = frozenset({
     "speedup_at_width8",
     "kernel_speedup_at_width8",
     "speedup_vs_f32",
+    # measured-autotuning tier: how much the warm (DB) pick beats the
+    # cold model pick; >= 1.0 by construction when the DB is fresh
+    "tuned_speedup_vs_model",
 })
 
 
