@@ -36,6 +36,7 @@ import numpy as np
 from repro.core import corpus
 from repro.core import formats as F
 from repro.core.eigensolver import lanczos
+from repro.core.planconfig import PlanConfig
 from repro.core.matrices import random_banded
 
 from .common import row
@@ -145,11 +146,13 @@ def holstein_eig_errors(*, steps: int = 48) -> dict:
     Holstein surrogate — the accuracy side of the error-vs-speed frontier,
     and the quantity CI bounds."""
     m = corpus.build("holstein_surrogate")
-    e_ref = lanczos(m, m.shape[0], m=steps, format="sell").eigenvalues[0]
+    e_ref = lanczos(m, m.shape[0], m=steps,
+                    config=PlanConfig(format="sell")).eigenvalues[0]
     out = {"e_ref": float(e_ref), "steps": steps}
     for vd in DTYPES:
-        e = lanczos(m, m.shape[0], m=steps, format="sell",
-                    value_dtype=vd).eigenvalues[0]
+        e = lanczos(m, m.shape[0], m=steps,
+                    config=PlanConfig(format="sell",
+                                      value_dtype=vd)).eigenvalues[0]
         out[vd] = {"eig": float(e),
                    "eig_err": float(abs(e - e_ref) / abs(e_ref))}
     return out

@@ -37,6 +37,7 @@ from repro.core import perfmodel as PM
 from repro.core.distributed import nnz_balanced_partition
 from repro.core.distributed_plan import plan_shard_formats, select_slab_format
 from repro.core.plan import SpMVPlan
+from repro.core.planconfig import PlanConfig
 
 from .common import host_chip, row
 
@@ -55,10 +56,15 @@ def _time_iters(fn, x, iters: int, repeats: int = 3) -> float:
     return best
 
 
-def _convert_kwargs(spec: corpus.MatrixSpec, fmt: str) -> dict:
+def _convert_kwargs(spec: corpus.MatrixSpec, fmt: str,
+                    best_sigma: int | None = None) -> dict:
     kw = {}
     if fmt in ("sell", "hybrid"):
         kw = spec.sell_kwargs()
+        if kw.get("sigma") is None:
+            # sigma=None specs autotune: pack under the pad-ratio-best
+            # window (the same pick select_format's sell ranking uses)
+            kw["sigma"] = best_sigma
     elif fmt == "bsr":
         kw = {"block_shape": (8, 128)}
     kw.update(spec.convert_kwargs.get(fmt, {}))   # per-spec overrides win
@@ -80,9 +86,10 @@ def sweep_matrix(spec: corpus.MatrixSpec, *, iters: int = 20, chip=None,
     formats = {}
     converted = {}
     for fmt in spec.formats:
-        obj = m if fmt == "csr" else F.convert(m, fmt, **_convert_kwargs(spec, fmt))
+        kw = _convert_kwargs(spec, fmt, best_sigma=stats["sell_best_sigma"])
+        obj = m if fmt == "csr" else F.convert(m, fmt, **kw)
         converted[fmt] = obj
-        plan = SpMVPlan.compile(obj, chip=chip)
+        plan = SpMVPlan.compile(obj, PlanConfig(chip=chip))
         t = _time_iters(plan.apply, x, iters)
         pred_t = PM.predict_exec(fmt, plan.report.balance_bytes_per_flop,
                                  m.nnz, chip=chip).time_s
@@ -117,6 +124,7 @@ def sweep_matrix(spec: corpus.MatrixSpec, *, iters: int = 20, chip=None,
         "stats": {k: stats[k] for k in
                   ("nnz_per_row_mean", "nnz_per_row_max", "bandwidth",
                    "n_populated_diags", "ell_occupancy", "sell_occupancy",
+                   "sell_occupancy_vs_sigma", "sell_best_sigma",
                    "nnz_per_row_hist")},
         "formats": formats,
         "chosen": chosen,

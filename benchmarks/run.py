@@ -42,7 +42,7 @@ MODULES = [
 ]
 
 #: current perf-trajectory tag; --json with no PATH writes BENCH_<tag>.json
-DEFAULT_BENCH_TAG = "PR8"
+DEFAULT_BENCH_TAG = "PR9"
 
 
 def main(argv=None) -> int:

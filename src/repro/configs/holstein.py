@@ -10,6 +10,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 
 from ..core.matrices import HolsteinHubbardParams
+from ..core.planconfig import default_sell_sigma
 
 
 @dataclass(frozen=True)
@@ -27,7 +28,9 @@ class HolsteinConfig:
     # formats under test (paper Fig. 6/7)
     formats: tuple = ("csr", "ell", "jds", "sell", "hybrid")
     sell_C: int = 8
-    sell_sigma: int = 1024
+    # one source of truth for the sorting window: the PlanConfig default
+    # (formats.DEFAULT_SELL_SIGMA), not a per-config constant
+    sell_sigma: int = field(default_factory=default_sell_sigma)
     # eigensolver
     lanczos_steps: int = 96
     # distributed SpMV

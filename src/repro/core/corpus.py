@@ -46,7 +46,12 @@ from .matrices import (
     random_banded,
     random_sparse,
 )
-from .perfmodel import ell_pad_ratio, sell_pad_ratio
+from .perfmodel import (
+    ell_pad_ratio,
+    select_sell_sigma,
+    sell_pad_ratio,
+    sell_sigma_candidates,
+)
 
 #: candidate formats every matrix is swept under unless the spec narrows it
 BASE_FORMATS = ("csr", "ell", "jds", "sell", "hybrid")
@@ -64,7 +69,9 @@ class MatrixSpec:
         formats: candidate formats the sweep times this matrix under
             (every name must be a ``formats.convert`` key).
         sell_C / sell_sigma: SELL chunk geometry used for this matrix's
-            conversions and chunk-occupancy statistic.
+            conversions and chunk-occupancy statistic.  ``sell_sigma=None``
+            (the default) lets ``perfmodel.select_sell_sigma`` autotune the
+            sorting window from the row-length profile; an int pins it.
         convert_kwargs: per-format ``formats.convert`` overrides, e.g.
             ``{"bsr": {"block_shape": (4, 64)}}`` — merged over the sweep's
             defaults (the SELL geometry above, (8,128) BSR blocks).
@@ -76,7 +83,7 @@ class MatrixSpec:
     build: Callable[[], CSR]
     formats: tuple = BASE_FORMATS
     sell_C: int = 8
-    sell_sigma: int = DEFAULT_SELL_SIGMA
+    sell_sigma: int | None = None
     convert_kwargs: dict = field(default_factory=dict)
 
     def sell_kwargs(self) -> dict:
@@ -149,7 +156,10 @@ def corpus_stats(m: CSR, C: int = 8,
     Adds the nnz/row histogram, the populated-diagonal count, and the
     occupancy (useful fraction of streamed elements) of the ELL and
     SELL-C-sigma packings — the quantities ``perfmodel.select_format``'s
-    ranking actually turns on.
+    ranking actually turns on.  ``sell_occupancy_vs_sigma`` sweeps the
+    occupancy over the autotuner's candidate windows
+    (``perfmodel.sell_sigma_candidates``) and ``sell_best_sigma`` names the
+    winner — the curve behind the sigma autotune dimension.
     """
     s = dict(matrix_stats(m))
     lens = m.row_lengths()
@@ -165,6 +175,11 @@ def corpus_stats(m: CSR, C: int = 8,
     s["sell_occupancy"] = 1.0 / max(1e-9, sell_pad_ratio(lens, C, sig))
     s["sell_C"] = C
     s["sell_sigma"] = sig
+    s["sell_occupancy_vs_sigma"] = {
+        int(cand): 1.0 / max(1e-9, sell_pad_ratio(lens, C, cand))
+        for cand in sell_sigma_candidates(m.shape[0], C)}
+    best_sig, _ = select_sell_sigma(lens, C)
+    s["sell_best_sigma"] = int(best_sig)
     src = getattr(m, "_source", None)
     if src is not None:
         s["source"] = src

@@ -50,7 +50,7 @@ except ImportError:  # pragma: no cover
 from ..utils.hw import ChipSpec, TPU_V5E
 from . import perfmodel as PM
 from .distributed import make_mesh_1d, nnz_balanced_partition, row_balanced_partition
-from .formats import CSR
+from .formats import CSR, pack_chunks_flat, sigma_sort_order
 from .plan import PlanReport
 
 SLAB_FORMATS = ("ell", "sell")
@@ -272,36 +272,20 @@ def pack_shard_slabs(
         return ShardSlabs("ell", col, val, None, row_map, bounds, cs,
                           rows_pp, m.n_rows, m.shape[1], m.nnz)
 
-    # flat SELL-C pack: sigma-sort the partition's rows by block length,
-    # chunk by C, pad each chunk to its own width, store chunk-column-major
+    # flat SELL-C pack: sigma-sort the partition's rows by block length
+    # (whole-partition window -> full JDS sort per shard), chunk by C, pad
+    # each chunk to its own width, store chunk-column-major.  One shared
+    # permutation-aware packer with the local SELL container (formats.py).
     flats: list[list[tuple[np.ndarray, np.ndarray, np.ndarray]]] = []
     L = 1
     for p in range(parts):
         prow = []
         for q in range(Q):
             rows = blocks[p][q]
-            k = np.array([len(c) for c, _ in rows], dtype=np.int64)
-            order = np.argsort(-k, kind="stable")
-            fc, fv, fr = [], [], []
-            for c0_ in range(0, len(rows), C):
-                chunk = order[c0_:c0_ + C]
-                w = int(k[chunk].max()) if len(chunk) else 0
-                if w == 0:
-                    continue
-                ccol = np.zeros((w, C), dtype=np.int32)
-                cval = np.zeros((w, C), dtype=v.dtype)
-                crid = np.full((w, C), rows_pp, dtype=np.int32)
-                for j, i in enumerate(chunk):
-                    c, vv = rows[i]
-                    ccol[: len(c), j] = c
-                    cval[: len(c), j] = vv
-                    crid[: len(c), j] = i
-                fc.append(ccol.ravel())
-                fv.append(cval.ravel())
-                fr.append(crid.ravel())
-            cat = (np.concatenate(fc) if fc else np.zeros(0, np.int32),
-                   np.concatenate(fv) if fv else np.zeros(0, v.dtype),
-                   np.concatenate(fr) if fr else np.zeros(0, np.int32))
+            lens = [len(c) for c, _ in rows]
+            order = sigma_sort_order(lens, sigma=max(1, len(rows)))
+            cat = pack_chunks_flat(rows, C, order, rid_fill=rows_pp,
+                                   val_dtype=v.dtype)
             L = max(L, len(cat[0]))
             prow.append(cat)
         flats.append(prow)
@@ -438,14 +422,34 @@ def _make_executor(blocks: ShardSlabs, mesh: Mesh, axis: str, variant: str,
         out_specs=(spec_map if not multi else P(axis, None, None), spec_map),
     )
 
-    def run(x: jnp.ndarray) -> jnp.ndarray:
-        pad = parts * cs - x.shape[0]
-        xp = jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1))
-        yparts, rm = f(col, val, rid, rmap, xp)
-        tail = yparts.shape[2:]
-        out = jnp.zeros((n + 1,) + tail, dtype=yparts.dtype)
-        out = out.at[rm.reshape(-1)].add(yparts.reshape((-1,) + tail))
-        return out[:n]
+    # each global row is produced by exactly one (shard, local-row) slot
+    # (rows are partitioned; pad slots map to n), so undoing the shard
+    # layout is an inverse-map *gather* — not the scatter-add it used to
+    # be, which XLA:CPU lowers serially.  Guarded: any row mapped to zero
+    # or multiple slots falls back to the accumulating scatter.
+    rmap_h = np.asarray(rmap).reshape(-1)
+    pos = np.nonzero(rmap_h < n)[0]
+    counts = np.bincount(rmap_h[pos], minlength=n) if n else np.zeros(0, int)
+    if n == 0 or (counts == 1).all():
+        inv = np.empty(n, dtype=np.int32)
+        inv[rmap_h[pos]] = pos
+        inv = jnp.asarray(inv)
+
+        def run(x: jnp.ndarray) -> jnp.ndarray:
+            pad = parts * cs - x.shape[0]
+            xp = jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1))
+            yparts, _ = f(col, val, rid, rmap, xp)
+            tail = yparts.shape[2:]
+            return yparts.reshape((-1,) + tail)[inv]
+    else:  # pragma: no cover - no current pack duplicates a row slot
+        def run(x: jnp.ndarray) -> jnp.ndarray:
+            pad = parts * cs - x.shape[0]
+            xp = jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1))
+            yparts, rm = f(col, val, rid, rmap, xp)
+            tail = yparts.shape[2:]
+            out = jnp.zeros((n + 1,) + tail, dtype=yparts.dtype)
+            out = out.at[rm.reshape(-1)].add(yparts.reshape((-1,) + tail))
+            return out[:n]
 
     return jax.jit(run)
 
@@ -654,9 +658,8 @@ def compile_distributed_spmv_plan(
     slab_format: str = "auto",
     axis: str = "data",
     C: int = 8,
-    chip: ChipSpec = TPU_V5E,
-    am: PM.AccessModel | None = None,
-    backend: str = "auto",
+    config=None,
+    **plan_kw,
 ) -> DistributedSpMVPlan:
     """Partition ``m`` over the mesh and return a memoized distributed plan.
 
@@ -664,11 +667,19 @@ def compile_distributed_spmv_plan(
     view).  ``slab_format="auto"`` lets the roofline choose between the
     stacked packings per shard (``plan_shard_formats``) and commits to the
     one that minimizes the straggler's predicted time; pass
-    ``"ell"``/``"sell"`` to force.  ``backend`` selects the registry entry
-    for the inner slab multiplies (see ``_resolve_slab_backend``).
-    Compiling twice with the same key returns the same object — each shard
-    is packed exactly once per key (``pack_stats`` counts).
+    ``"ell"``/``"sell"`` to force.  ``config`` (a ``core.planconfig.
+    PlanConfig``) carries ``chip`` / ``am`` / ``backend`` — the backend
+    selects the registry entry for the inner slab multiplies (see
+    ``_resolve_slab_backend``); bare ``chip=`` / ``am=`` / ``backend=``
+    kwargs remain as deprecated aliases.  The slab packer sigma-sorts each
+    partition in full (the per-shard JDS sort), so ``config.sigma`` does
+    not apply here.  Compiling twice with the same key returns the same
+    object — each shard is packed exactly once per key (``pack_stats``
+    counts).
     """
+    from .planconfig import coerce_config
+    cfg = coerce_config(config, plan_kw, api="compile_distributed_spmv_plan")
+    chip, am, backend = cfg.chip, cfg.am, cfg.backend
     if variant not in VARIANTS:
         raise ValueError(f"unknown variant {variant!r}; expected one of {VARIANTS}")
     be = _resolve_slab_backend(backend)

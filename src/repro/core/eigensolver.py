@@ -47,9 +47,8 @@ class LanczosBreakdown(RuntimeError):
         self.beta = beta
 
 
-def as_apply(op, *, mesh=None, variant: str = "overlap",
-             format: str | None = None, value_dtype: str | None = None,
-             backend: str = "auto") -> Apply:
+def as_apply(op, *, mesh=None, variant: str = "overlap", config=None,
+             **plan_kw) -> Apply:
     """Normalize the injected operator: a callable (closure, jitted fn,
     ``SpMVPlan``, or ``DistributedSpMVPlan``) passes through; a bare format
     container is compiled into a plan once, so every Lanczos iteration
@@ -60,18 +59,21 @@ def as_apply(op, *, mesh=None, variant: str = "overlap",
     then sharded across the mesh with no other change.  Callables
     (including already-compiled plans) still pass through unchanged.
 
-    ``format`` is forwarded to ``SpMVPlan.compile`` for bare containers:
-    ``format="auto"`` lets ``perfmodel.select_format`` choose the storage
-    scheme from the Hamiltonian's own structure before planning.
+    ``config`` is a ``core.planconfig.PlanConfig`` forwarded to the
+    compile: ``PlanConfig(format="auto")`` lets ``perfmodel.select_format``
+    choose the storage scheme from the Hamiltonian's own structure;
     ``value_dtype`` compresses the stored matrix values before planning
     (Lanczos tolerates surprisingly low precision in the matrix apply —
-    the recurrence coefficients are still accumulated in f64).
-    ``backend`` (default ``"auto"``: capability probes + the roofline
-    ranking through ``kernels.registry``) is forwarded to both the local
-    and the distributed compile.
+    the recurrence coefficients are still accumulated in f64); ``backend``
+    (default ``"auto"``) applies to both the local and the distributed
+    compile.  Bare ``format=`` / ``value_dtype=`` / ``backend=`` kwargs are
+    deprecated aliases (one ``DeprecationWarning``, folded into a config).
     """
+    from .planconfig import coerce_config
+
+    cfg = coerce_config(config, plan_kw, api="eigensolver.as_apply")
     if mesh is not None and not callable(op):
-        if format is not None or value_dtype is not None:
+        if cfg.format is not None or cfg.value_dtype is not None:
             raise ValueError(
                 "format=/value_dtype= apply to local plans only; distributed compiles "
                 "pick their slab packing per partition (see "
@@ -79,13 +81,12 @@ def as_apply(op, *, mesh=None, variant: str = "overlap",
         from .distributed_plan import compile_distributed_spmv_plan
 
         return compile_distributed_spmv_plan(op, mesh, variant=variant,
-                                             backend=backend)
+                                             config=cfg)
     if callable(op):
         return op
     from .plan import SpMVPlan
 
-    return SpMVPlan.compile(op, format=format, value_dtype=value_dtype,
-                            backend=backend)
+    return SpMVPlan.compile(op, cfg)
 
 
 @dataclass
@@ -107,11 +108,10 @@ def lanczos(
     seed: int = 0,
     dtype=jnp.float64,
     mesh=None,
-    format: str | None = None,
-    value_dtype: str | None = None,
-    backend: str = "auto",
+    config=None,
     on_breakdown: str = "raise",
     max_restarts: int = 2,
+    **plan_kw,
 ) -> LanczosResult:
     """m-step Lanczos on the symmetric operator ``apply_A`` of dimension n.
 
@@ -123,9 +123,11 @@ def lanczos(
     ``DistributedSpMVPlan``, or a format container (compiled to a plan on
     entry, so every iteration reuses it); with ``mesh`` a CSR container is
     compiled into a distributed plan and the solve shards across devices.
-    ``format`` (e.g. ``"auto"``) picks the storage scheme for bare
-    containers before planning; ``backend`` picks the kernel-registry
-    entry (``"auto"`` probes + ranks).
+    ``config`` (a ``core.planconfig.PlanConfig``) carries every compile
+    option for bare containers — e.g. ``PlanConfig(format="auto")`` picks
+    the storage scheme, ``backend`` the kernel-registry entry.  Bare
+    ``format=`` / ``value_dtype=`` / ``backend=`` kwargs remain as
+    deprecated aliases.
 
     A non-finite recurrence coefficient (the operator returned NaN/Inf)
     raises :class:`LanczosBreakdown` at the offending iteration instead of
@@ -137,8 +139,9 @@ def lanczos(
     if on_breakdown not in ("raise", "restart"):
         raise ValueError(f"on_breakdown={on_breakdown!r}; "
                          "expected 'raise' or 'restart'")
-    apply_A = as_apply(apply_A, mesh=mesh, format=format,
-                       value_dtype=value_dtype, backend=backend)
+    from .planconfig import coerce_config
+    cfg = coerce_config(config, plan_kw, api="eigensolver.lanczos")
+    apply_A = as_apply(apply_A, mesh=mesh, config=cfg)
     attempts = 1 + (max_restarts if on_breakdown == "restart" else 0)
     n_spmv_prior = 0
     for attempt in range(attempts):

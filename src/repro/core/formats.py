@@ -75,6 +75,71 @@ def _as_np(a, dtype=None):
     return np.asarray(a, dtype=dtype)
 
 
+def sigma_sort_order(lens, sigma: int) -> np.ndarray:
+    """The SELL-C-sigma row permutation: a stable descending-length argsort
+    within consecutive windows of ``sigma`` rows.
+
+    This is the one sigma-sort in the repo -- ``SELL.from_csr`` (local
+    containers) and ``distributed_plan.pack_shard_slabs`` (per-partition
+    slab packs, which sort the whole partition: ``sigma = len(lens)``) both
+    route through it.  ``sigma = 1`` is the identity permutation;
+    ``sigma >= len(lens)`` reproduces the full JDS sort.
+    """
+    lens = np.asarray(lens, dtype=np.int64)
+    n = int(lens.shape[0])
+    sigma = max(1, int(sigma))
+    order = np.arange(n, dtype=np.int32)
+    if sigma == 1:
+        return order
+    for s in range(0, n, sigma):
+        e = min(s + sigma, n)
+        order[s:e] = np.argsort(-lens[s:e], kind="stable").astype(np.int32) + s
+    return order
+
+
+def pack_chunks_flat(rows, C: int, order=None, rid_fill: int | None = None,
+                     val_dtype=None):
+    """Flat SELL-C pack of ragged rows into chunk-column-major slabs.
+
+    ``rows`` is a list of ``(col_idx, val)`` pairs (one per row, ragged);
+    ``order`` a row permutation (default identity).  Rows are consumed in
+    permuted order, cut into chunks of ``C``, each chunk padded to its own
+    max length and stored column-major ``(w, C)``; all-empty chunks are
+    skipped entirely (they stream zero bytes).  Returns flat 1-D
+    ``(col, val, rid)`` arrays where ``rid`` carries each element's
+    *pre-permutation* row index and padding elements carry ``rid_fill``
+    (default ``len(rows)``) -- exactly what a segment-sum consumer drops.
+    """
+    n = len(rows)
+    if order is None:
+        order = np.arange(n, dtype=np.int32)
+    if rid_fill is None:
+        rid_fill = n
+    if val_dtype is None:
+        val_dtype = rows[0][1].dtype if n else np.float32
+    k = np.array([len(c) for c, _ in rows], dtype=np.int64)
+    fc, fv, fr = [], [], []
+    for c0 in range(0, n, C):
+        chunk = order[c0:c0 + C]
+        w = int(k[chunk].max()) if len(chunk) else 0
+        if w == 0:
+            continue
+        ccol = np.zeros((w, C), dtype=np.int32)
+        cval = np.zeros((w, C), dtype=val_dtype)
+        crid = np.full((w, C), rid_fill, dtype=np.int32)
+        for j, i in enumerate(chunk):
+            c, vv = rows[i]
+            ccol[: len(c), j] = c
+            cval[: len(c), j] = vv
+            crid[: len(c), j] = i
+        fc.append(ccol.ravel())
+        fv.append(cval.ravel())
+        fr.append(crid.ravel())
+    return (np.concatenate(fc) if fc else np.zeros(0, np.int32),
+            np.concatenate(fv) if fv else np.zeros(0, val_dtype),
+            np.concatenate(fr) if fr else np.zeros(0, np.int32))
+
+
 # ---------------------------------------------------------------------------
 # value dtypes: storage precision is orthogonal to the sparsity format
 # ---------------------------------------------------------------------------
@@ -516,12 +581,10 @@ class SELL:
         sigma = max(1, min(n, DEFAULT_SELL_SIGMA)) if sigma is None else max(1, sigma)
         lens = m.row_lengths()
         n_pad = -(-n // C) * C
-        # sigma-window sort (stable) by decreasing length
+        # sigma-window sort (stable) by decreasing length -- the shared
+        # permutation used by the local and distributed packers alike
         perm = np.arange(n_pad, dtype=np.int32)
-        for s in range(0, n, sigma):
-            e = min(s + sigma, n)
-            window = np.argsort(-lens[s:e], kind="stable") + s
-            perm[s:e] = window
+        perm[:n] = sigma_sort_order(lens, sigma)
         perm[n:] = n  # padding rows point one-past-end (handled by caller)
         plens = np.zeros(n_pad, dtype=np.int64)
         plens[:n] = lens[perm[:n]]

@@ -43,6 +43,7 @@ from ..kernels import registry as R
 from ..utils.hw import ChipSpec, TPU_V5E
 from . import perfmodel as PM
 from .formats import BSR, COO, CSR, DIA, ELL, JDS, SELL, HybridDIA
+from .planconfig import PlanConfig, coerce_config  # noqa: F401  (re-export)
 
 _FMT_NAMES = {
     COO: "coo", CSR: "csr", ELL: "ell", JDS: "jds", SELL: "sell",
@@ -123,86 +124,75 @@ class SpMVPlan:
     # -- compilation --------------------------------------------------------
 
     @staticmethod
-    def compile(
-        matrix,
-        *,
-        format: str | None = None,
-        value_dtype: str | None = None,
-        chip: ChipSpec = TPU_V5E,
-        am: PM.AccessModel | None = None,
-        backend: str = "auto",
-        chunk_block: int | None = None,
-        width_block: int | None = None,
-        validate: str = "off",
-        tuning=None,
-    ) -> "SpMVPlan":
+    def compile(matrix, config: PlanConfig | None = None,
+                **kwargs) -> "SpMVPlan":
         """Build (or fetch the memoized) plan for ``matrix``.
 
-        Args:
-            matrix: any ``core.formats`` container.
-            format: target storage format.  ``None`` plans the container
-                as-is; a concrete name ("sell", "dia", ...) converts a
-                CSR/COO container first; ``"auto"`` lets
-                ``perfmodel.select_format`` pick from the matrix's own
-                structure.  Conversions (and the auto choice) are cached
-                on the source container, so repeated compiles are free.
-            value_dtype: value-storage precision for the compiled
-                container ("f64" | "f32" | "bf16" | "f16" | "fp8_e4m3" |
-                "int8"); ``None`` keeps the stored values as-is.  Narrow
-                dtypes cut streamed value bytes (the paper's balance);
-                int8/fp8 quantize with per-group fp32 scales; every kernel
-                still accumulates in at least f32 (``kernels.accum``).
-            chip: roofline parameters (bandwidth, peak, VMEM budget).
-            am: access-model byte widths for the balance computation;
-                ``None`` (default) derives ``value_bytes`` from the
-                resolved container's actual stored dtype
-                (``perfmodel.access_model_for``).
-            backend: "auto" | "xla" | "pallas" ("ref" aliases "xla").
-            chunk_block / width_block: override the model's Pallas tiling
-                choice; leave None for ``perfmodel.select_pallas_blocks``.
-            validate: structural/numerical matrix validation before
-                compiling (``core.validate``): ``"strict"`` raises on
-                defects, ``"repair"`` fixes what it can (returning a
-                repaired container — the plan compiles against *it*),
-                ``"off"`` (default: callers own their containers)
-                compiles as-is.  Compiled executors gather with clamped
-                indices, so an out-of-bounds ``col_idx`` silently reads
-                the wrong x entry — validation is where that surfaces.
-            tuning: a ``core.tunedb.TuneDB`` instance or a path to one
-                (the on-disk measured-autotuning database written by
-                ``benchmarks/backend_sweep.py --tune``).  A fresh entry
-                for this matrix overrides both the ``format="auto"``
-                ranking and the ``backend="auto"`` ranking with measured
-                winners (the warm path); everything else — including a
-                missing, corrupt, or stale DB — behaves exactly as
-                ``tuning=None`` (the cold path).
+        ``config`` is a :class:`core.planconfig.PlanConfig` — the one
+        record of every compile option (format, value_dtype, chip, am,
+        backend, chunk_block, width_block, validate, tuning, and the
+        SELL-C-sigma ``sigma`` / ``permute`` pair); see its docstring and
+        the historical per-option semantics below.  Bare kwargs remain
+        accepted as deprecated aliases: they emit one
+        ``DeprecationWarning`` and are folded into an equivalent config
+        (passing both is an error).
+
+        Option semantics (unchanged from the kwarg era):
+
+        * ``format`` — ``None`` plans the container as-is; a concrete name
+          ("sell", "dia", ...) converts a CSR/COO container first (cached
+          on the source); ``"auto"`` lets ``perfmodel.select_format``
+          pick — now including an autotuned SELL sigma window.
+        * ``value_dtype`` — value-storage precision; narrow dtypes cut
+          streamed bytes, int8/fp8 quantize with per-group fp32 scales,
+          kernels accumulate in >= f32.
+        * ``chip`` / ``am`` — roofline parameters / access-model byte
+          widths (``am=None`` derives from the stored dtype).
+        * ``backend`` — "auto" | "xla" | "pallas" ("ref" aliases "xla");
+          "pallas" off-TPU resolves to the interpreter.
+        * ``chunk_block`` / ``width_block`` — Pallas tiling overrides.
+        * ``validate`` — "strict" | "repair" | "off"; ``None`` inherits
+          ("off" here, the server's policy under ``register``).
+        * ``tuning`` — a ``core.tunedb.TuneDB`` or path; measured winners
+          override the auto rankings (warm path).
+        * ``sigma`` / ``permute`` — the SELL sorting window: ``sigma=None``
+          keeps the default window (and autotunes under ``format="auto"``),
+          ``permute=False`` forces identity row order.  ``plan(x)`` always
+          returns rows in original order regardless (the kernels apply the
+          inverse scatter).
 
         Returns:
             The compiled (memoized) ``SpMVPlan``; ``plan.report`` records
             what was decided and what the roofline predicts for it.
         """
+        cfg = coerce_config(config, kwargs, api="SpMVPlan.compile")
+        chip, am, backend = cfg.chip, cfg.am, cfg.backend
+        validate = cfg.validate if cfg.validate is not None else "off"
+        tuning = cfg.tuning
         if validate != "off":
             from .validate import validate_matrix
             matrix = validate_matrix(matrix, policy=validate)
         if tuning is not None:
             from .tunedb import open_db
             tuning = open_db(tuning)
-        if format is not None:
-            matrix = resolve_format(matrix, format, chip=chip, am=am,
-                                    backend=backend, tuning=tuning)
-        if value_dtype is not None:
+        if cfg.format is not None:
+            matrix = resolve_format(matrix, cfg.format, chip=chip, am=am,
+                                    backend=backend, tuning=tuning,
+                                    sigma=1 if not cfg.permute else cfg.sigma,
+                                    convert_kwargs=cfg.sell_kwargs())
+        if cfg.value_dtype is not None:
             from . import formats as F
             matrix = _convert_cached(matrix, _FMT_NAMES.get(type(matrix)),
-                                     {}, value_dtype=value_dtype) \
+                                     {}, value_dtype=cfg.value_dtype) \
                 if type(matrix) in (F.CSR, F.COO) \
-                else F.with_value_dtype(matrix, value_dtype)
+                else F.with_value_dtype(matrix, cfg.value_dtype)
         fmt = _FMT_NAMES.get(type(matrix))
         if fmt is None:
             raise TypeError(f"no plan for {type(matrix).__name__}")
         _resolve_backend(backend)  # validate for every format, not just SELL
         if am is None:
             am = PM.access_model_for(matrix, chip)
-        key = (fmt, backend, chunk_block, width_block, chip.name,
+        key = (fmt, backend, cfg.chunk_block, cfg.width_block, chip.name,
                am.value_bytes, am.index_bytes,
                getattr(tuning, "token", None))
         cache = getattr(matrix, "_spmv_plans", None)
@@ -211,8 +201,8 @@ class SpMVPlan:
             object.__setattr__(matrix, "_spmv_plans", cache)
         plan = cache.get(key)
         if plan is None:
-            plan = _compile(matrix, fmt, chip, am, backend, chunk_block,
-                            width_block, tuning)
+            plan = _compile(matrix, fmt, chip, am, backend, cfg.chunk_block,
+                            cfg.width_block, tuning)
             cache[key] = plan
         return plan
 
@@ -224,7 +214,8 @@ class SpMVPlan:
 
 def resolve_format(matrix, format: str, *, chip: ChipSpec = TPU_V5E,
                    am: PM.AccessModel | None = None, backend: str = "auto",
-                   tuning=None, **select_kw):
+                   tuning=None, convert_kwargs: dict | None = None,
+                   **select_kw):
     """Return ``matrix`` converted to ``format`` (``"auto"`` = model's pick).
 
     A CSR/COO container is converted (and the converted container cached on
@@ -235,6 +226,10 @@ def resolve_format(matrix, format: str, *, chip: ChipSpec = TPU_V5E,
     concrete container the upstream choice stands.  ``tuning`` (a
     ``core.tunedb.TuneDB``) lets the measured warm path decide the
     ``"auto"`` pick; ``None`` keeps the model-only cold path.
+    ``convert_kwargs`` (e.g. an explicit SELL ``sigma``) applies to
+    explicit conversions of sigma-aware formats; the ``"auto"`` path takes
+    its kwargs — including the autotuned sigma — from the selector's
+    choice instead.
     """
     fmt = _FMT_NAMES.get(type(matrix))
     if fmt is None:
@@ -251,7 +246,8 @@ def resolve_format(matrix, format: str, *, chip: ChipSpec = TPU_V5E,
     if fmt not in ("csr", "coo"):
         raise ValueError(f"cannot convert a {fmt} container to {format!r}; "
                          "pass the CSR/COO source instead")
-    return _convert_cached(matrix, format, {})
+    kw = dict(convert_kwargs or {}) if format in ("sell", "hybrid") else {}
+    return _convert_cached(matrix, format, kw)
 
 
 def _as_csr_container(matrix):
@@ -375,9 +371,9 @@ def _compile(matrix, fmt, chip, am, backend, chunk_block, width_block,
 # ---------------------------------------------------------------------------
 
 
-def compile_plan(matrix, **kw) -> SpMVPlan:
+def compile_plan(matrix, config: PlanConfig | None = None, **kw) -> SpMVPlan:
     """Alias of ``SpMVPlan.compile`` for functional call sites."""
-    return SpMVPlan.compile(matrix, **kw)
+    return SpMVPlan.compile(matrix, config, **kw)
 
 
 def plan_all_formats(m: CSR, *, formats=("csr", "ell", "jds", "sell", "hybrid"),
@@ -389,8 +385,9 @@ def plan_all_formats(m: CSR, *, formats=("csr", "ell", "jds", "sell", "hybrid"),
     """
     from .formats import convert
 
+    cfg = PlanConfig(chip=chip, backend=backend)
     plans = {}
     for fmt in formats:
         obj = convert(m, fmt, **conv_kw.get(fmt, {}))
-        plans[fmt] = SpMVPlan.compile(obj, chip=chip, backend=backend)
+        plans[fmt] = SpMVPlan.compile(obj, cfg)
     return plans

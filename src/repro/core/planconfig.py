@@ -1,0 +1,143 @@
+"""PlanConfig: the one compile-time configuration record for SpMV plans.
+
+``SpMVPlan.compile`` had accreted nine keyword options (``format``,
+``value_dtype``, ``chip``, ``am``, ``backend``, ``chunk_block``,
+``width_block``, ``validate``, ``tuning``) that every consumer — the
+Lanczos eigensolver, the batching server, the distributed planner — had to
+re-declare and re-thread by hand.  Adding the SELL-C-sigma options
+(``sigma``, ``permute``) made the N+1st re-threading the moment to fix the
+surface once: every compile entry point now accepts a single
+``config=PlanConfig(...)``, and the old kwargs stay as thin deprecated
+aliases (one ``DeprecationWarning`` per call, folded into an equivalent
+config).
+
+The sigma story in one place
+----------------------------
+``sigma`` is the SELL-C-sigma sorting window (Kreutzer et al.,
+arXiv:1307.6209): rows are sorted by length within windows of ``sigma``
+rows before chunking, shrinking zero-fill on irregular matrices.
+
+* ``sigma=None`` (default) — the repo-wide default window
+  (``formats.DEFAULT_SELL_SIGMA``; ``default_sell_sigma()`` here), except
+  for ``format="auto"`` where the perfmodel autotunes sigma per matrix
+  (``perfmodel.select_sell_sigma``).
+* ``sigma=k`` — an explicit window; ``sigma=1`` is the identity
+  permutation, ``sigma=n_rows`` the full JDS sort.
+* ``permute=False`` — force the identity row ordering regardless of
+  ``sigma`` (equivalent to ``sigma=1``; the escape hatch for callers that
+  need pack order == row order, e.g. external-layout interop).
+
+``configs/holstein.py`` and ``core.corpus`` route their sigma defaults
+through this module, so there is exactly one source of truth.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from dataclasses import dataclass
+
+from ..utils.hw import ChipSpec, TPU_V5E
+from .formats import DEFAULT_SELL_SIGMA
+
+
+def default_sell_sigma() -> int:
+    """The repo-wide default SELL-C-sigma sorting window (one constant:
+    ``formats.DEFAULT_SELL_SIGMA``, re-exported for config consumers)."""
+    return DEFAULT_SELL_SIGMA
+
+
+#: compile options that were previously bare kwargs; anything else passed
+#: as a kwarg is an error, not a silent typo-swallow
+_FIELDS = ("format", "value_dtype", "chip", "am", "backend", "chunk_block",
+           "width_block", "validate", "tuning", "sigma", "permute")
+
+
+@dataclass(frozen=True)
+class PlanConfig:
+    """Everything a plan compile can be asked for, as one frozen record.
+
+    Field semantics are identical to the historical ``SpMVPlan.compile``
+    kwargs (see its docstring), plus:
+
+    * ``validate=None`` means *inherit* — "off" at the plan layer, the
+      server's own ``validate`` policy when compiled through
+      ``BatchingSpMVServer.register``.
+    * ``sigma`` / ``permute`` — the SELL-C-sigma sorting window and its
+      kill switch (module docstring above).
+    """
+
+    format: str | None = None
+    value_dtype: str | None = None
+    chip: ChipSpec = TPU_V5E
+    am: object | None = None          # perfmodel.AccessModel
+    backend: str = "auto"
+    chunk_block: int | None = None
+    width_block: int | None = None
+    validate: str | None = None       # None = inherit ("off" at plan layer)
+    tuning: object | None = None      # TuneDB instance or path
+    sigma: int | None = None          # None = default window / auto
+    permute: bool = True              # False = identity row order (sigma=1)
+
+    def replace(self, **kw) -> "PlanConfig":
+        """``dataclasses.replace`` as a method (ergonomics for callers)."""
+        return dataclasses.replace(self, **kw)
+
+    def effective_sigma(self, n_rows: int | None = None) -> int:
+        """The sigma the packers actually use: 1 when ``permute=False``,
+        the default window when ``sigma=None``, capped at ``n_rows``."""
+        if not self.permute:
+            return 1
+        sigma = default_sell_sigma() if self.sigma is None else max(1, int(self.sigma))
+        if n_rows is not None:
+            sigma = max(1, min(int(n_rows), sigma))
+        return sigma
+
+    def sigma_is_default(self) -> bool:
+        """True when sigma/permute carry no explicit request (the packers'
+        own defaults apply — conversion caches stay byte-identical)."""
+        return self.permute and self.sigma is None
+
+    def sell_kwargs(self) -> dict:
+        """Conversion kwargs expressing this config's sigma request.
+
+        Empty for the default config so that cached conversions (and their
+        bitwise outputs) are untouched by the PlanConfig migration.
+        """
+        if self.sigma_is_default():
+            return {}
+        return {"sigma": 1 if not self.permute else max(1, int(self.sigma))}
+
+
+def coerce_config(config: PlanConfig | None, kwargs: dict, *,
+                  api: str, stacklevel: int = 3) -> PlanConfig:
+    """Fold deprecated bare kwargs into a ``PlanConfig``.
+
+    The one deprecation shim shared by every compile entry point:
+
+    * ``config`` alone — returned as-is (the modern path).
+    * bare kwargs alone — one ``DeprecationWarning`` naming the call site's
+      API, then folded into a fresh config.
+    * both — ``ValueError``: silently letting one side win would make the
+      migration ambiguous at exactly the call sites it targets.
+    * an unknown kwarg — ``TypeError`` (same contract as a real signature).
+    """
+    unknown = set(kwargs) - set(_FIELDS)
+    if unknown:
+        raise TypeError(f"{api}: unknown option(s) {sorted(unknown)!r}; "
+                        f"PlanConfig fields are {_FIELDS}")
+    if config is not None:
+        if kwargs:
+            raise ValueError(
+                f"{api}: pass either config=PlanConfig(...) or bare kwargs, "
+                f"not both (got config and {sorted(kwargs)!r})")
+        if not isinstance(config, PlanConfig):
+            raise TypeError(f"{api}: config must be a PlanConfig, "
+                            f"got {type(config).__name__}")
+        return config
+    if kwargs:
+        warnings.warn(
+            f"{api}: bare compile kwargs ({', '.join(sorted(kwargs))}) are "
+            "deprecated; pass config=PlanConfig(...) instead",
+            DeprecationWarning, stacklevel=stacklevel)
+        return PlanConfig(**kwargs)
+    return PlanConfig()

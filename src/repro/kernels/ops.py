@@ -70,9 +70,11 @@ def make_sell_spmv(m: SELL, *, backend: str = "auto", chunk_block: int | None = 
     points.
     """
     from ..core.plan import SpMVPlan
+    from ..core.planconfig import PlanConfig
 
-    plan = SpMVPlan.compile(m, backend=backend,
-                            chunk_block=chunk_block, width_block=width_pad)
+    plan = SpMVPlan.compile(m, PlanConfig(backend=backend,
+                                          chunk_block=chunk_block,
+                                          width_block=width_pad))
     return plan.apply
 
 

@@ -9,14 +9,20 @@ grid-divisibility adjustment that used to live inline in ``core.plan`` —
 the plan layer and any other consumer now get one implementation.
 
 Stream-byte note (see ``perfmodel.balance_of(backend=...)``): the XLA
-formulation consumes the *globally padded* (nc, W_max, C) views — it
-streams ``nc * W_max * C`` elements per call — while the flat chunk-local
-layout (what the loop oracle walks, and what an ideal per-chunk-width TPU
-kernel streams) moves only ``sum_c w_c * C``.  The perfmodel accounts for
-the two regimes separately per backend.
+entry carries *two* formulations and picks per container
+(``perfmodel.sell_xla_uses_flat``).  The padded form consumes the globally
+padded (nc, W_max, C) views — ``nc * W_max * C`` elements per call,
+regular einsum-friendly shapes, but blind to sigma-sorting.  The flat form
+(``sell_spmv_flat``) streams the chunk-local layout directly —
+``sum_c w_c * C`` elements plus one row id each, a gather + segment-sum
+exactly like the distributed slab kernel — so sigma-sorted packs of
+irregular matrices actually move fewer bytes under XLA too.  The Pallas
+kernels and the loop oracle stream flat without the row-id side stream.
+The perfmodel accounts for all three regimes per backend.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -35,6 +41,7 @@ from .registry import (
 )
 
 register_stat("sell_padded_views")
+register_stat("sell_flat_rids")
 
 
 def sell_padded_views(m: SELL, pad_width_to: int = 1):
@@ -45,23 +52,81 @@ def sell_padded_views(m: SELL, pad_width_to: int = 1):
                   lambda: m.padded_views(pad_width_to=pad_width_to))
 
 
-def sell_spmv_padded(col3: jnp.ndarray, val3: jnp.ndarray, perm: jnp.ndarray,
+def sell_flat_rids(m: SELL):
+    """Per-element chunk-row segment ids of the flat chunk-column-major
+    layout, built once and cached on the container.
+
+    Element ``p`` of chunk ``c`` (a column-major ``(w, C)`` slab) belongs
+    to in-chunk row ``p % C``, so its segment is ``c*C + p % C`` — the
+    index the flat segment-sum formulation reduces on.
+    """
+
+    def build():
+        cp = np.asarray(m.chunk_ptr)
+        cw = np.asarray(m.chunk_width)
+        C = m.C
+        rid = np.empty(int(cp[-1]), dtype=np.int32)
+        lane = np.arange(C, dtype=np.int32)
+        for c in range(m.n_chunks):
+            w = int(cw[c])
+            rid[cp[c]:cp[c + 1]] = c * C + np.tile(lane, w)
+        return rid
+
+    return cached(m, "_flat_rids", "sell_flat_rids", build)
+
+
+def sell_perm_is_natural(m: SELL) -> bool:
+    """True when the pack's row permutation is the identity (pad rows
+    excluded) — every regular matrix sigma-sorts to this, and sigma=1
+    always does.  The kernels then skip the perm-scatter entirely
+    (XLA:CPU scatter-add is serial and an order of magnitude slower than
+    the reshape+slice it replaces)."""
+    memo = getattr(m, "_perm_natural", None)
+    if memo is None:
+        p = np.asarray(m.perm)
+        n = m.shape[0]
+        memo = bool((p[:n] == np.arange(n, dtype=p.dtype)).all())
+        object.__setattr__(m, "_perm_natural", memo)
+    return memo
+
+
+def _perm_arg(m: SELL):
+    """Device inverse-permutation operand for the kernels, or None for the
+    natural order.  ``inv[orig_row] = tile position of orig_row``: the
+    sigma-sort perm is a bijection on real rows, so undoing it is a single
+    n-element *gather* — never the scatter-add an ``.at[perm].add`` would
+    lower to (serial on XLA:CPU)."""
+    if sell_perm_is_natural(m):
+        return None
+    inv = getattr(m, "_perm_inv", None)
+    if inv is None:
+        p = np.asarray(m.perm)
+        n = m.shape[0]
+        inv = np.empty(n, dtype=np.int32)
+        pos = np.nonzero(p < n)[0]
+        inv[p[pos]] = pos
+        object.__setattr__(m, "_perm_inv", inv)
+    return jnp.asarray(inv)
+
+
+def sell_spmv_padded(col3: jnp.ndarray, val3: jnp.ndarray, perm,
                      x: jnp.ndarray, n_rows: int, scale=None) -> jnp.ndarray:
     """Vectorised SELL on the fully padded (n_chunks, W, C) views.
 
     This is the shape the Pallas kernel consumes; also a fast XLA fallback.
     Reduces in ``acc_dtype`` (>= f32); ``scale`` is the optional per-chunk
     fp32 scale of a quantized container, applied to the reduced (nc, C)
-    tiles before the perm-scatter.
+    tiles before the un-permute.  ``perm`` is the *inverse* row
+    permutation (``_perm_arg``) applied as a gather; ``None`` means the
+    natural row order (reshape + slice, no indexing at all).
     """
     acc = acc_dtype(val3.dtype, x.dtype)
     gathered = jnp.take(x, col3, axis=0)  # (nc, W, C)
     tiles = jnp.sum(val3.astype(acc) * gathered.astype(acc), axis=1)  # (nc, C)
     if scale is not None:
         tiles = tiles * scale.astype(acc)[:, None]
-    y = jnp.zeros(n_rows + 1, dtype=tiles.dtype)
-    y = y.at[perm.reshape(-1)].add(tiles.reshape(-1))
-    return y[:n_rows]
+    flat = tiles.reshape(-1)
+    return flat[:n_rows] if perm is None else flat[perm]
 
 
 def sell_spmv(m: SELL, x: jnp.ndarray) -> jnp.ndarray:
@@ -70,29 +135,68 @@ def sell_spmv(m: SELL, x: jnp.ndarray) -> jnp.ndarray:
     col3, val3, _ = sell_padded_views(m)
     scale = None if m.scale is None else jnp.asarray(m.scale)
     return sell_spmv_padded(jnp.asarray(col3), jnp.asarray(val3),
-                            jnp.asarray(m.perm), x, m.shape[0], scale)
+                            _perm_arg(m), x, m.shape[0], scale)
 
 
-def sell_spmm_padded(col3: jnp.ndarray, val3: jnp.ndarray, perm: jnp.ndarray,
+def sell_spmm_padded(col3: jnp.ndarray, val3: jnp.ndarray, perm,
                      X: jnp.ndarray, n_rows: int, scale=None) -> jnp.ndarray:
     """Multi-vector SELL on the padded (nc, W, C) views (any padding works:
-    extra zero columns contribute nothing)."""
+    extra zero columns contribute nothing).  ``perm`` = inverse-perm
+    gather indices, ``None`` = natural row order."""
     acc = acc_dtype(val3.dtype, X.dtype)
     gathered = jnp.take(X, col3, axis=0)  # (nc, W, C, K)
     tiles = jnp.einsum("nwc,nwck->nck", val3.astype(acc),
                        gathered.astype(acc))  # (nc, C, K)
     if scale is not None:
         tiles = tiles * scale.astype(acc)[:, None, None]
-    Y = jnp.zeros((n_rows + 1, X.shape[1]), dtype=tiles.dtype)
-    Y = Y.at[perm.reshape(-1)].add(tiles.reshape(-1, X.shape[1]))
-    return Y[:n_rows]
+    flat = tiles.reshape(-1, X.shape[1])
+    return flat[:n_rows] if perm is None else flat[perm]
 
 
 def sell_spmm(m: SELL, X: jnp.ndarray) -> jnp.ndarray:
     col3, val3, _ = sell_padded_views(m)
     scale = None if m.scale is None else jnp.asarray(m.scale)
     return sell_spmm_padded(jnp.asarray(col3), jnp.asarray(val3),
-                            jnp.asarray(m.perm), X, m.shape[0], scale)
+                            _perm_arg(m), X, m.shape[0], scale)
+
+
+def sell_spmv_flat(col, val, rid, perm, x, n_rows: int, n_segments: int,
+                   C: int, scale=None) -> jnp.ndarray:
+    """Flat SELL: gather x by the chunk-column-major col stream, multiply,
+    segment-sum on the per-element chunk-row ids, perm-scatter.
+
+    Streams exactly ``sum_c w_c * C`` stored elements (plus one row id
+    each) — the formulation that makes sigma-sorting pay under XLA.
+    Padding elements carry ``col = 0, val = 0`` and contribute nothing;
+    padding rows' segments are simply never gathered.  ``perm`` is the
+    inverse row permutation (gather indices; ``None`` = natural order);
+    ``scale`` is the per-chunk fp32 scale of a quantized container,
+    repeated to the C rows of each chunk tile.
+    """
+    acc = acc_dtype(val.dtype, x.dtype)
+    prod = val.astype(acc) * jnp.take(x, col, axis=0).astype(acc)
+    tiles = jax.ops.segment_sum(prod, rid, num_segments=n_segments)
+    if scale is not None:
+        tiles = tiles * jnp.repeat(scale.astype(acc), C)
+    return tiles[:n_rows] if perm is None else tiles[perm]
+
+
+def sell_spmm_flat(col, val, rid, perm, X, n_rows: int, n_segments: int,
+                   C: int, scale=None) -> jnp.ndarray:
+    """Multi-vector flat SELL: one matrix pass for all K columns."""
+    acc = acc_dtype(val.dtype, X.dtype)
+    prod = val.astype(acc)[:, None] * jnp.take(X, col, axis=0).astype(acc)
+    tiles = jax.ops.segment_sum(prod, rid, num_segments=n_segments)
+    if scale is not None:
+        tiles = tiles * jnp.repeat(scale.astype(acc), C)[:, None]
+    return tiles[:n_rows] if perm is None else tiles[perm]
+
+
+def _flat_operands(m: SELL):
+    rid = sell_flat_rids(m)
+    scale = None if m.scale is None else jnp.asarray(m.scale)
+    return (jnp.asarray(m.col_idx), jnp.asarray(m.val), jnp.asarray(rid),
+            _perm_arg(m), scale)
 
 
 def sell_spmv_loop(m: SELL, x: jnp.ndarray) -> jnp.ndarray:
@@ -126,7 +230,22 @@ def sell_spmv_loop(m: SELL, x: jnp.ndarray) -> jnp.ndarray:
     return y[:n_rows]
 
 
-# --- Pallas autotune hook (shared by plan + any other consumer) -------------
+# --- autotune hooks (shared by plan + any other consumer) -------------------
+
+
+def sell_sigma_autotune(row_lengths, C: int = 8, candidates=None):
+    """Pack-time sigma selection: the registry-level entry point.
+
+    sigma is fixed when the container is packed, so unlike the
+    (chunk_block, width_block) hook below it runs on the *pattern* (row
+    lengths), before conversion.  Returns ``(sigma, flat_pad_ratio)``;
+    shared by ``perfmodel.select_format`` (cold picks), the ``--tune``
+    measured tier (candidate enumeration) and ``corpus.corpus_stats``
+    (occupancy-vs-sigma reporting).
+    """
+    from ..core import perfmodel as PM
+
+    return PM.select_sell_sigma(row_lengths, C, candidates)
 
 
 def sell_autotune(m: SELL, ctx: KernelContext):
@@ -179,7 +298,7 @@ def _pallas_operands(m: SELL, ctx: KernelContext):
     choice = sell_autotune(m, ctx)
     col3, val3, _ = sell_padded_views(m, pad_width_to=choice.width_block)
     return (choice, jnp.asarray(col3), jnp.asarray(val3),  # device-put once
-            jnp.asarray(np.asarray(m.perm)))
+            _perm_arg(m))
 
 
 def _build_pallas_spmv(m: SELL, ctx: KernelContext, interpret: bool) -> CompiledKernel:
@@ -230,15 +349,31 @@ def _build_pallas_spmm(m: SELL, ctx: KernelContext, interpret: bool) -> Compiled
 
 
 @register_kernel("sell", "spmv", "xla",
-                 description="padded-view gather + width reduce + perm scatter")
+                 description="padded-view gather/reduce or flat segment-sum "
+                             "(per-container pick) + perm scatter")
 def _build_spmv(m: SELL, ctx) -> CompiledKernel:
+    from ..core import perfmodel as PM
+    if PM.sell_xla_uses_flat(m):
+        col, val, rid, perm, scale = _flat_operands(m)
+        nseg, C, n = m.n_chunks * m.C, m.C, m.shape[0]
+        return CompiledKernel(
+            lambda x: sell_spmv_flat(col, val, rid, perm, x, n, nseg, C,
+                                     scale), "xla")
     sell_padded_views(m)  # warm the build-once cache host-side
     return CompiledKernel(lambda x: sell_spmv(m, x), "xla")
 
 
 @register_kernel("sell", "spmm", "xla",
-                 description="padded-view multi-vector einsum + perm scatter")
+                 description="padded-view einsum or flat segment-sum "
+                             "(per-container pick) + perm scatter")
 def _build_spmm(m: SELL, ctx) -> CompiledKernel:
+    from ..core import perfmodel as PM
+    if PM.sell_xla_uses_flat(m):
+        col, val, rid, perm, scale = _flat_operands(m)
+        nseg, C, n = m.n_chunks * m.C, m.C, m.shape[0]
+        return CompiledKernel(
+            lambda X: sell_spmm_flat(col, val, rid, perm, X, n, nseg, C,
+                                     scale), "xla")
     sell_padded_views(m)
     return CompiledKernel(lambda X: sell_spmm(m, X), "xla")
 

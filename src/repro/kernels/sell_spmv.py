@@ -90,11 +90,13 @@ def sell_spmv_arrays(
     )(col3, val3, x)
 
 
-def sell_spmv_scatter(tiles: jnp.ndarray, perm: jnp.ndarray, n_rows: int) -> jnp.ndarray:
-    """Scatter (nc, C) permuted tiles back to original row order."""
-    y = jnp.zeros(n_rows + 1, dtype=tiles.dtype)
-    y = y.at[perm.reshape(-1)].add(tiles.reshape(-1))
-    return y[:n_rows]
+def sell_spmv_scatter(tiles: jnp.ndarray, perm, n_rows: int) -> jnp.ndarray:
+    """Un-permute (nc, C) tiles back to original row order.  ``perm`` is
+    the *inverse* row permutation applied as a gather (the sort perm is a
+    bijection, so no scatter-add is ever needed); ``None`` = natural
+    order (reshape + slice)."""
+    flat = tiles.reshape(-1)
+    return flat[:n_rows] if perm is None else flat[perm]
 
 
 def _sell_mm_kernel(col_ref, val_ref, x_ref, o_ref):
@@ -156,12 +158,12 @@ def sell_spmm_arrays(
     )(col3, val3, X)
 
 
-def sell_spmm_scatter(tiles: jnp.ndarray, perm: jnp.ndarray, n_rows: int) -> jnp.ndarray:
-    """Scatter (nc, C, K) permuted tiles back to original row order."""
+def sell_spmm_scatter(tiles: jnp.ndarray, perm, n_rows: int) -> jnp.ndarray:
+    """Un-permute (nc, C, K) tiles back to original row order (inverse-perm
+    gather; ``None`` = natural order — see ``sell_spmv_scatter``)."""
     K = tiles.shape[-1]
-    Y = jnp.zeros((n_rows + 1, K), dtype=tiles.dtype)
-    Y = Y.at[perm.reshape(-1)].add(tiles.reshape(-1, K))
-    return Y[:n_rows]
+    flat = tiles.reshape(-1, K)
+    return flat[:n_rows] if perm is None else flat[perm]
 
 
 def vmem_bytes(chunk_block: int, width_block: int, C: int, n: int,

@@ -20,6 +20,7 @@ import numpy as np
 from ..core import perfmodel as PM
 from ..core.formats import BSR, CSR, SELL, matrix_stats
 from ..core.plan import SpMVPlan
+from ..core.planconfig import PlanConfig
 from ..kernels import ops as KOPS
 
 
@@ -52,8 +53,8 @@ class SparseLinear:
                 return f(x2d)
         elif fmt == "sell":
             csr = CSR.from_dense(w)
-            mat = SELL.from_csr(csr, C=8, sigma=256)
-            plan = SpMVPlan.compile(mat, backend=backend)
+            mat = SELL.from_csr(csr, C=8)   # default sigma window
+            plan = SpMVPlan.compile(mat, PlanConfig(backend=backend))
             def apply_fn(x2d):                # one fused SpMM, not B SpMVs
                 return plan.spmm(x2d)
         else:

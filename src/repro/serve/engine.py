@@ -200,10 +200,22 @@ class BatchingSpMVServer:
             max_pending=self.max_pending if max_pending is None else max_pending,
         )
 
+    def _server_config(self, config, plan_kw, *, api: str):
+        """Fold kwargs into a ``PlanConfig`` and apply the server's floor:
+        the server owns the chip, ``backend="auto"`` defers to the
+        server-wide backend, and ``validate=None`` inherits the server's
+        validation policy."""
+        from ..core.planconfig import coerce_config
+        cfg = coerce_config(config, plan_kw, api=api, stacklevel=4)
+        return cfg.replace(
+            chip=self.chip,
+            backend=self.backend if cfg.backend in (None, "auto") else cfg.backend,
+            validate=self.validate if cfg.validate is None else cfg.validate)
+
     def register(self, name: str, matrix, *, max_batch: int | None = None,
                  deadline_s: float | None = None,
                  max_pending: int | None = None,
-                 backend: str | None = None, **plan_kw):
+                 config=None, **plan_kw):
         """Compile ``matrix`` into a plan + batching queue; returns the report.
 
         Compilation is idempotent (plans are memoized on the container);
@@ -214,29 +226,30 @@ class BatchingSpMVServer:
             matrix: any ``core.formats`` container.
             max_batch: flush-width override for this operator.
             deadline_s / max_pending: per-operator policy overrides.
-            backend: per-operator kernel-registry backend override
-                (defaults to the server-wide ``backend``, itself
-                ``"auto"`` = capability probes + roofline ranking).
-            **plan_kw: forwarded to ``SpMVPlan.compile`` — in particular
-                ``format="auto"`` registers a CSR under the perfmodel's
-                chosen storage scheme (``perfmodel.select_format``), and
-                ``validate=`` overrides the server's matrix-validation
-                policy for this operator.
+            config: a ``core.planconfig.PlanConfig`` carrying every compile
+                option — ``format="auto"`` registers a CSR under the
+                perfmodel's chosen storage scheme, ``sigma`` the SELL
+                sorting window, ``backend`` a per-operator registry
+                override (``"auto"`` = the server-wide setting), and
+                ``validate`` overrides the server's matrix-validation
+                policy (``None`` inherits it).
+            **plan_kw: deprecated bare-kwarg aliases for the config fields
+                (one ``DeprecationWarning``, folded into a config).
         """
         from .resilience import degradation_ladder
-        plan_kw.setdefault("validate", self.validate)
-        plan = SpMVPlan.compile(matrix,
-                                backend=backend or self.backend,
-                                chip=self.chip, **plan_kw)
+        cfg = self._server_config(config, plan_kw,
+                                  api="BatchingSpMVServer.register")
+        plan = SpMVPlan.compile(matrix, cfg)
         # batch-width policy from the container AND kernel the plan actually
         # executes (after any format="auto" conversion / backend selection),
         # not the registered source
         policy = self._policy(plan.matrix, max_batch, deadline_s, max_pending,
                               kernel=plan.report.kernel)
-        rebuild_kw = dict(plan_kw, validate="off")  # matrix already checked
 
-        def rebuild(be, _m=matrix, _kw=rebuild_kw):
-            return SpMVPlan.compile(_m, backend=be, chip=self.chip, **_kw)
+        def rebuild(be, _m=matrix, _cfg=cfg):
+            # matrix already checked at register time
+            return SpMVPlan.compile(_m, _cfg.replace(backend=be,
+                                                     validate="off"))
 
         self._queues[name] = OperatorQueue(
             plan, policy, self._clock,
@@ -251,23 +264,24 @@ class BatchingSpMVServer:
                              max_batch: int | None = None,
                              deadline_s: float | None = None,
                              max_pending: int | None = None,
-                             backend: str | None = None, **plan_kw):
+                             config=None, **plan_kw):
         """Mesh-aware registration: compile ``matrix`` into a
         ``DistributedSpMVPlan`` sharded over ``mesh`` (default: all local
         devices).  Batching applies unchanged — ``plan.spmm`` is one
         *distributed* pass, so coalescing also amortizes the collective
         x-shard exchange across the batch, not just the HBM matrix stream.
-        ``backend`` (default: the server-wide setting) selects the
-        registry entry for the inner slab multiplies.
+        ``config.backend`` (``"auto"`` = the server-wide setting) selects
+        the registry entry for the inner slab multiplies; bare kwargs
+        remain as deprecated aliases.
         """
         from ..core.distributed_plan import _as_csr, compile_distributed_spmv_plan
         from ..core.validate import validate_matrix
 
+        cfg = self._server_config(config, plan_kw,
+                                  api="BatchingSpMVServer.register_distributed")
         matrix = validate_matrix(matrix, policy=self.validate)
         plan = compile_distributed_spmv_plan(matrix, mesh, variant=variant,
-                                             chip=self.chip,
-                                             backend=backend or self.backend,
-                                             **plan_kw)
+                                             config=cfg)
         policy = self._policy(_as_csr(matrix), max_batch, deadline_s, max_pending)
         # the inner slab multiplies know exactly two backends (xla and the
         # loop oracles — see ``_resolve_slab_backend``), so the distributed
@@ -275,10 +289,9 @@ class BatchingSpMVServer:
         ladder = ([] if plan.slab_backend == "loop_reference"
                   else ["loop_reference"])
 
-        def rebuild(be, _m=matrix, _mesh=mesh, _v=variant, _kw=dict(plan_kw)):
+        def rebuild(be, _m=matrix, _mesh=mesh, _v=variant, _cfg=cfg):
             return compile_distributed_spmv_plan(_m, _mesh, variant=_v,
-                                                 chip=self.chip, backend=be,
-                                                 **_kw)
+                                                 config=_cfg.replace(backend=be))
 
         self._queues[name] = OperatorQueue(
             plan, policy, self._clock,

@@ -1,0 +1,328 @@
+"""SELL-C-sigma permutation properties + the PlanConfig compile API (PR9).
+
+The tentpole contract: sigma-window row sorting is a *pack-time layout
+choice* — ``plan(x)`` always returns rows in the original order, for every
+sigma, every backend formulation (padded XLA views, flat segment-sum XLA,
+the loop oracle), and every stored value dtype (per-chunk quantization
+scales must follow the permutation).  Plus the PlanConfig surface: config
+and legacy-kwarg compiles are equivalent, the deprecation fires exactly
+once, and mixing both is an error.
+"""
+import sys
+import warnings
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+from repro.core import formats as F  # noqa: E402
+from repro.core import perfmodel as PM  # noqa: E402
+from repro.core.eigensolver import as_apply, lanczos  # noqa: E402
+from repro.core.matrices import power_law_rows  # noqa: E402
+from repro.core.plan import SpMVPlan  # noqa: E402
+from repro.core.planconfig import PlanConfig, coerce_config  # noqa: E402
+from repro.serve.engine import BatchingSpMVServer  # noqa: E402
+
+C = 8
+N = 192
+
+
+@pytest.fixture(scope="module")
+def zipf():
+    """Irregular rows: the matrix sigma-sorting exists for."""
+    return power_law_rows(N, N, mean_nnz=6.0, seed=3, max_nnz=64)
+
+
+@pytest.fixture(scope="module")
+def x(zipf):
+    return jnp.asarray(np.random.default_rng(0)
+                       .standard_normal(zipf.shape[1]).astype(np.float32))
+
+
+def _dense(m):
+    return m.to_dense() if hasattr(m, "to_dense") else np.asarray(m)
+
+
+SIGMAS = (1, C, 64, N)
+
+
+# --- row-order preservation across the sigma grid ---------------------------
+
+@pytest.mark.parametrize("sigma", SIGMAS)
+def test_plan_output_is_in_original_row_order(zipf, x, sigma):
+    ref = _dense(zipf) @ np.asarray(x)
+    sell = F.SELL.from_csr(zipf, C=C, sigma=sigma)
+    y = SpMVPlan.compile(sell, PlanConfig())(x)
+    np.testing.assert_allclose(np.asarray(y), ref, rtol=2e-4, atol=2e-5)
+
+
+@pytest.mark.parametrize("sigma", SIGMAS)
+def test_sigma_values_agree_with_unsorted_pack(zipf, x, sigma):
+    """Different windows, same answer (modulo f32 reassociation)."""
+    y_sig = SpMVPlan.compile(F.SELL.from_csr(zipf, C=C, sigma=sigma),
+                             PlanConfig())(x)
+    y_id = SpMVPlan.compile(F.SELL.from_csr(zipf, C=C, sigma=1),
+                            PlanConfig())(x)
+    np.testing.assert_allclose(np.asarray(y_sig), np.asarray(y_id),
+                               rtol=2e-4, atol=2e-5)
+
+
+@pytest.mark.parametrize("sigma", SIGMAS)
+def test_loop_oracle_agrees_per_sigma(zipf, x, sigma):
+    """The chunk-by-chunk loop oracle sees the same permutation dataflow
+    as the vectorized kernels."""
+    sell = F.SELL.from_csr(zipf, C=C, sigma=sigma)
+    y_auto = SpMVPlan.compile(sell, PlanConfig())(x)
+    y_loop = SpMVPlan.compile(sell,
+                              PlanConfig(backend="loop_reference"))(x)
+    np.testing.assert_allclose(np.asarray(y_auto), np.asarray(y_loop),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_both_xla_formulations_preserve_row_order(zipf, x):
+    """The dual-formulation XLA entry: the irregular Zipf pack streams
+    flat, a regular (constant-row-length) pack keeps the padded views
+    (no padding to save, and flat pays a second index stream) — both
+    return rows in original order."""
+    from repro.core.matrices import random_banded
+
+    flat = F.SELL.from_csr(zipf, C=C, sigma=N)
+    assert PM.sell_xla_uses_flat(flat)
+    y = SpMVPlan.compile(flat, PlanConfig(backend="xla"))(x)
+    np.testing.assert_allclose(np.asarray(y), _dense(zipf) @ np.asarray(x),
+                               rtol=2e-4, atol=2e-5)
+
+    band = random_banded(N, 4, 1.0, seed=0)
+    padded = F.SELL.from_csr(band, C=C)
+    assert not PM.sell_xla_uses_flat(padded)
+    xb = jnp.asarray(np.random.default_rng(2)
+                     .standard_normal(band.shape[1]).astype(np.float32))
+    yb = SpMVPlan.compile(padded, PlanConfig(backend="xla"))(xb)
+    np.testing.assert_allclose(np.asarray(yb), _dense(band) @ np.asarray(xb),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_permute_false_is_identity_window(zipf, x):
+    cfg = PlanConfig(format="sell", permute=False)
+    plan = SpMVPlan.compile(zipf, cfg)
+    assert plan.matrix.sigma == 1
+    perm = np.asarray(plan.matrix.perm).reshape(-1)
+    n = zipf.shape[0]
+    assert np.array_equal(perm[:n], np.arange(n))
+    np.testing.assert_allclose(np.asarray(plan(x)),
+                               _dense(zipf) @ np.asarray(x),
+                               rtol=2e-4, atol=2e-5)
+
+
+# --- quantized values: per-chunk scales follow the permutation --------------
+
+@pytest.mark.parametrize("vd", ("f16", "bf16", "fp8_e4m3", "int8"))
+@pytest.mark.parametrize("sigma", (1, 64, N))
+def test_quantized_sigma_pack_matches_dense(zipf, x, vd, sigma):
+    sell = F.with_value_dtype(F.SELL.from_csr(zipf, C=C, sigma=sigma), vd)
+    y = SpMVPlan.compile(sell, PlanConfig())(x)
+    ref = _dense(zipf) @ np.asarray(x)
+    scale = max(1.0, float(np.abs(ref).max()))
+    # quantization tolerance, not layout tolerance: a misrouted per-chunk
+    # scale would be off by the chunk's magnitude, orders above this
+    tol = {"f16": 2e-3, "bf16": 2e-2, "fp8_e4m3": 2e-1, "int8": 2e-2}[vd]
+    assert float(np.abs(np.asarray(y) - ref).max()) / scale < tol
+
+
+@pytest.mark.parametrize("vd", ("int8", "fp8_e4m3"))
+def test_quantized_sigma_matches_quantized_loop_oracle(zipf, x, vd):
+    """Bit-level routing check: the same quantized sigma-sorted container
+    through the vectorized kernel and the loop oracle — any scale/perm
+    mismatch shows up as a chunk-magnitude error."""
+    sell = F.with_value_dtype(F.SELL.from_csr(zipf, C=C, sigma=64), vd)
+    y_vec = SpMVPlan.compile(sell, PlanConfig())(x)
+    y_loop = SpMVPlan.compile(sell, PlanConfig(backend="loop_reference"))(x)
+    np.testing.assert_allclose(np.asarray(y_vec), np.asarray(y_loop),
+                               rtol=2e-4, atol=2e-5)
+
+
+# --- the serving fast path ---------------------------------------------------
+
+def test_server_fast_path_with_sigma_config(zipf, x):
+    # validate="off": the Zipf generator emits (summed) duplicate entries
+    srv = BatchingSpMVServer(max_batch=1, validate="off")
+    rep = srv.register("op", zipf,
+                       config=PlanConfig(format="sell", sigma=64))
+    assert rep.format == "sell"
+    assert srv.plan("op").matrix.sigma == 64
+    y = srv.spmv("op", x)
+    np.testing.assert_allclose(np.asarray(y), _dense(zipf) @ np.asarray(x),
+                               rtol=2e-4, atol=2e-5)
+    # batched flush path composes with the permutation too
+    fut = srv.submit("op", x)
+    srv.flush("op")
+    np.testing.assert_allclose(np.asarray(fut.result()),
+                               _dense(zipf) @ np.asarray(x),
+                               rtol=2e-4, atol=2e-5)
+
+
+# --- PlanConfig equivalence + deprecation -----------------------------------
+
+def test_config_and_legacy_kwargs_compile_the_same_plan(zipf):
+    cfg_plan = SpMVPlan.compile(zipf, PlanConfig(format="sell", sigma=64))
+    with pytest.deprecated_call():
+        kw_plan = SpMVPlan.compile(zipf, format="sell", sigma=64)
+    assert cfg_plan is kw_plan   # same conversion + memo key
+
+
+def test_legacy_kwargs_warn_exactly_once(zipf):
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        SpMVPlan.compile(zipf, format="sell", sigma=64)
+    dep = [w for w in rec if issubclass(w.category, DeprecationWarning)]
+    assert len(dep) == 1
+    assert "SpMVPlan.compile" in str(dep[0].message)
+
+
+def test_config_plus_kwargs_is_an_error(zipf):
+    with pytest.raises(ValueError, match="not both"):
+        SpMVPlan.compile(zipf, PlanConfig(format="sell"), sigma=64)
+
+
+def test_unknown_kwarg_is_a_typeerror(zipf):
+    with pytest.raises(TypeError, match="unknown option"):
+        SpMVPlan.compile(zipf, formt="sell")
+
+
+def test_coerce_config_passthrough_identity():
+    cfg = PlanConfig(format="sell", sigma=32)
+    assert coerce_config(cfg, {}, api="t") is cfg
+    with pytest.raises(TypeError, match="PlanConfig"):
+        coerce_config({"format": "sell"}, {}, api="t")
+
+
+def test_eigensolver_config_equivalence(zipf):
+    cfg = PlanConfig(format="sell", sigma=64)
+    e_cfg = lanczos(zipf, zipf.shape[0], m=12, config=cfg).eigenvalues[0]
+    with pytest.deprecated_call():
+        e_kw = lanczos(zipf, zipf.shape[0], m=12,
+                       format="sell", sigma=64).eigenvalues[0]
+    assert e_cfg == pytest.approx(e_kw, rel=1e-6)
+    assert callable(as_apply(zipf, config=cfg))
+
+
+def test_server_register_legacy_kwargs_deprecated(zipf, x):
+    srv = BatchingSpMVServer(max_batch=1, validate="off")
+    with pytest.deprecated_call():
+        srv.register("legacy", zipf, format="sell", sigma=64)
+    assert srv.plan("legacy").matrix.sigma == 64
+
+
+def test_distributed_compile_config_api(zipf):
+    from repro.core.distributed_plan import compile_distributed_spmv_plan
+    plan = compile_distributed_spmv_plan(zipf, config=PlanConfig())
+    xs = jnp.asarray(np.random.default_rng(1)
+                     .standard_normal(zipf.shape[1]).astype(np.float32))
+    np.testing.assert_allclose(np.asarray(plan(xs)),
+                               _dense(zipf) @ np.asarray(xs),
+                               rtol=2e-4, atol=2e-5)
+    with pytest.deprecated_call():
+        compile_distributed_spmv_plan(zipf, backend="xla")
+
+
+# --- sigma autotune + defaults ----------------------------------------------
+
+def test_select_sell_sigma_minimizes_pad_ratio(zipf):
+    lens = zipf.row_lengths()
+    sig, ratio = PM.select_sell_sigma(lens, C)
+    for cand in PM.sell_sigma_candidates(zipf.shape[0], C):
+        assert ratio <= PM.sell_pad_ratio(lens, C, cand) + 1e-12
+
+
+def test_auto_format_records_chosen_sigma(zipf):
+    """format="auto" with sigma=None autotunes the window and records the
+    concrete int in the conversion kwargs the plan will execute."""
+    choice = PM.select_format(zipf, backend="xla", sigma=None)
+    best, _ = PM.select_sell_sigma(zipf.row_lengths(), C)
+    if choice.format in ("sell", "hybrid"):
+        assert choice.convert_kwargs.get("sigma") == int(best)
+    plan = SpMVPlan.compile(zipf, PlanConfig(format="sell", backend="xla"))
+    assert plan.matrix.sigma >= 1   # concrete resolved window on the pack
+
+
+def test_one_default_sigma_source_of_truth():
+    from repro.configs.holstein import HolsteinConfig
+    from repro.core.planconfig import default_sell_sigma
+    assert HolsteinConfig().sell_sigma == default_sell_sigma() \
+        == F.DEFAULT_SELL_SIGMA
+
+
+# --- the deprecated-kwarg lint gate -----------------------------------------
+
+def test_check_deprecated_flags_and_passes(tmp_path):
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "tools"))
+    import check_deprecated as CD
+
+    bad = tmp_path / "bad.py"
+    bad.write_text("plan = SpMVPlan.compile(m, format='sell', sigma=64)\n")
+    errs = CD.check_file(bad)
+    assert len(errs) == 1 and "format" in errs[0] and "sigma" in errs[0]
+
+    good = tmp_path / "good.py"
+    good.write_text(
+        "plan = SpMVPlan.compile(m, PlanConfig(format='sell'))\n"
+        "srv.register('op', m, config=PlanConfig(sigma=64), max_batch=4)\n")
+    assert CD.check_file(good) == []
+
+    # the in-tree sources themselves are clean
+    assert CD.main([]) == 0
+
+# --- the un-permute epilogue -------------------------------------------------
+
+def test_regular_matrix_sorts_to_identity_and_skips_unpermute():
+    """An identity permutation means the kernels take the gather-free
+    epilogue (`_perm_arg` returns None) — the regression behind the PR9
+    serving-throughput fix.  sigma=1 packs never reorder, and a matrix
+    whose row lengths are already non-increasing sorts to the identity
+    even with the full-window sort."""
+    from repro.core.matrices import random_banded
+    from repro.kernels.sell import _perm_arg, sell_perm_is_natural
+
+    band = random_banded(N, 4, 1.0, seed=0)
+    m = F.SELL.from_csr(band, C=C, sigma=1)   # no reordering by construction
+    assert sell_perm_is_natural(m)
+    assert _perm_arg(m) is None
+
+    # constant row length: every row has exactly 3 nonzeros (tridiagonal
+    # with wraparound), so even sigma=N sorting is stable-identity
+    dense = np.zeros((N, N))
+    diag = np.arange(N)
+    dense[diag, (diag - 1) % N] = 1.0
+    dense[diag, diag] = 1.0
+    dense[diag, (diag + 1) % N] = 1.0
+    mc = F.SELL.from_csr(F.CSR.from_dense(dense), C=C, sigma=N)
+    assert sell_perm_is_natural(mc)
+    assert _perm_arg(mc) is None
+
+    srt = F.SELL.from_csr(power_law_rows(N, N, mean_nnz=6.0, seed=3,
+                                         max_nnz=64), C=C, sigma=N)
+    assert not sell_perm_is_natural(srt)
+    inv = np.asarray(_perm_arg(srt))
+    # inverse-permutation gather: perm[inv[i]] == i for every real row
+    assert (np.asarray(srt.perm)[inv] == np.arange(N)).all()
+
+
+def test_flat_overhead_gates_the_formulation_pick():
+    """The flat segment-sum formulation is charged its measured execution
+    overhead: a mildly padded pack stays padded on cpu even though its raw
+    flat bytes are smaller, while family "tpu" (overhead 1.0) switches on
+    bytes alone."""
+    assert PM.sell_flat_overhead("cpu") > PM.sell_flat_overhead("tpu") == 1.0
+
+    from repro.core.matrices import holstein_hubbard_surrogate
+    m = F.SELL.from_csr(holstein_hubbard_surrogate(512, seed=0),
+                        C=C, sigma=256)
+    flat = int(np.asarray(m.val).shape[0])
+    cw = np.asarray(m.chunk_width)
+    padded = int(m.n_chunks * int(cw.max()) * m.C)
+    assert flat * 12 < padded * 8          # raw flat bytes win at f32...
+    assert not PM.sell_xla_uses_flat(m, "cpu")   # ...but the overhead gates
+    assert PM.sell_xla_uses_flat(m, "tpu")

@@ -47,7 +47,9 @@ GOLDEN_UNRESTRICTED = {
     "holstein_exact": "dia", "holstein_surrogate": "hybrid",
     "laplace2d": "dia", "laplace3d": "dia",
     "banded_narrow": "dia", "banded_wide": "dia",
-    "powerlaw": "jds", "blocksparse": "bsr",
+    # powerlaw: jds -> sell with the PR9 dual-formulation XLA SELL entry
+    # (sigma-sorting now reduces streamed bytes under XLA too)
+    "powerlaw": "sell", "blocksparse": "bsr",
     "stripe": "ell", "random_uniform": "ell",
     "mtx_demo_lap": "dia", "mtx_fallback_band": "dia",
 }
@@ -325,12 +327,18 @@ def test_tune_with_fake_timer_is_deterministic(tmp_path):
     chip = BS.host_chip()
     timer = FakeTimer(latencies={"powerlaw/ell/xla": 1e-6}, default_s=1e-3)
     db = TDB.TuneDB(tmp_path / "tunedb.json")
+    # top_k wide enough to keep every (format, backend, sigma) variant in
+    # the timed set — the scripted ell latency must actually be measured
     res = BS.tune(db=db, matrices=["powerlaw"], iters=5, chip=chip,
-                  timer=timer)
+                  timer=timer, top_k=32)
     # every kept candidate timed exactly once, no wall clock involved
     assert timer.n_calls == res["matrices"]["powerlaw"]["n_candidates"]
     assert all(timer.count(k) == 1 for k in timer.calls)
     assert timer.count("powerlaw/ell/xla") == 1
+    # the sigma autotune dimension: SELL fans out over candidate windows,
+    # each timed as its own candidate (PR9)
+    sell_keys = [k for k in timer.calls if "/sell@s" in k]
+    assert len(sell_keys) >= 2
     # the scripted latency decides the recorded winner...
     entry = next(iter(db.entries.values()))
     assert entry["best"] == {"format": "ell", "backend": "xla",
@@ -347,7 +355,7 @@ def test_tune_with_fake_timer_is_deterministic(tmp_path):
     timer2 = FakeTimer(latencies={"powerlaw/ell/xla": 1e-6}, default_s=1e-3)
     db2 = TDB.TuneDB()
     BS.tune(db=db2, matrices=["powerlaw"], iters=5, chip=chip,
-            timer=timer2, save=False)
+            timer=timer2, save=False, top_k=32)
     assert db2.entries == db.entries
 
 

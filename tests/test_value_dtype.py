@@ -209,12 +209,20 @@ def test_default_sigma_agrees_between_stats_conversion_and_spec():
     sell = F.SELL.from_csr(m, C=8, sigma=None)
     assert st_["sell_sigma"] == F.DEFAULT_SELL_SIGMA
     assert sell.sigma == F.DEFAULT_SELL_SIGMA
-    assert corpus.MatrixSpec.__dataclass_fields__["sell_sigma"].default \
-        == F.DEFAULT_SELL_SIGMA
+    # PR9: corpus specs default to sigma=None — the autotuned window
+    # (perfmodel.select_sell_sigma), not a second hard-coded constant
+    assert corpus.MatrixSpec.__dataclass_fields__["sell_sigma"].default is None
+    from repro.core.planconfig import PlanConfig, default_sell_sigma
+    assert default_sell_sigma() == F.DEFAULT_SELL_SIGMA
+    assert PlanConfig().effective_sigma(m.shape[0]) == F.DEFAULT_SELL_SIGMA
     # the occupancy the stats report is the occupancy the packing executes
     lens = m.row_lengths()
     pad = PM.sell_pad_ratio(lens, 8, F.DEFAULT_SELL_SIGMA)
     assert st_["sell_occupancy"] == pytest.approx(1.0 / pad)
+    # the sigma sweep exposes the curve the autotuner ranks
+    assert st_["sell_best_sigma"] in st_["sell_occupancy_vs_sigma"]
+    assert st_["sell_occupancy_vs_sigma"][st_["sell_best_sigma"]] \
+        == pytest.approx(max(st_["sell_occupancy_vs_sigma"].values()))
 
 
 # --- plan / eigensolver pass-through ----------------------------------------

@@ -1,0 +1,111 @@
+"""Lint gate: no new in-tree call sites may use the deprecated bare
+compile kwargs.
+
+PR9 unified every plan-compile surface behind ``config=PlanConfig(...)``;
+the historical bare kwargs (``format=``, ``backend=``, ``sigma=``, ...)
+remain as runtime ``DeprecationWarning`` aliases for downstream users, but
+the repo's own code must not keep minting them — otherwise the migration
+never converges.  This checker walks the AST of every Python file under
+``src/``, ``benchmarks/`` and ``examples/`` (``tests/`` is exempt: the
+deprecated path itself is under test there) and fails on any call to a
+compile entry point that passes a ``PlanConfig`` field as a bare keyword.
+
+Flagged entry points (by callable name, so both ``SpMVPlan.compile`` and
+``plan.compile`` forms are caught):
+
+* attribute calls: ``.compile(...)``, ``.register(...)``,
+  ``.register_distributed(...)``
+* plain calls: ``compile_plan``, ``compile_distributed_spmv_plan``,
+  ``as_apply``, ``lanczos``, ``ground_state_energy``, ``spectral_extent``
+
+Usage::
+
+    python tools/check_deprecated.py [paths...]
+"""
+from __future__ import annotations
+
+import ast
+import sys
+from pathlib import Path
+
+_REPO = Path(__file__).resolve().parent.parent
+
+
+def _load_fields() -> tuple[str, ...]:
+    """Read ``_FIELDS`` out of planconfig.py by AST, not by import —
+    the CI lint job runs this without jax installed."""
+    src = (_REPO / "src" / "repro" / "core" / "planconfig.py").read_text()
+    for node in ast.walk(ast.parse(src)):
+        if (isinstance(node, ast.Assign)
+                and any(isinstance(t, ast.Name) and t.id == "_FIELDS"
+                        for t in node.targets)):
+            return tuple(ast.literal_eval(node.value))
+    raise RuntimeError("planconfig.py: _FIELDS assignment not found")
+
+
+_FIELDS = _load_fields()
+
+DEFAULT_ROOTS = ("src", "benchmarks", "examples")
+
+#: ``obj.<name>(...)`` calls subject to the check
+ATTR_CALLS = {"compile", "register", "register_distributed"}
+
+#: bare ``<name>(...)`` calls subject to the check
+NAME_CALLS = {"compile_plan", "compile_distributed_spmv_plan",
+              "as_apply", "lanczos", "ground_state_energy",
+              "spectral_extent"}
+
+
+def _callee_name(node: ast.Call) -> str | None:
+    f = node.func
+    if isinstance(f, ast.Attribute) and f.attr in ATTR_CALLS:
+        return f.attr
+    if isinstance(f, ast.Name) and f.id in NAME_CALLS:
+        return f.id
+    return None
+
+
+def check_file(path: Path) -> list[str]:
+    """Human-readable violations for one Python source file."""
+    try:
+        tree = ast.parse(path.read_text(), filename=str(path))
+    except SyntaxError as e:  # a broken file is its own CI failure
+        return [f"{path}:{e.lineno}: syntax error: {e.msg}"]
+    errors = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = _callee_name(node)
+        if name is None:
+            continue
+        bad = sorted(kw.arg for kw in node.keywords
+                     if kw.arg in _FIELDS)
+        if bad:
+            errors.append(
+                f"{path}:{node.lineno}: {name}(...) passes deprecated bare "
+                f"kwarg(s) {bad}; use config=PlanConfig(...)")
+    return errors
+
+
+def main(argv=None) -> int:
+    args = (argv if argv is not None else sys.argv[1:])
+    repo = Path(__file__).resolve().parent.parent
+    roots = [Path(a) for a in args] or [repo / r for r in DEFAULT_ROOTS]
+    files = []
+    for root in roots:
+        if root.is_file():
+            files.append(root)
+        else:
+            files.extend(sorted(root.rglob("*.py")))
+    errors = []
+    for f in files:
+        errors.extend(check_file(f))
+    for e in errors:
+        print(e)
+    print(f"check_deprecated: {len(files)} files, {len(errors)} violation(s)",
+          file=sys.stderr)
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
