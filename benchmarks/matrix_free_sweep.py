@@ -1,0 +1,157 @@
+"""Matrix-free vs materialized SpMV — the PR10 receipt.
+
+The generated-operator claim: on structured-band matrices the kernel can
+*compute* its column indices (``col = row + offset``) instead of streaming
+them, and for constant-valued diagonals it can generate the values too, so
+the memory-bound SpMV moves a fraction of the materialized stream.  This
+sweep measures that claim per eligible corpus matrix:
+
+* every materialized candidate in ``spec.formats`` is compiled and timed
+  (same best-of protocol as ``corpus_sweep``) — the *best measured*
+  materialized plan is the honest baseline, not a strawman CSR;
+* the matrix-free plan is timed against it, with bitwise/near parity
+  checked on the spot;
+* the perfmodel's byte accounting is reported alongside: materialized
+  streamed bytes, the zero-index-bytes counterfactual, and the descriptor
+  stream — ``bytes_saved_per_nnz`` is the traffic the format deletes.
+
+``summary/geomean_speedup_vs_materialized`` is the CI-gated headline
+(tools/check_bench.py ``--bound ... >=1.2``).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import corpus
+from repro.core import formats as F
+from repro.core import perfmodel as PM
+from repro.core.plan import SpMVPlan
+from repro.core.planconfig import PlanConfig
+
+from .common import host_chip, row
+from .corpus_sweep import _convert_kwargs, _time_iters
+
+
+def sweep_matrix(spec: corpus.MatrixSpec, *, iters: int = 20,
+                 chip=None) -> dict:
+    """Materialized-best vs matrix-free timings for one eligible matrix."""
+    chip = chip or host_chip()
+    m = corpus.build(spec.name)
+    stats = corpus.corpus_stats(m, C=spec.sell_C, sigma=spec.sell_sigma)
+    x = jnp.asarray(np.random.default_rng(0)
+                    .standard_normal(m.shape[1]).astype(np.asarray(m.val).dtype))
+    flops = 2.0 * m.nnz
+
+    materialized = {}
+    for fmt in spec.formats:
+        kw = _convert_kwargs(spec, fmt, best_sigma=stats["sell_best_sigma"])
+        obj = m if fmt == "csr" else F.convert(m, fmt, **kw)
+        plan = SpMVPlan.compile(obj, PlanConfig(chip=chip))
+        materialized[fmt] = {
+            "t_measured_s": _time_iters(plan.apply, x, iters),
+            "kernel": plan.report.kernel,
+            "streamed_bytes_per_nnz":
+                PM.spmv_streamed_bytes(plan.matrix) / m.nnz,
+        }
+    best = min(materialized, key=lambda f: materialized[f]["t_measured_s"])
+    t_best = materialized[best]["t_measured_s"]
+
+    op = corpus.matrix_free_operator(spec.name)
+    mf_plan = SpMVPlan.compile(m, PlanConfig(format="matrix_free", chip=chip))
+    t_mf = _time_iters(mf_plan.apply, x, iters)
+
+    # parity against the best materialized plan, not just the oracle
+    ref_plan = SpMVPlan.compile(
+        m if best == "csr" else F.convert(
+            m, best, **_convert_kwargs(spec, best,
+                                       best_sigma=stats["sell_best_sigma"])),
+        PlanConfig(chip=chip))
+    y_ref = np.asarray(ref_plan(x))
+    y_mf = np.asarray(mf_plan(x))
+    parity = float(np.max(np.abs(y_mf - y_ref))
+                   / max(1e-30, float(np.max(np.abs(y_ref)))))
+
+    bytes_best = materialized[best]["streamed_bytes_per_nnz"]
+    bytes_mf = PM.spmv_streamed_bytes(op) / m.nnz
+    # the counterfactual: best materialized format with indices free —
+    # isolates index traffic from the generated-values saving
+    bytes_noidx = PM.spmv_streamed_bytes(
+        ref_plan.matrix, generated_indices=True) / m.nnz
+
+    return {
+        "family": spec.family,
+        "n": m.shape[0],
+        "nnz": m.nnz,
+        "n_diags": op.n_diags,
+        "n_generated": op.n_generated,
+        "n_stored": op.n_stored,
+        "materialized": materialized,
+        "best_materialized": best,
+        "t_best_materialized_s": t_best,
+        "t_matrix_free_s": t_mf,
+        "matrix_free_kernel": mf_plan.report.kernel,
+        "gflops_matrix_free": flops / t_mf / 1e9,
+        "speedup_vs_materialized": t_best / t_mf,
+        "parity_rel_err": parity,
+        "streamed_bytes_per_nnz": {
+            "best_materialized": bytes_best,
+            "best_materialized_generated_indices": bytes_noidx,
+            "matrix_free": bytes_mf,
+        },
+        "bytes_saved_per_nnz": bytes_best - bytes_mf,
+    }
+
+
+def measure(*, iters: int = 20, only=None) -> dict:
+    """Sweep the eligible corpus; the BENCH_PR10 ``matrix_free`` payload."""
+    chip = host_chip()
+    matrices = {}
+    for name in corpus.matrix_free_names():
+        if only and only not in name:
+            continue
+        matrices[name] = sweep_matrix(corpus.get(name), iters=iters, chip=chip)
+    speedups = [e["speedup_vs_materialized"] for e in matrices.values()]
+    return {
+        "backend": jax.default_backend(),
+        "calibrated_bw_bytes_per_s": chip.hbm_bytes_per_s,
+        "iters": iters,
+        "matrices": matrices,
+        "summary": {
+            "n_matrices": len(matrices),
+            "geomean_speedup_vs_materialized": (math.exp(
+                sum(math.log(s) for s in speedups) / len(speedups))
+                if speedups else 1.0),
+            "worst_speedup_vs_materialized": min(speedups, default=1.0),
+            "max_parity_rel_err": max(
+                (e["parity_rel_err"] for e in matrices.values()), default=0.0),
+            "mean_bytes_saved_per_nnz": (
+                sum(e["bytes_saved_per_nnz"] for e in matrices.values())
+                / len(matrices)) if matrices else 0.0,
+        },
+    }
+
+
+def run(full: bool = False):
+    """CSV rows: per eligible matrix the generated-vs-materialized ratio."""
+    res = measure(iters=30 if full else 20)
+    rows = []
+    for name, e in res["matrices"].items():
+        rows.append(row("matrix_free_sweep", name,
+                        e["speedup_vs_materialized"],
+                        f"best={e['best_materialized']}",
+                        e["bytes_saved_per_nnz"],
+                        e["parity_rel_err"]))
+    s = res["summary"]
+    rows.append(row("matrix_free_sweep", "summary",
+                    s["geomean_speedup_vs_materialized"],
+                    s["n_matrices"], s["mean_bytes_saved_per_nnz"]))
+    return rows
+
+
+def run_json(full: bool = False) -> dict:
+    """The ``matrix_free`` section of the BENCH_PR10.json artifact."""
+    return measure(iters=30 if full else 20)

@@ -39,10 +39,11 @@ MODULES = [
     "corpus_sweep",
     "backend_sweep",
     "compression_sweep",
+    "matrix_free_sweep",
 ]
 
 #: current perf-trajectory tag; --json with no PATH writes BENCH_<tag>.json
-DEFAULT_BENCH_TAG = "PR9"
+DEFAULT_BENCH_TAG = "PR10"
 
 
 def main(argv=None) -> int:
@@ -62,6 +63,7 @@ def main(argv=None) -> int:
         from benchmarks.backend_sweep import tune_json
         from benchmarks.compression_sweep import run_json as compression_json
         from benchmarks.corpus_sweep import run_json as corpus_json
+        from benchmarks.matrix_free_sweep import run_json as matrix_free_json
         from benchmarks.plan_bench import run_json
         from benchmarks.serve_throughput import run_json as serve_json
         out_path = Path(args.json or f"BENCH_{args.bench_tag}.json")
@@ -71,6 +73,7 @@ def main(argv=None) -> int:
         payload["backends"] = backend_json(full=args.full)
         payload["compression"] = compression_json(full=args.full)
         payload["tuning"] = tune_json(full=args.full)
+        payload["matrix_free"] = matrix_free_json(full=args.full)
         out_path.parent.mkdir(parents=True, exist_ok=True)
         with open(out_path, "w") as fh:
             json.dump(payload, fh, indent=2, sort_keys=True)
@@ -113,6 +116,12 @@ def main(argv=None) -> int:
               f"{ts['geomean_model_vs_best']:.3f}), warm hit rate "
               f"{ts['warm_hit_rate']:.2f} over {ts['n_matrices']} matrices",
               file=sys.stderr)
+        ms = payload["matrix_free"]["summary"]
+        print(f"# matrix_free: geomean "
+              f"{ms['geomean_speedup_vs_materialized']:.2f}x vs materialized "
+              f"best over {ms['n_matrices']} matrices (worst "
+              f"{ms['worst_speedup_vs_materialized']:.2f}x, parity "
+              f"{ms['max_parity_rel_err']:.1e})", file=sys.stderr)
         return 0
 
     failures = 0

@@ -1,0 +1,99 @@
+"""End-to-end driver: matrix-free Lanczos on the 3-D Laplacian.
+
+The 7-point stencil is the paper's best case for generated operators:
+every diagonal's offset is a function of the grid shape and every value
+is a constant, so the SpMV needs *no* matrix arrays at all — the kernel
+computes ``col = row + offset`` and the stencil weights in-registers and
+streams only the vectors.
+
+1. Detect the ``MatrixFreeOperator`` descriptor from the assembled CSR
+   (exact detection: the descriptor materializes back bitwise-identical).
+2. Compare the perfmodel's byte accounting: materialized CSR stream vs
+   the zero-index-bytes descriptor stream.
+3. Time both plans and convert the measured time into achieved bytes/nnz
+   through the host's calibrated STREAM bandwidth — the model-vs-measured
+   receipt for the traffic the format deletes.
+4. Run Lanczos to the ground state through the matrix-free plan.
+
+    PYTHONPATH=src python examples/matrix_free_laplacian.py [--nx 24]
+"""
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+sys.path.insert(0, ".")   # benchmarks.common (host STREAM calibration)
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import host_chip
+from repro.core import formats as F
+from repro.core import perfmodel as PM
+from repro.core.eigensolver import lanczos
+from repro.core.matrices import laplacian_3d
+from repro.core.plan import SpMVPlan
+from repro.core.planconfig import PlanConfig
+
+
+def _time(plan, x, iters=50):
+    jax.block_until_ready(plan(x))
+    t0 = time.perf_counter()
+    y = None
+    for _ in range(iters):
+        y = plan(x)
+    jax.block_until_ready(y)
+    return (time.perf_counter() - t0) / iters
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--nx", type=int, default=24, help="grid points per axis")
+    ap.add_argument("--lanczos-steps", type=int, default=64)
+    args = ap.parse_args()
+
+    # --- 1. assemble once, detect the descriptor -------------------------
+    m = F.with_value_dtype(laplacian_3d(args.nx, args.nx, args.nx), "f32")
+    op = F.detect_matrix_free(m)
+    assert op is not None, "the 7-point stencil must detect as matrix-free"
+    print(f"[detect] N={m.shape[0]} nnz={m.nnz} -> {op.n_diags} diagonals, "
+          f"{op.n_generated} generated / {op.n_stored} stored "
+          f"(container streams {'nothing' if op.data is None else 'stored lanes only'})")
+    back = F.materialize(op)
+    assert np.array_equal(np.asarray(back.val), np.asarray(m.val))
+
+    # --- 2. model-side byte accounting ------------------------------------
+    bytes_csr = PM.spmv_streamed_bytes(m) / m.nnz
+    bytes_mf = PM.spmv_streamed_bytes(op) / m.nnz
+    print(f"[model] streamed bytes/nnz: csr={bytes_csr:.2f} "
+          f"matrix_free={bytes_mf:.2f} "
+          f"(predicted saving {bytes_csr - bytes_mf:.2f} B/nnz)")
+
+    # --- 3. measured traffic through the calibrated roofline ---------------
+    chip = host_chip()
+    x = jax.random.normal(jax.random.PRNGKey(0), (m.shape[0],), jnp.float32)
+    plan_csr = SpMVPlan.compile(m, PlanConfig(format="csr", chip=chip))
+    plan_mf = SpMVPlan.compile(m, PlanConfig(format="matrix_free", chip=chip))
+    t_csr, t_mf = _time(plan_csr, x), _time(plan_mf, x)
+    bw = chip.hbm_bytes_per_s
+    print(f"[measured] csr        : {t_csr*1e3:7.3f} ms  "
+          f"~{t_csr*bw/m.nnz:6.2f} B/nnz moved at STREAM bw")
+    print(f"[measured] matrix_free: {t_mf*1e3:7.3f} ms  "
+          f"~{t_mf*bw/m.nnz:6.2f} B/nnz moved at STREAM bw  "
+          f"({t_csr/t_mf:.2f}x)")
+    err = float(jnp.max(jnp.abs(plan_mf(x) - plan_csr(x))))
+    print(f"[parity] max |diff| vs csr plan = {err:.2e}")
+
+    # --- 4. ground state through the matrix-free plan ----------------------
+    t0 = time.perf_counter()
+    res = lanczos(plan_mf.spmv, m.shape[0], m=args.lanczos_steps,
+                  dtype=jnp.float32)
+    dt = time.perf_counter() - t0
+    print(f"[lanczos] E0={res.eigenvalues[0]:.6f} "
+          f"({res.n_spmv} matrix-free SpMVs, {dt:.2f}s; "
+          f"continuum ground state -> 3*pi^2/(nx+1)^2 per unit h^2)")
+
+
+if __name__ == "__main__":
+    main()

@@ -75,6 +75,9 @@ class MatrixSpec:
         convert_kwargs: per-format ``formats.convert`` overrides, e.g.
             ``{"bsr": {"block_shape": (4, 64)}}`` — merged over the sweep's
             defaults (the SELL geometry above, (8,128) BSR blocks).
+        matrix_free: the workload's pattern is diagonal-structured enough
+            for ``formats.MatrixFreeOperator`` (generated indices, PR10);
+            the matrix-free sweep and parity suite iterate these specs.
     """
 
     name: str
@@ -85,6 +88,7 @@ class MatrixSpec:
     sell_C: int = 8
     sell_sigma: int | None = None
     convert_kwargs: dict = field(default_factory=dict)
+    matrix_free: bool = False
 
     def sell_kwargs(self) -> dict:
         return {"C": self.sell_C, "sigma": self.sell_sigma}
@@ -127,6 +131,24 @@ def build(name: str) -> CSR:
 
 def clear_cache() -> None:
     _BUILD_CACHE.clear()
+
+
+def matrix_free_names() -> list[str]:
+    """Workloads flagged matrix-free-eligible, in registration order."""
+    return [s.name for s in _REGISTRY.values() if s.matrix_free]
+
+
+def matrix_free_operator(name: str, max_diags: int = 256):
+    """The (cached) ``MatrixFreeOperator`` descriptor of an eligible
+    workload; raises ``ValueError`` for specs not flagged ``matrix_free``."""
+    from .formats import detect_matrix_free
+    if not get(name).matrix_free:
+        raise ValueError(f"corpus matrix {name!r} is not matrix-free-eligible")
+    op = detect_matrix_free(build(name), max_diags=max_diags)
+    if op is None:
+        raise ValueError(f"corpus matrix {name!r} is flagged matrix_free but "
+                         "its pattern did not detect as structured")
+    return op
 
 
 # ---------------------------------------------------------------------------
@@ -189,7 +211,9 @@ def corpus_stats(m: CSR, C: int = 8,
 def stats(name: str) -> dict:
     """Structural statistics of a registered workload (builds if needed)."""
     spec = get(name)
-    return corpus_stats(build(name), C=spec.sell_C, sigma=spec.sell_sigma)
+    s = corpus_stats(build(name), C=spec.sell_C, sigma=spec.sell_sigma)
+    s["matrix_free_eligible"] = spec.matrix_free
+    return s
 
 
 # ---------------------------------------------------------------------------
@@ -201,6 +225,7 @@ register(MatrixSpec(
     family="physics",
     description="exact Holstein-Hubbard Hamiltonian, L=4 chain (paper Sec. 4.2)",
     build=lambda: holstein_hubbard_exact(HolsteinHubbardParams()),
+    matrix_free=True,  # phonon-rule diagonals generate; hoppings stored
 ))
 
 register(MatrixSpec(
@@ -217,6 +242,7 @@ register(MatrixSpec(
     description="5-point stencil on a 48x48 grid (narrow constant band)",
     build=lambda: laplacian_2d(48, 48),
     formats=BASE_FORMATS + ("dia",),
+    matrix_free=True,  # all 5 diagonals constant + periodic: fully generated
 ))
 
 register(MatrixSpec(
@@ -225,6 +251,7 @@ register(MatrixSpec(
     description="7-point stencil on a 13^3 grid (plane-wide bandwidth)",
     build=lambda: laplacian_3d(13, 13, 13),
     formats=BASE_FORMATS + ("dia",),
+    matrix_free=True,  # all 7 diagonals constant + periodic: fully generated
 ))
 
 register(MatrixSpec(
@@ -233,6 +260,7 @@ register(MatrixSpec(
     description="half-bandwidth 8, 90% occupied: DIA's home regime",
     build=lambda: random_banded(2048, 8, 0.9, seed=1),
     formats=BASE_FORMATS + ("dia",),
+    matrix_free=True,  # random values: stored lanes, but zero index bytes
 ))
 
 register(MatrixSpec(
@@ -241,6 +269,7 @@ register(MatrixSpec(
     description="half-bandwidth 48, 25% occupied: band too sparse for DIA",
     build=lambda: random_banded(2048, 48, 0.25, seed=2),
     formats=BASE_FORMATS + ("dia",),
+    matrix_free=True,  # stored lanes at DIA-like occupancy, no index stream
 ))
 
 register(MatrixSpec(
@@ -282,6 +311,7 @@ register(MatrixSpec(
                 "symmetric header) — exercises the .mtx load path",
     build=lambda: mio.load_matrix("demo_lap2d_24"),
     formats=("csr", "ell", "jds", "sell", "dia"),
+    matrix_free=True,  # a Laplacian off disk still detects as generated
 ))
 
 register(MatrixSpec(
@@ -291,4 +321,5 @@ register(MatrixSpec(
                 "fallback seeded from the name (core.io.synthetic_fallback)",
     build=lambda: mio.load_matrix("external_band_1024", fallback_n=1024),
     formats=BASE_FORMATS + ("dia",),
+    matrix_free=True,  # banded fallback: stored lanes, generated indices
 ))

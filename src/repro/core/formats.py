@@ -174,6 +174,12 @@ def value_dtype_name(dtype) -> str:
 
 def container_values(obj) -> Array:
     """The stored value array of any container (val / vals / blocks / data)."""
+    if isinstance(obj, MatrixFreeOperator):
+        if obj.data is None:
+            raise TypeError(
+                "MatrixFreeOperator with fully generated values stores no "
+                "value array")
+        return obj.data
     for attr in ("val", "vals", "blocks", "data"):
         if hasattr(obj, attr):
             return getattr(obj, attr)
@@ -184,6 +190,8 @@ def container_value_dtype(obj) -> str:
     """Canonical value-dtype name of a container (hybrid: the SELL part)."""
     if isinstance(obj, HybridDIA):
         obj = obj.rest
+    if isinstance(obj, MatrixFreeOperator):
+        return obj.value_dtype
     return value_dtype_name(np.asarray(container_values(obj)).dtype)
 
 
@@ -296,6 +304,18 @@ def _require_unquantized(obj, where: str):
             "the target format's own group layout")
 
 
+def _require_materialized(obj, where: str):
+    """Refuse ``MatrixFreeOperator`` sources in structural conversions: the
+    operator carries a pattern *descriptor*, not index arrays, so there is
+    nothing for a repacking converter to consume.  ``materialize(op)`` is
+    the one sanctioned escape hatch back to explicit-index CSR."""
+    if isinstance(obj, MatrixFreeOperator):
+        raise TypeError(
+            f"{where}: source is a MatrixFreeOperator (a pattern descriptor, "
+            "not materialized index arrays) -- call materialize(op) to get "
+            "an explicit CSR first")
+
+
 def with_value_dtype(obj, value_dtype: str):
     """A copy of ``obj`` storing its values in ``value_dtype``.
 
@@ -312,6 +332,16 @@ def with_value_dtype(obj, value_dtype: str):
     if isinstance(obj, HybridDIA):
         return HybridDIA(with_value_dtype(obj.dia, value_dtype),
                          with_value_dtype(obj.rest, value_dtype), obj.shape)
+    if isinstance(obj, MatrixFreeOperator):
+        if value_dtype in _QMAX:
+            raise TypeError(
+                "with_value_dtype: MatrixFreeOperator stores generated values "
+                f"as exact scalars; quantized storage ({value_dtype!r}) has no "
+                "per-group scale home -- materialize() first and quantize the "
+                "explicit CSR instead")
+        data = (obj.data if obj.data is None
+                else _as_np(obj.data).astype(VALUE_DTYPES[value_dtype]))
+        return dataclasses.replace(obj, data=data, value_dtype=value_dtype)
     if getattr(obj, "scale", None) is not None:
         obj = dequantize(obj)  # re-quantize from the dequantized values
     v = np.asarray(container_values(obj))
@@ -438,6 +468,7 @@ class ELL:
 
     @staticmethod
     def from_csr(m: CSR, width: int | None = None, pad_to: int = 1) -> "ELL":
+        _require_materialized(m, "ELL.from_csr")
         _require_unquantized(m, "ELL.from_csr")
         lens = m.row_lengths()
         w = int(lens.max()) if lens.size else 0
@@ -502,6 +533,7 @@ class JDS:
 
     @staticmethod
     def from_csr(m: CSR) -> "JDS":
+        _require_materialized(m, "JDS.from_csr")
         _require_unquantized(m, "JDS.from_csr")
         lens = m.row_lengths()
         perm = np.argsort(-lens, kind="stable").astype(np.int32)
@@ -574,6 +606,7 @@ class SELL:
     @staticmethod
     def from_csr(m: CSR, C: int = 8, sigma: int | None = None, sort_cols: bool = False,
                  pad_width_to: int = 1) -> "SELL":
+        _require_materialized(m, "SELL.from_csr")
         _require_unquantized(m, "SELL.from_csr")
         n = m.n_rows
         # sigma=None -> the repo-wide default window (capped at n; pass
@@ -753,6 +786,7 @@ class DIA:
         stencil patterns); ``max_diags`` guards against accidentally
         materializing thousands of near-empty diagonals.
         """
+        _require_materialized(m, "DIA.from_csr")
         _require_unquantized(m, "DIA.from_csr")
         coo = m.to_coo()
         rows = _as_np(coo.rows).astype(np.int64)
@@ -803,6 +837,7 @@ def split_dia(m: CSR, min_occupancy: float = 0.5, max_diags: int = 16,
     ``min_occupancy`` is the fraction of the diagonal's full length that must
     be populated for it to be promoted to dense-diagonal storage.
     """
+    _require_materialized(m, "split_dia")
     _require_unquantized(m, "split_dia")
     n, ncols = m.shape
     coo = m.to_coo()
@@ -832,10 +867,221 @@ def split_dia(m: CSR, min_occupancy: float = 0.5, max_diags: int = 16,
 
 
 # ---------------------------------------------------------------------------
+# matrix-free generated operators  (no index arrays at all)
+# ---------------------------------------------------------------------------
+
+
+def _divisors(n: int) -> list[int]:
+    """Ascending divisors of ``n`` (n <= a few thousand in this repo)."""
+    small = [d for d in range(1, int(n ** 0.5) + 1) if n % d == 0]
+    return sorted({*small, *(n // d for d in small)})
+
+
+def _periodic_rule(mask: np.ndarray) -> tuple[int, int, int] | None:
+    """The minimal-period contiguous-run rule generating a populated-row mask.
+
+    Returns ``(p, lo, hi)`` such that ``mask[i] == (lo <= i % p < hi)`` for
+    all rows, with ``p`` the *minimal* period dividing ``len(mask)``, or
+    ``None`` when no single contiguous run per period reproduces the mask
+    (then the diagonal's pattern must be stored, not generated).
+    """
+    n = int(mask.shape[0])
+    if not mask.any():
+        return None
+    for p in _divisors(n):
+        pat = mask[:p]
+        if not np.array_equal(np.tile(pat, n // p), mask):
+            continue
+        idx = np.flatnonzero(pat)
+        lo, hi = int(idx[0]), int(idx[-1]) + 1
+        # a non-contiguous minimal pattern stays non-contiguous in every
+        # larger divisor (they are tiles of it) -- no point continuing
+        return (p, lo, hi) if hi - lo == len(idx) else None
+    return None
+
+
+@dataclass(frozen=True)
+class MatrixFreeOperator:
+    """A structured operator stored as a pattern *descriptor*, not arrays.
+
+    SpMV is bandwidth-bound (paper Sec. 2-3), and for stencil/banded/Holstein
+    patterns the column index of every element is a pure function of its row:
+    ``col = row + offset``, valid when ``lo <= row % period < hi`` (trivial
+    rule ``(1, 0, 1)`` = the whole diagonal).  Kernels regenerate indices
+    in-registers, so the index stream -- 4-8 B/nnz under CSR/ELL/SELL -- and,
+    for constant diagonals, the value stream cost *zero* memory traffic.
+
+    Per diagonal ``k`` (ascending ``offsets``):
+
+    * ``gen_values[k]`` is a float -> fully generated: every rule-valid row
+      holds that constant; nothing streamed.
+    * ``gen_values[k]`` is None -> stored: the diagonal's values live in the
+      next row of ``data`` (DIA-style dense ``(n_rows,)`` lane, zeros where
+      unpopulated), with the trivial always-valid rule.
+
+    ``data`` is the only pytree leaf (None when every diagonal is generated);
+    the descriptor tuples are static aux data, so they hash into jit caches
+    and the TuneDB signature.
+    """
+
+    data: Array  # (n_stored, n_rows) float, or None when all generated
+    shape: tuple[int, int]
+    offsets: tuple[int, ...]      # all populated diagonals, ascending
+    periods: tuple[int, ...]      # per-diagonal validity period p
+    los: tuple[int, ...]          # rule: lo <= row % p < hi
+    his: tuple[int, ...]
+    gen_values: tuple  # per-diagonal generated constant, or None = stored
+    nnz: int
+    stored_nnz: int               # nonzeros living in ``data``
+    value_dtype: str              # canonical storage-precision name
+
+    _static = ("shape", "offsets", "periods", "los", "his", "gen_values",
+               "nnz", "stored_nnz", "value_dtype")
+
+    @property
+    def n_diags(self) -> int:
+        return len(self.offsets)
+
+    @property
+    def n_stored(self) -> int:
+        return sum(1 for g in self.gen_values if g is None)
+
+    @property
+    def n_generated(self) -> int:
+        return self.n_diags - self.n_stored
+
+    @property
+    def gen_nnz(self) -> int:
+        """Generated (zero-byte) elements: rule-valid rows per gen diagonal."""
+        n = self.shape[0]
+        return sum((n // p) * (hi - lo)
+                   for p, lo, hi, g in zip(self.periods, self.los, self.his,
+                                           self.gen_values) if g is not None)
+
+    @staticmethod
+    def from_csr(m: "CSR", max_diags: int = 256) -> "MatrixFreeOperator":
+        """Detect the generated-diagonal structure of ``m`` exactly.
+
+        A diagonal is *generated* when its values are all bitwise equal, its
+        rows are duplicate-free and its populated-row mask is one contiguous
+        run per minimal period dividing n_rows (stencil interiors, banded
+        truncation at ``p = n`` included).  Everything else is stored as a
+        dense DIA-style lane.  Raises ``ValueError`` on an empty matrix or
+        one spread over more than ``max_diags`` diagonals -- matrix-free
+        storage is for diagonal-structured operators only.
+        """
+        _require_unquantized(m, "MatrixFreeOperator.from_csr")
+        n, _ncols = m.shape
+        coo = m.to_coo()
+        rows = _as_np(coo.rows).astype(np.int64)
+        cols = _as_np(coo.cols).astype(np.int64)
+        vals = _as_np(coo.vals)
+        if rows.size == 0:
+            raise ValueError("MatrixFreeOperator.from_csr: empty matrix")
+        offs = cols - rows
+        uniq = np.unique(offs)
+        if len(uniq) > max_diags:
+            raise ValueError(
+                f"matrix has {len(uniq)} populated diagonals > "
+                f"max_diags={max_diags}; matrix-free storage does not apply")
+        offsets, periods, los, his, gen_values = [], [], [], [], []
+        stored = []
+        stored_nnz = 0
+        for off in uniq.tolist():
+            sel = offs == off
+            r, v = rows[sel], vals[sel]
+            rule = None
+            if len(np.unique(r)) == len(r) and np.all(v == v[0]):
+                mask = np.zeros(n, dtype=bool)
+                mask[r] = True
+                rule = _periodic_rule(mask)
+            offsets.append(int(off))
+            if rule is not None:
+                p, lo, hi = rule
+                periods.append(p)
+                los.append(lo)
+                his.append(hi)
+                gen_values.append(float(v[0]))
+            else:
+                periods.append(1)
+                los.append(0)
+                his.append(1)
+                gen_values.append(None)
+                lane = np.zeros(n, dtype=vals.dtype)
+                np.add.at(lane, r, v)
+                stored.append(lane)
+                stored_nnz += int((lane != 0).sum())
+        data = np.stack(stored) if stored else None
+        return MatrixFreeOperator(
+            data=data, shape=m.shape, offsets=tuple(offsets),
+            periods=tuple(periods), los=tuple(los), his=tuple(his),
+            gen_values=tuple(gen_values), nnz=m.nnz, stored_nnz=stored_nnz,
+            value_dtype=value_dtype_name(vals.dtype))
+
+    def to_dense(self) -> np.ndarray:
+        return materialize(self).to_dense()
+
+
+def detect_matrix_free(m: CSR, max_diags: int = 256):
+    """Cached ``MatrixFreeOperator.from_csr``; ``None`` when ``m`` has no
+    affordable diagonal structure (or is quantized).  Never raises -- this is
+    the probe ``perfmodel.select_format`` calls on every auto-format pick."""
+    cache = getattr(m, "_mf_cache", None)
+    if cache is None:
+        cache = {}
+        object.__setattr__(m, "_mf_cache", cache)
+    if max_diags not in cache:
+        try:
+            cache[max_diags] = MatrixFreeOperator.from_csr(m, max_diags=max_diags)
+        except (ValueError, TypeError):
+            cache[max_diags] = None
+    return cache[max_diags]
+
+
+def materialize(op: MatrixFreeOperator) -> CSR:
+    """Expand a ``MatrixFreeOperator`` back to explicit-index CSR.
+
+    The one sanctioned escape hatch for structural converters: generated
+    diagonals are expanded from their rules (boundary-clipped exactly as the
+    kernels' zero-padded reads clip them), stored lanes drop their padding
+    zeros.  Round-trips ``MatrixFreeOperator.from_csr`` bit-exactly on
+    matrices without explicit stored zeros.
+    """
+    if not isinstance(op, MatrixFreeOperator):
+        raise TypeError(f"materialize expects a MatrixFreeOperator, "
+                        f"got {type(op).__name__}")
+    n, ncols = op.shape
+    dtype = VALUE_DTYPES.get(op.value_dtype, np.float32)
+    data = None if op.data is None else _as_np(op.data)
+    rows_l, cols_l, vals_l = [], [], []
+    k_stored = 0
+    for k, off in enumerate(op.offsets):
+        gv = op.gen_values[k]
+        if gv is None:
+            lane = data[k_stored]
+            k_stored += 1
+            r = np.flatnonzero(lane).astype(np.int64)
+            v = lane[r]
+        else:
+            p, lo, hi = op.periods[k], op.los[k], op.his[k]
+            i = np.arange(n, dtype=np.int64)
+            r = i[(i % p >= lo) & (i % p < hi)]
+            v = np.full(len(r), gv, dtype=dtype)
+        keep = (r + off >= 0) & (r + off < ncols)
+        r = r[keep]
+        rows_l.append(r.astype(np.int32))
+        cols_l.append((r + off).astype(np.int32))
+        vals_l.append(np.asarray(v[keep], dtype=dtype))
+    return CSR.from_coo(COO(np.concatenate(rows_l), np.concatenate(cols_l),
+                            np.concatenate(vals_l), op.shape))
+
+
+# ---------------------------------------------------------------------------
 # registry / stats
 # ---------------------------------------------------------------------------
 
-FORMATS = {"csr": CSR, "ell": ELL, "jds": JDS, "sell": SELL, "bsr": BSR, "dia": DIA, "hybrid": HybridDIA}
+FORMATS = {"csr": CSR, "ell": ELL, "jds": JDS, "sell": SELL, "bsr": BSR, "dia": DIA, "hybrid": HybridDIA,
+           "matrix_free": MatrixFreeOperator}
 
 
 def convert(m: CSR, fmt: str, value_dtype: str | None = None, **kw):
@@ -846,6 +1092,11 @@ def convert(m: CSR, fmt: str, value_dtype: str | None = None, **kw):
     as per-diagonal ones); without an explicit ``value_dtype`` the source's
     storage dtype is preserved.
     """
+    if isinstance(m, MatrixFreeOperator) and fmt != "matrix_free":
+        raise TypeError(
+            f"convert: cannot repack a MatrixFreeOperator into {fmt!r} -- it "
+            "carries a pattern descriptor, not index arrays; materialize(op) "
+            "is the escape hatch back to explicit CSR")
     if getattr(m, "scale", None) is not None:
         if value_dtype is None:
             value_dtype = container_value_dtype(m)
@@ -871,6 +1122,10 @@ def _convert(m: CSR, fmt: str, **kw):
         return DIA.from_csr(m, **kw)
     if fmt == "hybrid":
         return split_dia(m, **kw)
+    if fmt == "matrix_free":
+        if isinstance(m, MatrixFreeOperator):
+            return m
+        return MatrixFreeOperator.from_csr(m, **kw)
     raise ValueError(f"unknown format {fmt!r}")
 
 
@@ -909,5 +1164,5 @@ def matrix_stats(m: CSR) -> dict:
     }
 
 
-for _cls in (COO, CSR, ELL, JDS, SELL, BSR, DIA, HybridDIA):
+for _cls in (COO, CSR, ELL, JDS, SELL, BSR, DIA, HybridDIA, MatrixFreeOperator):
     _pytree_dataclass(_cls)

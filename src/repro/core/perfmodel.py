@@ -148,6 +148,18 @@ def balance_dia(am: AccessModel, n_diags: int, occupancy: float = 1.0,
     return per_stored / (occupancy * 2.0)
 
 
+def balance_matrix_free(am: AccessModel, n_stored: int, n_rows: int,
+                        nnz: int) -> float:
+    """Matrix-free generated operator: *zero* index traffic and zero value
+    traffic for generated diagonals -- indices are recomputed from the row
+    id and constant values fold into the instruction stream.  What still
+    moves: the stored DIA-style lanes (``n_stored * n_rows`` values, padding
+    zeros included), x streamed once (stride-1 shifted windows reuse the
+    cached working set across diagonals), and the result read+written."""
+    streamed = am.value_bytes * (n_stored * n_rows + 3 * n_rows)
+    return streamed / (2.0 * max(1, nnz))
+
+
 # paper-calibrated presets -------------------------------------------------
 
 PAPER_FP64 = AccessModel(value_bytes=8, index_bytes=4, line_elems=8,
@@ -169,6 +181,11 @@ def value_bytes_of(fmt_obj) -> int:
 
     if isinstance(fmt_obj, F.HybridDIA):
         fmt_obj = fmt_obj.rest
+    if isinstance(fmt_obj, F.MatrixFreeOperator):
+        # generated-only operators store nothing; byte widths still follow
+        # the declared storage precision (x / y / stored-lane streams)
+        return int(np.dtype(F.VALUE_DTYPES.get(fmt_obj.value_dtype,
+                                               np.float32)).itemsize)
     return int(np.dtype(np.asarray(F.container_values(fmt_obj)).dtype).itemsize)
 
 
@@ -492,6 +509,9 @@ def balance_of(fmt_obj, am: AccessModel | None = None, backend: str = "xla") -> 
         nd = max(1, int(np.asarray(fmt_obj.offsets).shape[0]))
         occ = fmt_obj.nnz / max(1, stored)
         return balance_dia(am, nd, occupancy=max(1e-3, occ))
+    if isinstance(fmt_obj, F.MatrixFreeOperator):
+        return balance_matrix_free(am, fmt_obj.n_stored, fmt_obj.shape[0],
+                                   fmt_obj.nnz)
     if isinstance(fmt_obj, F.HybridDIA):
         n_dia, n_rest = fmt_obj.dia.nnz, fmt_obj.rest.nnz
         total = max(1, n_dia + n_rest)
@@ -522,6 +542,7 @@ EXEC_EFFICIENCY = {
     "tpu": {
         "csr": 0.10, "coo": 0.08, "jds": 0.15, "ell": 0.90,
         "sell": 0.60, "hybrid": 0.50, "dia": 0.80, "bsr": 0.80,
+        "matrix_free": 0.85,
     },
     "cpu": {
         # csr/hybrid recalibrated against the PR9 measured tier on the CI
@@ -530,8 +551,12 @@ EXEC_EFFICIENCY = {
         # charged separately as SELL_FLAT_OVERHEAD on its stream bytes
         # (0.29 / 4.5 ~= 0.065, the implied flat efficiency on powerlaw),
         # so one efficiency entry covers both formulations.
+        # matrix_free calibrated from the PR10 sweep: the shifted-read
+        # chain sustains ~0.8-1.0 of the measured STREAM bandwidth on its
+        # tiny byte stream (indices and generated values never move).
         "csr": 0.08, "coo": 0.05, "jds": 0.085, "ell": 1.00,
         "sell": 0.29, "hybrid": 0.065, "dia": 0.19, "bsr": 0.90,
+        "matrix_free": 0.90,
     },
 }
 
@@ -763,6 +788,21 @@ def select_format(
             balances["dia"] = balance_dia(am, n_diags, occupancy=occ)
             kwargs["dia"] = {}
 
+    # matrix-free: the generated-operator candidate.  Exact (cached)
+    # structure detection gates it; a qualifying operator streams zero
+    # index bytes and zero value bytes for its generated diagonals, so on
+    # stencil/banded rows it undercuts every materialized format.  Stored
+    # lanes must be reasonably occupied (same 20% floor as DIA) or the
+    # dense-lane zeros eat the win.
+    if 0 < n_diags <= max_dia_diags:
+        mf = F.detect_matrix_free(m, max_diags=max_dia_diags)
+        if mf is not None and (
+                mf.n_stored == 0
+                or mf.stored_nnz / (mf.n_stored * m.shape[0]) >= 0.2):
+            balances["matrix_free"] = balance_matrix_free(
+                am, mf.n_stored, m.shape[0], nnz)
+            kwargs["matrix_free"] = {}
+
     # BSR: only when the shape tiles exactly and populated blocks are full
     bm, bn = bsr_block
     if m.shape[0] % bm == 0 and m.shape[1] % bn == 0 and nnz > 0:
@@ -953,6 +993,10 @@ def matrix_stream_bytes(fmt_obj, am: AccessModel | None = None,
     if isinstance(fmt_obj, F.DIA):
         nd, n = np.asarray(fmt_obj.data).shape
         return float(am.value_bytes * nd * n)
+    if isinstance(fmt_obj, F.MatrixFreeOperator):
+        # only the stored DIA-style lanes move; generated diagonals are
+        # zero-byte (index and value both recomputed in-kernel)
+        return float(am.value_bytes * fmt_obj.n_stored * fmt_obj.shape[0])
     if isinstance(fmt_obj, F.HybridDIA):
         return (matrix_stream_bytes(fmt_obj.dia, am)
                 + matrix_stream_bytes(fmt_obj.rest, am, backend))
@@ -1062,14 +1106,24 @@ def select_batch_width(
 
 
 def spmv_streamed_bytes(fmt_obj, am: AccessModel | None = None,
-                        backend: str = "xla") -> float:
+                        backend: str = "xla",
+                        generated_indices: bool = False) -> float:
     """Model-side byte count for a *concrete* converted matrix (used to
     validate predictions against measured/compiled traffic).  ``am=None``
-    derives byte widths from the container's stored value dtype."""
+    derives byte widths from the container's stored value dtype.
+
+    ``generated_indices=True`` is the zero-index-bytes counterfactual: the
+    same container's stream with every index charged at 0 bytes, i.e. what
+    a kernel that recomputes ``col = row + offset`` in-registers would
+    move.  The gap against the default accounting is exactly the traffic a
+    ``MatrixFreeOperator`` deletes (a ``MatrixFreeOperator`` operand
+    already streams zero index bytes either way)."""
     from . import formats as F
 
     if am is None:
         am = access_model_for(fmt_obj)
+    if generated_indices:
+        am = replace(am, index_bytes=0)
     if isinstance(fmt_obj, F.CSR):
         return (am.value_bytes + am.index_bytes + am.invec_bytes_per_access()) * fmt_obj.nnz \
             + 2 * am.value_bytes * fmt_obj.shape[0]
@@ -1094,6 +1148,11 @@ def spmv_streamed_bytes(fmt_obj, am: AccessModel | None = None,
     if isinstance(fmt_obj, F.DIA):
         nd, n = np.asarray(fmt_obj.data).shape
         return am.value_bytes * nd * n + am.value_bytes * n + 2 * am.value_bytes * n
+    if isinstance(fmt_obj, F.MatrixFreeOperator):
+        n = fmt_obj.shape[0]
+        return (am.value_bytes * fmt_obj.n_stored * n   # stored lanes
+                + am.value_bytes * n                    # x streamed once
+                + 2 * am.value_bytes * n)               # y read + written
     if isinstance(fmt_obj, F.HybridDIA):
         return (spmv_streamed_bytes(fmt_obj.dia, am)
                 + spmv_streamed_bytes(fmt_obj.rest, am, backend))

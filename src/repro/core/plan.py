@@ -42,12 +42,14 @@ import jax.numpy as jnp
 from ..kernels import registry as R
 from ..utils.hw import ChipSpec, TPU_V5E
 from . import perfmodel as PM
-from .formats import BSR, COO, CSR, DIA, ELL, JDS, SELL, HybridDIA
+from .formats import (
+    BSR, COO, CSR, DIA, ELL, JDS, SELL, HybridDIA, MatrixFreeOperator)
 from .planconfig import PlanConfig, coerce_config  # noqa: F401  (re-export)
 
 _FMT_NAMES = {
     COO: "coo", CSR: "csr", ELL: "ell", JDS: "jds", SELL: "sell",
     BSR: "bsr", DIA: "dia", HybridDIA: "hybrid",
+    MatrixFreeOperator: "matrix_free",
 }
 
 

@@ -83,6 +83,38 @@ def _sig_round(v):
     return v
 
 
+def _matrix_free_signature(op) -> str:
+    """Sign a MatrixFreeOperator from its descriptor, not a source CSR.
+
+    The descriptor (diagonal set + periodic rules + generated scalars) IS
+    the pattern, so two matrices that detect to the same descriptor share
+    tuning records even when built independently.  Stored-lane payloads
+    are folded in by content hash so value edits re-sign.
+    """
+    cached = getattr(op, "_tune_sig", None)
+    if cached is not None:
+        return cached
+    desc = {
+        "kind": "matrix_free",
+        "shape": list(op.shape),
+        "offsets": list(op.offsets),
+        "periods": list(op.periods),
+        "los": list(op.los),
+        "his": list(op.his),
+        "gen_values": list(op.gen_values),
+        "nnz": op.nnz,
+        "stored_nnz": op.stored_nnz,
+        "value_dtype": op.value_dtype,
+    }
+    h = hashlib.sha1(json.dumps(_sig_round(desc), sort_keys=True).encode())
+    if op.data is not None:
+        import numpy as np
+        h.update(np.ascontiguousarray(np.asarray(op.data)).tobytes())
+    sig = h.hexdigest()[:16]
+    object.__setattr__(op, "_tune_sig", sig)
+    return sig
+
+
 def signature_of(m) -> str | None:
     """Stable pattern signature of a container, or None when it has none.
 
@@ -94,6 +126,8 @@ def signature_of(m) -> str | None:
     """
     from . import formats as F
 
+    if isinstance(m, F.MatrixFreeOperator):
+        return _matrix_free_signature(m)
     if not isinstance(m, (F.CSR, F.COO)):
         src = getattr(m, "_tune_src", None)
         if src is None:

@@ -175,7 +175,8 @@ def _ensure_populated() -> None:
     if _POPULATED:
         return
     _POPULATED = True
-    from . import bsr, coo, csr, dia, ell, hybrid, jds, sell, slab  # noqa: F401
+    from . import (  # noqa: F401
+        bsr, coo, csr, dia, ell, hybrid, jds, matrix_free, sell, slab)
 
 
 # ---------------------------------------------------------------------------
@@ -461,11 +462,18 @@ def table_rows() -> list[dict]:
             # verdict unknown, report "maybe".  Anything else is a probe
             # bug and must surface (probes are contractually never-raise).
             cap = Capability(True, "operand-dependent")
+        cost_name = getattr(e.cost, "__name__", "cost")
         rows.append({
             "format": e.format, "op": e.op, "backend": e.backend,
             "auto": e.auto, "available": cap.ok,
             "reason": cap.reason, "description": e.description,
             "value_dtypes": e.value_dtypes,
+            # the default hook is a closure out of default_cost; a custom
+            # hook reports its own function name
+            "cost": ("roofline" if "default_cost"
+                     in getattr(e.cost, "__qualname__", "") else cost_name),
+            "autotune": (getattr(e.autotune, "__name__", "autotune")
+                         if e.autotune is not None else "-"),
         })
     return rows
 
@@ -473,11 +481,12 @@ def table_rows() -> list[dict]:
 def format_table(markdown: bool = False) -> str:
     rows = table_rows()
     head = ("format", "op", "backend", "auto", "available", "dtypes",
-            "description")
+            "cost", "autotune", "description")
     data = [[r["format"], r["op"], r["backend"],
              "yes" if r["auto"] else "no",
              "yes" if r["available"] else f"no ({r['reason']})",
              ",".join(r["value_dtypes"]),
+             r["cost"], r["autotune"],
              r["description"]] for r in rows]
     widths = [max([len(h)] + [len(str(row[i])) for row in data])
               for i, h in enumerate(head)]

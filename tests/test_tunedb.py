@@ -44,16 +44,25 @@ CHIP = TPU_V5E
 #: tuning tier provably does not move the no-DB selection.  A legitimate
 #: perfmodel recalibration may update these; a tunedb change must not.
 GOLDEN_UNRESTRICTED = {
-    "holstein_exact": "dia", "holstein_surrogate": "hybrid",
-    "laplace2d": "dia", "laplace3d": "dia",
-    "banded_narrow": "dia", "banded_wide": "dia",
+    # dia -> matrix_free on every structured-band row (PR10): the generated
+    # descriptor streams zero index bytes, undercutting DIA's dense lanes
+    "holstein_exact": "matrix_free", "holstein_surrogate": "hybrid",
+    "laplace2d": "matrix_free", "laplace3d": "matrix_free",
+    "banded_narrow": "matrix_free", "banded_wide": "matrix_free",
     # powerlaw: jds -> sell with the PR9 dual-formulation XLA SELL entry
     # (sigma-sorting now reduces streamed bytes under XLA too)
     "powerlaw": "sell", "blocksparse": "bsr",
     "stripe": "ell", "random_uniform": "ell",
-    "mtx_demo_lap": "dia", "mtx_fallback_band": "dia",
+    "mtx_demo_lap": "matrix_free", "mtx_fallback_band": "matrix_free",
 }
-GOLDEN_ALLOWED = dict(GOLDEN_UNRESTRICTED, holstein_exact="ell")
+#: spec.formats never lists matrix_free, so allowed-path picks are the
+#: pre-PR10 materialized winners — pinned to prove the new format only
+#: enters when the caller permits it.
+GOLDEN_ALLOWED = dict(
+    GOLDEN_UNRESTRICTED, holstein_exact="ell",
+    laplace2d="dia", laplace3d="dia", banded_narrow="dia", banded_wide="dia",
+    mtx_demo_lap="dia", mtx_fallback_band="dia",
+)
 
 
 def _db_with(m, candidates, *, chip=CHIP, name="powerlaw"):

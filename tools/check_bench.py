@@ -62,6 +62,9 @@ HIGHER_BETTER_KEYS = frozenset({
     # measured-autotuning tier: how much the warm (DB) pick beats the
     # cold model pick; >= 1.0 by construction when the DB is fresh
     "tuned_speedup_vs_model",
+    # matrix-free tier: generated-operator plan vs the best *measured*
+    # materialized plan on the same matrix
+    "speedup_vs_materialized",
 })
 
 
